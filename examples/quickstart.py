@@ -1,0 +1,50 @@
+"""Quickstart: tune a tensor contraction with LoopTune in ~30 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Build the matmul benchmark C[m,n] = A[m,k] @ B[k,n].
+2. Tune its loop schedule (search policy — no trained checkpoint needed).
+3. Show the schedule the tuner found and the modelled GFLOPS delta.
+4. Lower the tuned schedule onto the Pallas matmul kernel and check it
+   against the jnp oracle.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.core import LoopTuner, LoopNest, matmul_benchmark
+from repro.kernels import ref as REF
+from repro.kernels import set_registry, tuned_matmul
+
+
+def main():
+    bench = matmul_benchmark(192, 128, 256)
+    print("== untuned nest ==")
+    print(LoopNest(bench))
+
+    tuner = LoopTuner(policy="search", backend="tpu", search_budget_s=5.0)
+    entry = tuner.tune(bench)
+
+    print("\n== tuned ==")
+    print(f"actions        : {entry['actions']}")
+    print(f"block (VMEM)   : {entry['block']}")
+    print(f"grid order     : {entry['grid_order']}")
+    print(f"model GFLOPS   : {entry['base_gflops']:.0f} -> {entry['gflops']:.0f} "
+          f"({entry['gflops']/entry['base_gflops']:.1f}x)")
+    print(f"tuning time    : {entry['tune_time_s']:.2f}s")
+
+    # the tuned schedule drives the Pallas kernel's BlockSpecs
+    set_registry(tuner.registry)
+    a = jax.random.normal(jax.random.PRNGKey(0), (192, 128))
+    b = jax.random.normal(jax.random.PRNGKey(1), (128, 256))
+    out = tuned_matmul(a, b)  # interpret mode on CPU
+    err = float(np.abs(np.asarray(out) - np.asarray(REF.matmul_ref(a, b))).max())
+    print(f"\nPallas kernel with tuned BlockSpec: max |err| vs oracle = {err:.2e}")
+    set_registry(None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Serving example: continuous-batching decode over a pool of requests.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Runs the batched serving loop (prefill + jitted single-token serve_step
+with a donated KV cache) for a reduced musicgen-family decoder and reports
+throughput and latency percentiles.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    raise SystemExit(serve_mod.main([
+        "--arch", "musicgen-large",
+        "--requests", "12", "--batch", "4",
+        "--prompt-len", "24", "--gen-len", "16", "--max-len", "64",
+    ]))
+
+
+if __name__ == "__main__":
+    main()

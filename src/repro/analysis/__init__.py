@@ -1,0 +1,5 @@
+from .hlo_parse import loop_corrected_totals, parse_hlo
+from .roofline import RooflineTerms, roofline_from_record, roofline_table
+
+__all__ = ["parse_hlo", "loop_corrected_totals", "RooflineTerms",
+           "roofline_from_record", "roofline_table"]

@@ -1,0 +1,114 @@
+"""Architecture registry + ShapeDtypeStruct input specs for the dry-run.
+
+``get_config(arch_id)`` resolves the 10 assigned architectures;
+``input_specs(cfg, cell)`` builds allocation-free stand-ins for every model
+input of a shape cell (tokens/labels for train, request batch + cache for
+decode) — the same pattern the dry-run lowers with.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    LayerSpec,
+    ModelConfig,
+    MoEConfig,
+    ShapeCell,
+    shapes_for,
+)
+
+from . import (
+    command_r_35b,
+    gemma2_27b,
+    gemma3_12b,
+    jamba_v01_52b,
+    llama32_vision_11b,
+    llama4_scout_17b_a16e,
+    musicgen_large,
+    olmoe_1b_7b,
+    phi3_mini_3_8b,
+    rwkv6_7b,
+)
+
+ARCHS: Dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        phi3_mini_3_8b,
+        command_r_35b,
+        gemma2_27b,
+        gemma3_12b,
+        rwkv6_7b,
+        llama32_vision_11b,
+        jamba_v01_52b,
+        olmoe_1b_7b,
+        llama4_scout_17b_a16e,
+        musicgen_large,
+    )
+}
+
+SHAPES: Dict[str, ShapeCell] = {c.name: c for c in ALL_SHAPES}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _model_inputs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    d: Dict[str, Any] = {}
+    if cfg.frontend == "tokens":
+        d["tokens"] = _sds((batch, seq), jnp.int32)
+    else:
+        d["embeds"] = _sds((batch, seq, cfg.d_model), cfg.dtype)
+    if cfg.n_cross_tokens:
+        d["encoder"] = _sds((batch, cfg.n_cross_tokens, cfg.d_cross), cfg.dtype)
+    return d
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of a (arch x shape) cell.
+
+    Returns a dict whose structure matches the jitted step's kwargs:
+      train   -> {"batch": {tokens/embeds, labels[, encoder]}}
+      prefill -> {"batch": {...}}
+      decode  -> {"batch": one-token inputs, "caches": ..., "cache_len": i32}
+    """
+    from repro.models.transformer import init_cache
+
+    if cell.kind == "train":
+        batch = _model_inputs(cfg, cell.global_batch, cell.seq_len)
+        batch["labels"] = _sds((cell.global_batch, cell.seq_len), jnp.int32)
+        return {"batch": batch}
+    if cell.kind == "prefill":
+        return {"batch": _model_inputs(cfg, cell.global_batch, cell.seq_len)}
+    if cell.kind == "decode":
+        one = _model_inputs(cfg, cell.global_batch, 1)
+        one.pop("encoder", None)  # cross K/V live in the cache at decode time
+        caches = jax.eval_shape(
+            lambda: init_cache(cfg, cell.global_batch, cell.seq_len))
+        return {
+            "batch": one,
+            "caches": caches,
+            "cache_len": _sds((), jnp.int32),
+        }
+    raise ValueError(cell.kind)
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "ALL_SHAPES", "get_config", "input_specs",
+    "shapes_for", "ModelConfig", "MoEConfig", "LayerSpec", "ShapeCell",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+]

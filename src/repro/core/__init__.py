@@ -1,0 +1,51 @@
+"""LoopTune core — the paper's primary contribution.
+
+Loop-nest IR + cursor action space + graph-derived features + normalized
+GFLOPS reward (paper §III), two reward backends (measured CPU / analytical
+TPU-v5e), five RL trainers (§III-D), traditional searches (§V), and the
+framework-facing :class:`LoopTuner` that persists tuned schedules for the
+Pallas kernel layer.
+"""
+from .actions import (
+    Action,
+    CPU_SPLITS,
+    TPU_SPLITS,
+    apply_action,
+    build_action_space,
+    is_legal,
+    legal_mask,
+)
+from .cost_model import TPUAnalyticalBackend
+from .cpu_backend import CPUMeasuredBackend, execute, execute_reference, make_inputs
+from .dataset import (
+    DIMS,
+    matmul_dataset,
+    mixed_ops_dataset,
+    small_dataset,
+    train_test_split,
+)
+from .env import LoopTuneEnv
+from .features import MAX_LOOPS, STATE_DIM, encode, normalize, stride_bin
+from .loop_ir import (
+    Contraction,
+    LoopLevel,
+    LoopNest,
+    TensorSpec,
+    conv2d_benchmark,
+    matmul_benchmark,
+    reduction_benchmark,
+    transpose_benchmark,
+)
+from .registry import ScheduleRegistry, schedule_to_blockspec
+from .rl_common import TrainResult, evaluate_policy, greedy_rollout, load_params
+from .search import (
+    SEARCHES,
+    SearchResult,
+    beam_search,
+    greedy_search,
+    random_search,
+    run_all_searches,
+)
+from .tuner import LoopTuner, make_act_from_checkpoint
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,147 @@
+"""A2C — synchronous advantage actor-critic (the 1-core equivalent of A3C,
+Mnih et al. 2016; DESIGN §2 records the adaptation).
+
+A3C's workers compute gradients asynchronously and ship them to a central
+model; on one core the unbiased synchronous variant (A2C) is the standard
+stand-in: the worker fleet steps in lockstep and a single n-step
+actor-critic update is applied per rollout.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .networks import actor_critic_apply, actor_critic_init
+from .rl_common import TrainResult
+
+
+@dataclass
+class A2CConfig:
+    hidden: Tuple[int, ...] = (256, 256)
+    lr: float = 7e-4
+    gamma: float = 0.99
+    n_envs: int = 8
+    rollout_len: int = 10
+    entropy_coef: float = 0.01
+    value_coef: float = 0.5
+    max_grad_norm: float = 0.5
+    seed: int = 0
+
+
+def make_update_fn(cfg: A2CConfig):
+    def loss_fn(params, batch):
+        s, a, ret, mask = batch
+        logits, value = actor_critic_apply(params, s)
+        logits = jnp.where(mask, logits, -1e9)
+        logp_all = jax.nn.log_softmax(logits)
+        logp = jnp.take_along_axis(logp_all, a[:, None], 1)[:, 0]
+        adv = jax.lax.stop_gradient(ret - value)
+        pg = -(logp * adv).mean()
+        v_loss = jnp.mean(jnp.square(value - ret))
+        probs = jax.nn.softmax(logits)
+        entropy = -jnp.sum(jnp.where(mask, probs * logp_all, 0.0), -1).mean()
+        return pg + cfg.value_coef * v_loss - cfg.entropy_coef * entropy, pg
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    @jax.jit
+    def update(params, opt, batch):
+        (loss, _), grads = grad_fn(params, batch)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                          for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, cfg.max_grad_norm / (gn + 1e-8))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        m, v, t = opt
+        t = t + 1
+        m = jax.tree.map(lambda m_, g: 0.9 * m_ + 0.1 * g, m, grads)
+        v = jax.tree.map(lambda v_, g: 0.999 * v_ + 0.001 * g * g, v, grads)
+        mh = jax.tree.map(lambda x: x / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda x: x / (1 - 0.999 ** t), v)
+        params = jax.tree.map(
+            lambda p, m_, v_: p - cfg.lr * m_ / (jnp.sqrt(v_) + 1e-8),
+            params, mh, vh)
+        return params, (m, v, t), loss
+
+    return update
+
+
+@jax.jit
+def _policy(params, obs):
+    logits, value = actor_critic_apply(params, obs[None])
+    return logits[0], value[0]
+
+
+def make_act(params_ref):
+    def act(obs: np.ndarray, mask: np.ndarray, greedy: bool = True) -> int:
+        logits, _ = _policy(params_ref[0], jnp.asarray(obs))
+        return int(np.argmax(np.where(mask, np.asarray(logits), -np.inf)))
+
+    return act
+
+
+def train_a2c(env_factory, n_iterations: int = 300,
+              cfg: Optional[A2CConfig] = None) -> TrainResult:
+    cfg = cfg or A2CConfig()
+    rng = np.random.default_rng(cfg.seed)
+    envs = [env_factory(i) for i in range(cfg.n_envs)]
+    env0 = envs[0]
+    params = actor_critic_init(jax.random.PRNGKey(cfg.seed), env0.state_dim,
+                               list(cfg.hidden), env0.n_actions)
+    opt = (jax.tree.map(jnp.zeros_like, params),
+           jax.tree.map(jnp.zeros_like, params),
+           jnp.zeros((), jnp.int32))
+    update = make_update_fn(cfg)
+    params_ref = [params]
+
+    obs = np.stack([e.reset() for e in envs])
+    ep_rewards = np.zeros(cfg.n_envs)
+    finished: list = []
+    rewards_log, times = [], []
+    t_start = time.perf_counter()
+    t_len, n = cfg.rollout_len, cfg.n_envs
+
+    for it in range(n_iterations):
+        S = np.zeros((t_len, n, env0.state_dim), np.float32)
+        A = np.zeros((t_len, n), np.int32)
+        R = np.zeros((t_len, n), np.float32)
+        D = np.zeros((t_len, n), np.float32)
+        V = np.zeros((t_len, n), np.float32)
+        M = np.zeros((t_len, n, env0.n_actions), bool)
+        for t in range(t_len):
+            for i, e in enumerate(envs):
+                mask = e.action_mask()
+                logits, value = _policy(params_ref[0], jnp.asarray(obs[i]))
+                logits = np.asarray(logits, np.float64)
+                logits[~mask] = -np.inf
+                z = logits - logits.max()
+                p = np.exp(z) / np.exp(z).sum()
+                a = int(rng.choice(len(p), p=p))
+                S[t, i], A[t, i], M[t, i], V[t, i] = obs[i], a, mask, float(value)
+                obs2, r, done, _ = e.step(a)
+                R[t, i], D[t, i] = r, float(done)
+                ep_rewards[i] += r
+                if done:
+                    finished.append(ep_rewards[i])
+                    ep_rewards[i] = 0.0
+                    obs2 = e.reset()
+                obs[i] = obs2
+        # n-step returns bootstrapped from the last value
+        ret = np.zeros((t_len, n), np.float32)
+        nxt = np.array([
+            float(_policy(params_ref[0], jnp.asarray(obs[i]))[1])
+            for i in range(n)])
+        for t in reversed(range(t_len)):
+            nxt = R[t] + cfg.gamma * (1.0 - D[t]) * nxt
+            ret[t] = nxt
+        flat = lambda x: x.reshape(t_len * n, *x.shape[2:])
+        batch = tuple(jnp.asarray(flat(x)) for x in (S, A, ret, M))
+        params_ref[0], opt, _ = update(params_ref[0], opt, batch)
+        rewards_log.append(float(np.mean(finished[-20:])) if finished else 0.0)
+        times.append(time.perf_counter() - t_start)
+    return TrainResult("a2c", params_ref[0], make_act(params_ref),
+                       rewards_log, times)

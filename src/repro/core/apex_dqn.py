@@ -1,0 +1,190 @@
+"""APEX_DQN (Horgan et al. 2018) — the paper's winning trainer (§VI-A).
+
+Distributed prioritized experience replay, adapted to one core (DESIGN §2):
+the actor fleet is a set of *interleaved* environment instances, each with
+its own ε from the APEX exploration ladder; experiences land in a shared
+proportional prioritized replay (sum-tree); the learner uses Double-DQN with
+a dueling head and n-step returns; priorities are updated from sampled TD
+errors.  The prioritization logic — the reason APEX wins in the paper — is
+exactly Horgan et al.'s.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .env import LoopTuneEnv
+from .networks import dueling_apply, dueling_init
+from .replay import PrioritizedReplay
+from .rl_common import TrainResult, epsilon_ladder
+
+
+@dataclass
+class ApexConfig:
+    hidden: Tuple[int, ...] = (256, 256)
+    lr: float = 1e-3
+    gamma: float = 0.99
+    n_step: int = 3
+    n_actors: int = 8
+    batch_size: int = 64
+    buffer_size: int = 100_000
+    eps_base: float = 0.4
+    eps_alpha: float = 7.0
+    per_alpha: float = 0.6
+    per_beta0: float = 0.4
+    target_sync_every: int = 100
+    update_every: int = 2  # env steps per learner update
+    warmup_steps: int = 300
+    seed: int = 0
+
+
+def make_update_fn(cfg: ApexConfig):
+    def q_loss(params, target_params, batch, weights):
+        s, a, r, s2, done, mask2, disc = batch
+        q_sa = jnp.take_along_axis(dueling_apply(params, s), a[:, None], 1)[:, 0]
+        q2_online = jnp.where(mask2, dueling_apply(params, s2), -jnp.inf)
+        a2 = jnp.argmax(q2_online, axis=1)
+        q2 = jnp.take_along_axis(dueling_apply(target_params, s2), a2[:, None], 1)[:, 0]
+        target = r + disc * (1.0 - done) * q2
+        td = q_sa - jax.lax.stop_gradient(target)
+        loss = jnp.where(jnp.abs(td) < 1.0, 0.5 * td * td, jnp.abs(td) - 0.5)
+        return jnp.mean(weights * loss), td
+
+    grad_fn = jax.value_and_grad(q_loss, has_aux=True)
+
+    @jax.jit
+    def update(params, target_params, opt, batch, weights):
+        (loss, td), grads = grad_fn(params, target_params, batch, weights)
+        m, v, t = opt
+        t = t + 1
+        m = jax.tree.map(lambda m_, g: 0.9 * m_ + 0.1 * g, m, grads)
+        v = jax.tree.map(lambda v_, g: 0.999 * v_ + 0.001 * g * g, v, grads)
+        mh = jax.tree.map(lambda x: x / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda x: x / (1 - 0.999 ** t), v)
+        params = jax.tree.map(
+            lambda p, m_, v_: p - cfg.lr * m_ / (jnp.sqrt(v_) + 1e-8),
+            params, mh, vh)
+        return params, (m, v, t), loss, td
+
+    return update
+
+
+@jax.jit
+def _q_values(params, obs):
+    return dueling_apply(params, obs[None])[0]
+
+
+def make_act(params_ref):
+    def act(obs: np.ndarray, mask: np.ndarray, greedy: bool = True) -> int:
+        q = np.asarray(_q_values(params_ref[0], jnp.asarray(obs)))
+        return int(np.argmax(np.where(mask, q, -np.inf)))
+
+    return act
+
+
+class _Actor:
+    """One interleaved actor: owns an env instance, an ε, and an n-step
+    accumulator; feeds the shared prioritized replay."""
+
+    def __init__(self, env: LoopTuneEnv, eps: float, gamma: float, n_step: int,
+                 rng: np.random.Generator):
+        self.env = env
+        self.eps = eps
+        self.gamma = gamma
+        self.n_step = n_step
+        self.rng = rng
+        self.obs = env.reset()
+        self.pending: List[Tuple] = []  # (s, a, r)
+        self.ep_reward = 0.0
+        self.finished_rewards: List[float] = []
+
+    def _flush(self, buf: PrioritizedReplay, s2, done, mask2, flush_all):
+        """Emit n-step transitions from the pending window."""
+        while self.pending and (len(self.pending) >= self.n_step or flush_all):
+            ret, disc = 0.0, 1.0
+            for (_, _, r_i) in self.pending[: self.n_step]:
+                ret += disc * r_i
+                disc *= self.gamma
+            s0, a0, _ = self.pending[0]
+            buf.add(s0, a0, ret, s2, done, mask2=mask2, discount=disc)
+            self.pending.pop(0)
+            if not flush_all:
+                break
+
+    def step(self, params_ref, buf: PrioritizedReplay) -> None:
+        mask = self.env.action_mask()
+        if self.rng.random() < self.eps:
+            a = int(self.rng.choice(np.flatnonzero(mask)))
+        else:
+            q = np.asarray(_q_values(params_ref[0], jnp.asarray(self.obs)))
+            a = int(np.argmax(np.where(mask, q, -np.inf)))
+        obs2, r, done, _ = self.env.step(a)
+        mask2 = self.env.action_mask()
+        self.pending.append((self.obs, a, r))
+        self.ep_reward += r
+        self._flush(buf, obs2, done, mask2, flush_all=done)
+        self.obs = obs2
+        if done:
+            self.finished_rewards.append(self.ep_reward)
+            self.ep_reward = 0.0
+            self.obs = self.env.reset()
+
+
+def train_apex(
+    env_factory,
+    n_iterations: int = 300,
+    cfg: Optional[ApexConfig] = None,
+    steps_per_iteration: int = 10,
+) -> TrainResult:
+    """``env_factory(actor_idx) -> LoopTuneEnv``.  One iteration ~ one episode
+    per actor (paper: episode of 10 actions, then a net update)."""
+    cfg = cfg or ApexConfig()
+    key = jax.random.PRNGKey(cfg.seed)
+    env0 = env_factory(0)
+    params = dueling_init(key, env0.state_dim, list(cfg.hidden), env0.n_actions)
+    target = jax.tree.map(jnp.copy, params)
+    opt = (jax.tree.map(jnp.zeros_like, params),
+           jax.tree.map(jnp.zeros_like, params),
+           jnp.zeros((), jnp.int32))
+    buf = PrioritizedReplay(cfg.buffer_size, env0.state_dim,
+                            alpha=cfg.per_alpha, beta0=cfg.per_beta0)
+    update = make_update_fn(cfg)
+    params_ref = [params]
+
+    eps = epsilon_ladder(cfg.n_actors, cfg.eps_base, cfg.eps_alpha)
+    actors = [
+        _Actor(env_factory(i) if i else env0, float(eps[i]), cfg.gamma,
+               cfg.n_step, np.random.default_rng(cfg.seed * 1000 + i))
+        for i in range(cfg.n_actors)
+    ]
+
+    rewards, times = [], []
+    total_steps, updates = 0, 0
+    t_start = time.perf_counter()
+    rng = np.random.default_rng(cfg.seed + 999)
+    for it in range(n_iterations):
+        for _ in range(steps_per_iteration):
+            for actor in actors:
+                actor.step(params_ref, buf)
+                total_steps += 1
+                if (buf.size >= cfg.warmup_steps
+                        and total_steps % cfg.update_every == 0):
+                    (s, a, r, s2, d, m2, disc, idx), w = buf.sample(
+                        cfg.batch_size, rng)
+                    params_ref[0], opt, loss, td = update(
+                        params_ref[0], target, opt,
+                        (s, a, r, s2, d, m2, disc), jnp.asarray(w))
+                    buf.update_priorities(idx, np.asarray(td))
+                    updates += 1
+                    if updates % cfg.target_sync_every == 0:
+                        target = jax.tree.map(jnp.copy, params_ref[0])
+        recent = [r for a_ in actors for r in a_.finished_rewards[-5:]]
+        rewards.append(float(np.mean(recent)) if recent else 0.0)
+        times.append(time.perf_counter() - t_start)
+    return TrainResult("apex_dqn", params_ref[0], make_act(params_ref),
+                       rewards, times, extra={"updates": updates})

@@ -1,0 +1,155 @@
+"""DQN (Mnih et al. 2013) with Double-DQN targets — pure JAX.
+
+The paper's baseline "DQN" trainer: uniform replay, ε-greedy single actor,
+target network, Huber loss.  APEX_DQN (the paper's winner) extends this with
+prioritized replay, n-step returns and an actor fleet — see ``apex_dqn.py``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .env import LoopTuneEnv
+from .networks import mlp_apply, mlp_init
+from .replay import ReplayBuffer
+from .rl_common import TrainResult
+
+
+@dataclass
+class DQNConfig:
+    hidden: Tuple[int, ...] = (256, 256)
+    lr: float = 1e-3
+    gamma: float = 0.99
+    batch_size: int = 64
+    buffer_size: int = 50_000
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 5_000
+    target_sync_every: int = 200  # learner updates between target syncs
+    update_every: int = 1  # env steps per learner update
+    warmup_steps: int = 200
+    double: bool = True
+    seed: int = 0
+
+
+def make_update_fn(cfg: DQNConfig):
+    """Jitted Q-learning update; returns (loss, td_errors, new_params, new_opt)."""
+
+    def q_loss(params, target_params, batch, weights):
+        s, a, r, s2, done, mask2, disc = batch
+        q = mlp_apply(params, s)
+        q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+        q2_online = mlp_apply(params, s2)
+        q2_target = mlp_apply(target_params, s2)
+        q2_online = jnp.where(mask2, q2_online, -jnp.inf)
+        if cfg.double:
+            a2 = jnp.argmax(q2_online, axis=1)
+            q2 = jnp.take_along_axis(q2_target, a2[:, None], axis=1)[:, 0]
+        else:
+            q2 = jnp.max(jnp.where(mask2, q2_target, -jnp.inf), axis=1)
+        target = r + disc * (1.0 - done) * q2
+        td = q_sa - jax.lax.stop_gradient(target)
+        # Huber
+        loss = jnp.where(jnp.abs(td) < 1.0, 0.5 * td * td, jnp.abs(td) - 0.5)
+        return jnp.mean(weights * loss), td
+
+    grad_fn = jax.value_and_grad(q_loss, has_aux=True)
+
+    @jax.jit
+    def update(params, target_params, opt, batch, weights):
+        (loss, td), grads = grad_fn(params, target_params, batch, weights)
+        # Adam
+        m, v, t = opt
+        t = t + 1
+        m = jax.tree.map(lambda m_, g: 0.9 * m_ + 0.1 * g, m, grads)
+        v = jax.tree.map(lambda v_, g: 0.999 * v_ + 0.001 * g * g, v, grads)
+        mh = jax.tree.map(lambda x: x / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda x: x / (1 - 0.999 ** t), v)
+        params = jax.tree.map(
+            lambda p, m_, v_: p - cfg.lr * m_ / (jnp.sqrt(v_) + 1e-8),
+            params, mh, vh)
+        return params, (m, v, t), loss, td
+
+    return update
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return (z, jax.tree.map(jnp.copy, z), jnp.zeros((), jnp.int32))
+
+
+@partial(jax.jit, static_argnums=())
+def _q_values(params, obs):
+    return mlp_apply(params, obs[None])[0]
+
+
+def make_act(params_ref):
+    """Greedy act() over a mutable params holder (list of one element)."""
+
+    def act(obs: np.ndarray, mask: np.ndarray, greedy: bool = True) -> int:
+        q = np.asarray(_q_values(params_ref[0], jnp.asarray(obs)))
+        q = np.where(mask, q, -np.inf)
+        return int(np.argmax(q))
+
+    return act
+
+
+def train_dqn(
+    env: LoopTuneEnv,
+    n_iterations: int = 300,
+    cfg: Optional[DQNConfig] = None,
+    log_every: int = 10,
+) -> TrainResult:
+    """One iteration = one episode (paper: 'the optimizer applies the episode
+    of 10 actions and updates the neural network')."""
+    cfg = cfg or DQNConfig()
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    params = mlp_init(key, [env.state_dim, *cfg.hidden, env.n_actions])
+    target = jax.tree.map(jnp.copy, params)
+    opt = adam_init(params)
+    buf = ReplayBuffer(cfg.buffer_size, env.state_dim)
+    update = make_update_fn(cfg)
+    params_ref = [params]
+
+    rewards, times = [], []
+    total_steps, updates = 0, 0
+    t_start = time.perf_counter()
+    for it in range(n_iterations):
+        obs = env.reset()
+        ep_reward = 0.0
+        for _ in range(env.episode_len):
+            eps = cfg.eps_end + (cfg.eps_start - cfg.eps_end) * max(
+                0.0, 1.0 - total_steps / cfg.eps_decay_steps)
+            mask = env.action_mask()
+            if rng.random() < eps:
+                a = int(rng.choice(np.flatnonzero(mask)))
+            else:
+                q = np.asarray(_q_values(params_ref[0], jnp.asarray(obs)))
+                a = int(np.argmax(np.where(mask, q, -np.inf)))
+            obs2, r, done, _ = env.step(a)
+            buf.add(obs, a, r, obs2, done, mask2=env.action_mask(),
+                    discount=cfg.gamma)
+            obs = obs2
+            ep_reward += r
+            total_steps += 1
+            if buf.size >= cfg.warmup_steps and total_steps % cfg.update_every == 0:
+                batch = buf.sample(cfg.batch_size, rng)
+                s, a_, r_, s2, d_, m2, disc, _ = batch
+                params_ref[0], opt, loss, _ = update(
+                    params_ref[0], target, opt,
+                    (s, a_, r_, s2, d_, m2, disc),
+                    jnp.ones((cfg.batch_size,), jnp.float32))
+                updates += 1
+                if updates % cfg.target_sync_every == 0:
+                    target = jax.tree.map(jnp.copy, params_ref[0])
+        rewards.append(ep_reward)
+        times.append(time.perf_counter() - t_start)
+    return TrainResult("dqn", params_ref[0], make_act(params_ref),
+                       rewards, times)

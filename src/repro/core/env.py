@@ -1,0 +1,113 @@
+"""Gym-like RL environment for LoopTune (paper Fig. 2).
+
+``reset()`` annotates the first loop with the agent cursor; ``step(a)``
+applies an action, re-evaluates the nest on the reward backend only when the
+structure changed, and returns the paper's normalized reward::
+
+    reward = (GFLOPS(S') - GFLOPS(S)) / GFLOPS_peak
+
+Episodes are fixed length (paper: 10 actions, implicit stop); structure
+evaluations are cached by canonical schedule key so searches and replayed
+states never re-measure.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .actions import Action, apply_action, build_action_space, legal_mask
+from .features import STATE_DIM, encode, normalize
+from .loop_ir import Contraction, LoopNest
+
+DEFAULT_EPISODE_LEN = 10
+
+
+class LoopTuneEnv:
+    def __init__(
+        self,
+        benchmarks: Sequence[Contraction],
+        backend,
+        actions: Optional[Sequence[Action]] = None,
+        episode_len: int = DEFAULT_EPISODE_LEN,
+        seed: int = 0,
+        cache_size: int = 200_000,
+    ):
+        self.benchmarks = list(benchmarks)
+        self.backend = backend
+        self.actions = list(actions) if actions is not None else build_action_space()
+        self.episode_len = episode_len
+        self.rng = np.random.default_rng(seed)
+        self._cache: Dict[Tuple, float] = {}
+        self._cache_size = cache_size
+        self.peak = backend.peak()
+        self.nest: Optional[LoopNest] = None
+        self.t = 0
+        self._gflops = 0.0
+        self.initial_gflops = 0.0
+
+    # -- evaluation with caching ----------------------------------------------
+
+    def gflops(self, nest: LoopNest) -> float:
+        key = nest.structure_key()
+        hit = self._cache.get(key)
+        if hit is None:
+            if len(self._cache) >= self._cache_size:
+                self._cache.clear()
+            hit = self.backend.evaluate(nest)
+            self._cache[key] = hit
+        return hit
+
+    # -- gym API ----------------------------------------------------------------
+
+    @property
+    def n_actions(self) -> int:
+        return len(self.actions)
+
+    @property
+    def state_dim(self) -> int:
+        return STATE_DIM
+
+    def reset(self, benchmark_idx: Optional[int] = None) -> np.ndarray:
+        if benchmark_idx is None:
+            benchmark_idx = int(self.rng.integers(len(self.benchmarks)))
+        self.nest = LoopNest(self.benchmarks[benchmark_idx])
+        self.t = 0
+        self._gflops = self.gflops(self.nest)
+        self.initial_gflops = self._gflops
+        return self.observe()
+
+    def observe(self) -> np.ndarray:
+        return normalize(encode(self.nest))
+
+    def action_mask(self) -> np.ndarray:
+        return np.asarray(legal_mask(self.nest, self.actions), dtype=bool)
+
+    def step(self, a_idx: int) -> Tuple[np.ndarray, float, bool, dict]:
+        assert self.nest is not None, "call reset() first"
+        action = self.actions[a_idx]
+        changed = apply_action(self.nest, action)
+        reward = 0.0
+        if changed:
+            new_gflops = self.gflops(self.nest)
+            reward = (new_gflops - self._gflops) / self.peak
+            self._gflops = new_gflops
+        self.t += 1
+        done = self.t >= self.episode_len
+        info = {"gflops": self._gflops, "action": action.name}
+        return self.observe(), reward, done, info
+
+    # -- snapshots for tree search -----------------------------------------------
+
+    def snapshot(self) -> Tuple[LoopNest, int, float]:
+        return self.nest.clone(), self.t, self._gflops
+
+    def restore(self, snap: Tuple[LoopNest, int, float]) -> None:
+        nest, t, g = snap
+        self.nest = nest.clone()
+        self.t = t
+        self._gflops = g
+
+    @property
+    def current_gflops(self) -> float:
+        return self._gflops

@@ -1,0 +1,183 @@
+"""IMPALA (Espeholt et al. 2018): V-trace off-policy actor-critic.
+
+Actors run a *stale* copy of the policy (synced every ``actor_sync_every``
+iterations — modelling IMPALA's decoupled actor/learner lag on one core);
+the learner corrects the off-policy-ness with V-trace importance weights.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .networks import actor_critic_apply, actor_critic_init
+from .rl_common import TrainResult
+
+
+@dataclass
+class ImpalaConfig:
+    hidden: Tuple[int, ...] = (256, 256)
+    lr: float = 3e-4
+    gamma: float = 0.99
+    n_envs: int = 8
+    rollout_len: int = 20
+    entropy_coef: float = 0.01
+    value_coef: float = 0.5
+    rho_bar: float = 1.0
+    c_bar: float = 1.0
+    actor_sync_every: int = 4  # iterations of lag between actor & learner
+    max_grad_norm: float = 0.5
+    seed: int = 0
+
+
+def vtrace(behavior_logp, target_logp, rewards, values, dones, bootstrap,
+           gamma, rho_bar, c_bar):
+    """V-trace targets (T, N) — numpy reference implementation."""
+    rho = np.minimum(np.exp(target_logp - behavior_logp), rho_bar)
+    c = np.minimum(np.exp(target_logp - behavior_logp), c_bar)
+    t_len, n = rewards.shape
+    vs = np.zeros((t_len, n), np.float32)
+    acc = np.zeros(n, np.float32)
+    next_values = np.concatenate([values[1:], bootstrap[None]], 0)
+    for t in reversed(range(t_len)):
+        nonterm = 1.0 - dones[t]
+        delta = rho[t] * (rewards[t] + gamma * next_values[t] * nonterm
+                          - values[t])
+        acc = delta + gamma * c[t] * nonterm * acc
+        vs[t] = values[t] + acc
+    vs_next = np.concatenate([vs[1:], bootstrap[None]], 0)
+    pg_adv = rho * (rewards + gamma * vs_next * (1.0 - dones) - values)
+    return vs, pg_adv
+
+
+def make_update_fn(cfg: ImpalaConfig):
+    def loss_fn(params, batch):
+        s, a, vs, pg_adv, mask = batch
+        logits, value = actor_critic_apply(params, s)
+        logits = jnp.where(mask, logits, -1e9)
+        logp_all = jax.nn.log_softmax(logits)
+        logp = jnp.take_along_axis(logp_all, a[:, None], 1)[:, 0]
+        pg = -(logp * pg_adv).mean()
+        v_loss = jnp.mean(jnp.square(value - vs))
+        probs = jax.nn.softmax(logits)
+        entropy = -jnp.sum(jnp.where(mask, probs * logp_all, 0.0), -1).mean()
+        return pg + cfg.value_coef * v_loss - cfg.entropy_coef * entropy, pg
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    @jax.jit
+    def update(params, opt, batch):
+        (loss, _), grads = grad_fn(params, batch)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                          for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, cfg.max_grad_norm / (gn + 1e-8))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        m, v, t = opt
+        t = t + 1
+        m = jax.tree.map(lambda m_, g: 0.9 * m_ + 0.1 * g, m, grads)
+        v = jax.tree.map(lambda v_, g: 0.999 * v_ + 0.001 * g * g, v, grads)
+        mh = jax.tree.map(lambda x: x / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda x: x / (1 - 0.999 ** t), v)
+        params = jax.tree.map(
+            lambda p, m_, v_: p - cfg.lr * m_ / (jnp.sqrt(v_) + 1e-8),
+            params, mh, vh)
+        return params, (m, v, t), loss
+
+    return update
+
+
+@jax.jit
+def _policy(params, obs):
+    logits, value = actor_critic_apply(params, obs[None])
+    return logits[0], value[0]
+
+
+@jax.jit
+def _batch_policy(params, obs):
+    return actor_critic_apply(params, obs)
+
+
+def make_act(params_ref):
+    def act(obs: np.ndarray, mask: np.ndarray, greedy: bool = True) -> int:
+        logits, _ = _policy(params_ref[0], jnp.asarray(obs))
+        return int(np.argmax(np.where(mask, np.asarray(logits), -np.inf)))
+
+    return act
+
+
+def train_impala(env_factory, n_iterations: int = 300,
+                 cfg: Optional[ImpalaConfig] = None) -> TrainResult:
+    cfg = cfg or ImpalaConfig()
+    rng = np.random.default_rng(cfg.seed)
+    envs = [env_factory(i) for i in range(cfg.n_envs)]
+    env0 = envs[0]
+    params = actor_critic_init(jax.random.PRNGKey(cfg.seed), env0.state_dim,
+                               list(cfg.hidden), env0.n_actions)
+    actor_params = jax.tree.map(jnp.copy, params)  # the stale behavior policy
+    opt = (jax.tree.map(jnp.zeros_like, params),
+           jax.tree.map(jnp.zeros_like, params),
+           jnp.zeros((), jnp.int32))
+    update = make_update_fn(cfg)
+    params_ref = [params]
+
+    obs = np.stack([e.reset() for e in envs])
+    ep_rewards = np.zeros(cfg.n_envs)
+    finished: list = []
+    rewards_log, times = [], []
+    t_start = time.perf_counter()
+    t_len, n = cfg.rollout_len, cfg.n_envs
+
+    for it in range(n_iterations):
+        if it % cfg.actor_sync_every == 0:
+            actor_params = jax.tree.map(jnp.copy, params_ref[0])
+        S = np.zeros((t_len, n, env0.state_dim), np.float32)
+        A = np.zeros((t_len, n), np.int32)
+        BLP = np.zeros((t_len, n), np.float32)  # behavior log-probs
+        R = np.zeros((t_len, n), np.float32)
+        D = np.zeros((t_len, n), np.float32)
+        M = np.zeros((t_len, n, env0.n_actions), bool)
+        for t in range(t_len):
+            for i, e in enumerate(envs):
+                mask = e.action_mask()
+                logits, _ = _policy(actor_params, jnp.asarray(obs[i]))
+                logits = np.asarray(logits, np.float64)
+                logits[~mask] = -np.inf
+                z = logits - logits.max()
+                p = np.exp(z) / np.exp(z).sum()
+                a = int(rng.choice(len(p), p=p))
+                S[t, i], A[t, i], M[t, i] = obs[i], a, mask
+                BLP[t, i] = np.log(max(p[a], 1e-12))
+                obs2, r, done, _ = e.step(a)
+                R[t, i], D[t, i] = r, float(done)
+                ep_rewards[i] += r
+                if done:
+                    finished.append(ep_rewards[i])
+                    ep_rewards[i] = 0.0
+                    obs2 = e.reset()
+                obs[i] = obs2
+        # learner: evaluate target policy on the rollout, V-trace correct
+        flatS = S.reshape(t_len * n, -1)
+        logits_t, values_t = _batch_policy(params_ref[0], jnp.asarray(flatS))
+        logits_t = np.array(logits_t).reshape(t_len, n, -1)  # writable copy
+        logits_t[~M] = -np.inf
+        z = logits_t - logits_t.max(-1, keepdims=True)
+        p_t = np.exp(z) / np.exp(z).sum(-1, keepdims=True)
+        tlp = np.log(np.maximum(
+            np.take_along_axis(p_t, A[..., None], -1)[..., 0], 1e-12))
+        values_t = np.asarray(values_t).reshape(t_len, n)
+        boot = np.array([
+            float(_policy(params_ref[0], jnp.asarray(obs[i]))[1])
+            for i in range(n)])
+        vs, pg_adv = vtrace(BLP, tlp.astype(np.float32), R, values_t, D, boot,
+                            cfg.gamma, cfg.rho_bar, cfg.c_bar)
+        flat = lambda x: x.reshape(t_len * n, *x.shape[2:])
+        batch = tuple(jnp.asarray(flat(x)) for x in (S, A, vs, pg_adv, M))
+        params_ref[0], opt, _ = update(params_ref[0], opt, batch)
+        rewards_log.append(float(np.mean(finished[-20:])) if finished else 0.0)
+        times.append(time.perf_counter() - t_start)
+    return TrainResult("impala", params_ref[0], make_act(params_ref),
+                       rewards_log, times)

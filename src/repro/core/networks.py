@@ -1,0 +1,74 @@
+"""Pure-JAX MLP networks for the RL trainers (paper §III-D uses fully
+connected nets over the flattened loop features for every algorithm)."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mlp_init(key, sizes: Sequence[int]) -> List[Dict[str, jax.Array]]:
+    params = []
+    for i in range(len(sizes) - 1):
+        key, k1 = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / sizes[i])
+        params.append(
+            {
+                "w": jax.random.normal(k1, (sizes[i], sizes[i + 1]), jnp.float32)
+                * scale,
+                "b": jnp.zeros((sizes[i + 1],), jnp.float32),
+            }
+        )
+    return params
+
+
+def mlp_apply(params, x: jax.Array) -> jax.Array:
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def dueling_init(key, in_dim: int, hidden: Sequence[int], n_actions: int):
+    """Dueling Q-net: shared trunk + value & advantage heads (used by APEX)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    trunk = mlp_init(k1, [in_dim, *hidden])
+    v_head = mlp_init(k2, [hidden[-1], hidden[-1] // 2, 1])
+    a_head = mlp_init(k3, [hidden[-1], hidden[-1] // 2, n_actions])
+    return {"trunk": trunk, "v": v_head, "a": a_head}
+
+
+def dueling_apply(params, x: jax.Array) -> jax.Array:
+    h = mlp_apply(params["trunk"], x)
+    h = jax.nn.relu(h)
+    v = mlp_apply(params["v"], h)
+    a = mlp_apply(params["a"], h)
+    return v + a - jnp.mean(a, axis=-1, keepdims=True)
+
+
+def actor_critic_init(key, in_dim: int, hidden: Sequence[int], n_actions: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    trunk = mlp_init(k1, [in_dim, *hidden])
+    pi = mlp_init(k2, [hidden[-1], n_actions])
+    v = mlp_init(k3, [hidden[-1], 1])
+    return {"trunk": trunk, "pi": pi, "v": v}
+
+
+def actor_critic_apply(params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    h = mlp_apply(params["trunk"], x)
+    h = jax.nn.relu(h)
+    logits = mlp_apply(params["pi"], h)
+    value = mlp_apply(params["v"], h)[..., 0]
+    return logits, value
+
+
+def masked_argmax(q: np.ndarray, mask: np.ndarray) -> int:
+    q = np.where(mask, q, -np.inf)
+    return int(np.argmax(q))
+
+
+def masked_logits(logits: jax.Array, mask: jax.Array) -> jax.Array:
+    return jnp.where(mask, logits, -1e9)

@@ -1,0 +1,105 @@
+"""Tuned-schedule registry.
+
+The framework's Pallas kernels consult this registry for their BlockSpec
+tiling: schedules found by the RL policy (or searches) are stored keyed by
+``(kernel, m, k, n, dtype)`` and lowered to block shapes + grid order via
+:func:`schedule_to_blockspec`.  Persistence is plain JSON so launch scripts
+can ship tuned tables to every host.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .loop_ir import LoopNest
+
+
+def schedule_to_blockspec(nest: LoopNest, vmem_boundary: Optional[int] = None):
+    """Lower the tuned nest onto Pallas block shapes + grid order.
+
+    The resident suffix (innermost levels fitting VMEM — computed by the
+    analytical backend unless ``vmem_boundary`` is given) becomes the block;
+    the grid iterates the outer levels in schedule order.  Returns
+    ``(block_sizes: {iter: extent}, grid_order: [iter, ...])``.
+    """
+    from .cost_model import TPUAnalyticalBackend, _block_extents
+
+    levels = nest.compute_loops
+    sizes = nest.contraction.iter_sizes
+    b = (
+        vmem_boundary
+        if vmem_boundary is not None
+        else TPUAnalyticalBackend().residency_boundary(nest)
+    )
+    block = _block_extents(levels, b, sizes)
+    grid_order = [levels[i].iterator for i in range(b)]
+    # iterators with no grid level iterate once (whole dim resident)
+    for it in sizes:
+        if it not in grid_order:
+            grid_order.append(it)
+    return block, grid_order
+
+
+class ScheduleRegistry:
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._table: Dict[str, dict] = {}
+        if path and os.path.exists(path):
+            with open(path) as f:
+                self._table = json.load(f)
+
+    @staticmethod
+    def key(kernel: str, dims: Sequence[int], dtype: str = "float32") -> str:
+        return f"{kernel}:{'x'.join(map(str, dims))}:{dtype}"
+
+    def put(
+        self,
+        kernel: str,
+        dims: Sequence[int],
+        gflops: float,
+        actions: List[str],
+        nest: Optional[LoopNest] = None,
+        dtype: str = "float32",
+    ) -> None:
+        entry = {"gflops": gflops, "actions": actions}
+        if nest is not None:
+            block, grid = schedule_to_blockspec(nest)
+            entry["block"] = block
+            entry["grid_order"] = grid
+            entry["levels"] = [
+                (l.iterator, l.count, l.step) for l in nest.loops
+            ]
+        k = self.key(kernel, dims, dtype)
+        if k not in self._table or self._table[k]["gflops"] < gflops:
+            self._table[k] = entry
+
+    def get(
+        self, kernel: str, dims: Sequence[int], dtype: str = "float32"
+    ) -> Optional[dict]:
+        return self._table.get(self.key(kernel, dims, dtype))
+
+    def block_for(
+        self,
+        kernel: str,
+        dims: Sequence[int],
+        default: Dict[str, int],
+        dtype: str = "float32",
+    ) -> Dict[str, int]:
+        entry = self.get(kernel, dims, dtype)
+        if entry and "block" in entry:
+            return dict(entry["block"])
+        return default
+
+    def save(self, path: Optional[str] = None) -> None:
+        path = path or self.path
+        if not path:
+            raise ValueError("no registry path")
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+        with os.fdopen(fd, "w") as f:
+            json.dump(self._table, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)  # atomic
+
+    def __len__(self) -> int:
+        return len(self._table)

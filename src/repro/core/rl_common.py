@@ -1,0 +1,108 @@
+"""Shared RL utilities: policy evaluation, rollout helpers, param I/O.
+
+Every trainer returns a :class:`TrainResult`; ``greedy_rollout`` is the
+paper's *inference phase* (§III): iterate the policy's best action with NO
+backend measurement in the loop — this is what makes tuning take ~a second.
+"""
+from __future__ import annotations
+
+import pickle
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .env import LoopTuneEnv
+from .loop_ir import Contraction, LoopNest
+
+# act(obs, mask, greedy) -> action index
+ActFn = Callable[[np.ndarray, np.ndarray, bool], int]
+
+
+@dataclass
+class TrainResult:
+    algo: str
+    params: Any
+    act: ActFn
+    rewards: List[float] = field(default_factory=list)  # episode_reward_mean / iter
+    times: List[float] = field(default_factory=list)    # wall-clock per iter
+    extra: Dict[str, Any] = field(default_factory=dict)
+
+    def save(self, path: str) -> None:
+        import jax
+
+        with open(path, "wb") as f:
+            pickle.dump(
+                {"algo": self.algo,
+                 "params": jax.tree.map(np.asarray, self.params),
+                 "rewards": self.rewards},
+                f)
+
+
+def load_params(path: str) -> Tuple[str, Any]:
+    with open(path, "rb") as f:
+        d = pickle.load(f)
+    return d["algo"], d["params"]
+
+
+def greedy_rollout(
+    env: LoopTuneEnv,
+    act: ActFn,
+    benchmark_idx: int,
+    steps: Optional[int] = None,
+    measure_final_only: bool = True,
+) -> Tuple[float, List[str], LoopNest]:
+    """Run the policy greedily from the initial nest (the paper's inference
+    phase).  Actions are chosen by the network alone; the backend is queried
+    only to report the final GFLOPS (and for the reward bookkeeping the env
+    does internally).  Returns (best_gflops, action_names, best_nest)."""
+    steps = steps if steps is not None else env.episode_len
+    obs = env.reset(benchmark_idx)
+    best_g = env.current_gflops
+    best_nest = env.nest.clone()
+    names: List[str] = []
+    for _ in range(steps):
+        a = act(obs, env.action_mask(), True)
+        obs, _, done, info = env.step(a)
+        names.append(info["action"])
+        if info["gflops"] > best_g:
+            best_g = info["gflops"]
+            best_nest = env.nest.clone()
+        if done:
+            break
+    return best_g, names, best_nest
+
+
+def evaluate_policy(
+    env: LoopTuneEnv,
+    act: ActFn,
+    benchmark_indices: Sequence[int],
+    steps: Optional[int] = None,
+) -> Dict[str, Any]:
+    """Speedup of the tuned schedule over the untuned nest per benchmark."""
+    speedups, finals, bases, times = [], [], [], []
+    for bi in benchmark_indices:
+        t0 = time.perf_counter()
+        best_g, _, _ = greedy_rollout(env, act, bi, steps)
+        times.append(time.perf_counter() - t0)
+        base = env.initial_gflops
+        speedups.append(best_g / max(base, 1e-9))
+        finals.append(best_g)
+        bases.append(base)
+    return {
+        "speedup_mean": float(np.mean(speedups)),
+        "speedup_geomean": float(np.exp(np.mean(np.log(np.maximum(speedups, 1e-9))))),
+        "speedups": speedups,
+        "final_gflops": finals,
+        "base_gflops": bases,
+        "time_mean_s": float(np.mean(times)),
+    }
+
+
+def epsilon_ladder(n_actors: int, eps_base: float = 0.4, alpha: float = 7.0) -> np.ndarray:
+    """APEX per-actor exploration ladder (Horgan et al. 2018 eq. 1)."""
+    if n_actors == 1:
+        return np.array([eps_base])
+    i = np.arange(n_actors)
+    return eps_base ** (1 + i / (n_actors - 1) * alpha)

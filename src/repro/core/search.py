@@ -1,0 +1,288 @@
+"""Traditional search baselines (paper §V, Figs. 6/8/9/10).
+
+* Greedy with lookahead L   — O(steps * |A|^L) evaluations
+* Beam DFS / BFS width W    — O(W^steps), expansion order differs when the
+                              time budget elapses before the full graph
+* Random search             — uniform random action sequences
+
+All searches share the environment's structure-keyed evaluation cache
+(paper: "we implemented each search with caching to avoid repeating
+evaluations of the same states") and a wall-clock budget.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .actions import Action, apply_action, is_legal
+from .env import LoopTuneEnv
+from .loop_ir import LoopNest
+
+
+@dataclass
+class SearchResult:
+    name: str
+    best_gflops: float
+    base_gflops: float
+    actions: List[str]
+    n_evals: int
+    time_s: float
+    best_nest: Optional[LoopNest] = None
+    # best-so-far after each search step (paper Fig. 10 upper)
+    trace: List[Tuple[float, float]] = field(default_factory=list)  # (t, gflops)
+
+    @property
+    def speedup(self) -> float:
+        return self.best_gflops / max(self.base_gflops, 1e-9)
+
+
+class _Budget:
+    def __init__(self, seconds: float, max_evals: Optional[int] = None):
+        self.t0 = time.perf_counter()
+        self.seconds = seconds
+        self.max_evals = max_evals
+        self.evals = 0
+
+    def spend_eval(self) -> None:
+        self.evals += 1
+
+    def exhausted(self) -> bool:
+        if self.max_evals is not None and self.evals >= self.max_evals:
+            return True
+        return time.perf_counter() - self.t0 > self.seconds
+
+    def elapsed(self) -> float:
+        return time.perf_counter() - self.t0
+
+
+def _eval(env: LoopTuneEnv, nest: LoopNest, budget: _Budget) -> float:
+    key = nest.structure_key()
+    cached = key in env._cache
+    g = env.gflops(nest)
+    if not cached:
+        budget.spend_eval()
+    return g
+
+
+def _children(env: LoopTuneEnv, nest: LoopNest) -> List[Tuple[int, LoopNest]]:
+    out = []
+    for ai, act in enumerate(env.actions):
+        if not is_legal(nest, act):
+            continue
+        child = nest.clone()
+        apply_action(child, act)
+        out.append((ai, child))
+    return out
+
+
+def _mk_result(name, env, base, best_g, best_seq, best_nest, budget, trace):
+    return SearchResult(
+        name=name,
+        best_gflops=best_g,
+        base_gflops=base,
+        actions=[env.actions[a].name for a in best_seq],
+        n_evals=budget.evals,
+        time_s=budget.elapsed(),
+        best_nest=best_nest,
+        trace=trace,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Greedy with lookahead
+# ---------------------------------------------------------------------------
+
+
+def greedy_search(
+    env: LoopTuneEnv,
+    benchmark_idx: int,
+    lookahead: int = 1,
+    steps: int = 10,
+    budget_s: float = 60.0,
+    max_evals: Optional[int] = None,
+) -> SearchResult:
+    env.reset(benchmark_idx)
+    base = env.current_gflops
+    budget = _Budget(budget_s, max_evals)
+    nest = env.nest.clone()
+    cur_g = base
+    best_g, best_nest, best_seq = base, nest.clone(), []
+    seq: List[int] = []
+    trace = [(0.0, base)]
+
+    def expand(n: LoopNest, depth: int) -> Tuple[float, List[int]]:
+        """Best achievable gflops within `depth` more actions (dfs)."""
+        g_here = _eval(env, n, budget)
+        if depth == 0 or budget.exhausted():
+            return g_here, []
+        best, bseq = g_here, []
+        for ai, child in _children(env, n):
+            g_c, s_c = expand(child, depth - 1)
+            if g_c > best:
+                best, bseq = g_c, [ai] + s_c
+            if budget.exhausted():
+                break
+        return best, bseq
+
+    for _ in range(steps):
+        if budget.exhausted():
+            break
+        g_best, sub = expand(nest, lookahead)
+        if not sub or g_best <= cur_g + 1e-12:
+            break  # greedy terminates when no better state within lookahead
+        ai = sub[0]
+        apply_action(nest, env.actions[ai])
+        seq.append(ai)
+        cur_g = _eval(env, nest, budget)
+        if cur_g > best_g:
+            best_g, best_nest, best_seq = cur_g, nest.clone(), list(seq)
+        trace.append((budget.elapsed(), best_g))
+    return _mk_result(f"greedy{lookahead}", env, base, best_g, best_seq,
+                      best_nest, budget, trace)
+
+
+# ---------------------------------------------------------------------------
+# Beam search (DFS / BFS expansion)
+# ---------------------------------------------------------------------------
+
+
+def beam_search(
+    env: LoopTuneEnv,
+    benchmark_idx: int,
+    width: int = 2,
+    depth: int = 10,
+    order: str = "dfs",
+    budget_s: float = 60.0,
+    max_evals: Optional[int] = None,
+) -> SearchResult:
+    env.reset(benchmark_idx)
+    base = env.current_gflops
+    budget = _Budget(budget_s, max_evals)
+    root = env.nest.clone()
+    best_g, best_nest, best_seq = base, root.clone(), []
+    trace = [(0.0, base)]
+    visited: Dict[Tuple, float] = {}
+
+    def ranked_children(n: LoopNest) -> List[Tuple[float, int, LoopNest]]:
+        scored = []
+        for ai, child in _children(env, n):
+            k = child.key()  # cursor-aware: moves reach distinct states
+            g = _eval(env, child, budget)
+            if k in visited:
+                continue  # already expanded this exact (structure, cursor)
+            visited[k] = g
+            scored.append((g, ai, child))
+            if budget.exhausted():
+                break
+        scored.sort(key=lambda t: -t[0])
+        return scored[:width]
+
+    def note(g: float, n: LoopNest, seq: List[int]) -> None:
+        nonlocal best_g, best_nest, best_seq
+        if g > best_g:
+            best_g, best_nest, best_seq = g, n.clone(), list(seq)
+        trace.append((budget.elapsed(), best_g))
+
+    if order == "dfs":
+
+        def dfs(n: LoopNest, seq: List[int], d: int) -> None:
+            if d == 0 or budget.exhausted():
+                return
+            for g, ai, child in ranked_children(n):
+                note(g, child, seq + [ai])
+                dfs(child, seq + [ai], d - 1)
+                if budget.exhausted():
+                    return
+
+        dfs(root, [], depth)
+    else:  # bfs: complete each layer before going deeper
+        frontier: List[Tuple[LoopNest, List[int]]] = [(root, [])]
+        for _ in range(depth):
+            if budget.exhausted() or not frontier:
+                break
+            nxt: List[Tuple[float, LoopNest, List[int]]] = []
+            for n, seq in frontier:
+                for g, ai, child in ranked_children(n):
+                    note(g, child, seq + [ai])
+                    nxt.append((g, child, seq + [ai]))
+                if budget.exhausted():
+                    break
+            nxt.sort(key=lambda t: -t[0])
+            # keep the global top width^2 states to bound the frontier
+            frontier = [(n, s) for _, n, s in nxt[: width * width]]
+    return _mk_result(f"beam{width}{order}", env, base, best_g, best_seq,
+                      best_nest, budget, trace)
+
+
+# ---------------------------------------------------------------------------
+# Random search
+# ---------------------------------------------------------------------------
+
+
+def random_search(
+    env: LoopTuneEnv,
+    benchmark_idx: int,
+    seq_len: int = 10,
+    budget_s: float = 60.0,
+    max_evals: Optional[int] = None,
+    seed: int = 0,
+) -> SearchResult:
+    env.reset(benchmark_idx)
+    base = env.current_gflops
+    budget = _Budget(budget_s, max_evals)
+    rng = np.random.default_rng(seed)
+    root = env.nest.clone()
+    best_g, best_nest, best_seq = base, root.clone(), []
+    trace = [(0.0, base)]
+    while not budget.exhausted():
+        nest = root.clone()
+        seq: List[int] = []
+        for _ in range(seq_len):
+            legal = [ai for ai, a in enumerate(env.actions) if is_legal(nest, a)]
+            if not legal:
+                break
+            ai = int(rng.choice(legal))
+            apply_action(nest, env.actions[ai])
+            seq.append(ai)
+            g = _eval(env, nest, budget)
+            if g > best_g:
+                best_g, best_nest, best_seq = g, nest.clone(), list(seq)
+            if budget.exhausted():
+                break
+        trace.append((budget.elapsed(), best_g))
+    return _mk_result("random", env, base, best_g, best_seq, best_nest,
+                      budget, trace)
+
+
+# ---------------------------------------------------------------------------
+# Suite runner (paper Fig. 8 grid)
+# ---------------------------------------------------------------------------
+
+SEARCHES = {
+    "greedy1": lambda env, bi, **kw: greedy_search(env, bi, lookahead=1, **kw),
+    "greedy2": lambda env, bi, **kw: greedy_search(env, bi, lookahead=2, **kw),
+    "beam2dfs": lambda env, bi, **kw: beam_search(env, bi, width=2, order="dfs", **kw),
+    "beam4dfs": lambda env, bi, **kw: beam_search(env, bi, width=4, order="dfs", **kw),
+    "beam2bfs": lambda env, bi, **kw: beam_search(env, bi, width=2, order="bfs", **kw),
+    "beam4bfs": lambda env, bi, **kw: beam_search(env, bi, width=4, order="bfs", **kw),
+    "random": lambda env, bi, **kw: random_search(env, bi, **kw),
+}
+
+
+def run_all_searches(
+    env: LoopTuneEnv,
+    benchmark_idx: int,
+    budget_s: float = 60.0,
+    max_evals: Optional[int] = None,
+    fresh_cache: bool = True,
+) -> Dict[str, SearchResult]:
+    out = {}
+    for name, fn in SEARCHES.items():
+        if fresh_cache:
+            env._cache.clear()  # fair per-search eval counts / times
+        out[name] = fn(env, benchmark_idx, budget_s=budget_s,
+                       max_evals=max_evals)
+    return out

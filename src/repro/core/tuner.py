@@ -1,0 +1,126 @@
+"""LoopTuner — the framework-facing auto-tuning service.
+
+This is the paper's headline property as a first-class feature: a *trained*
+policy tunes a new kernel in ~a second of pure inference (§III: "the policy
+network quickly reaches the desired state in a matter of seconds"), and the
+resulting schedule is lowered to Pallas BlockSpecs through the registry.
+
+    tuner = LoopTuner.from_checkpoint("apex.pkl", backend="tpu")
+    entry = tuner.tune(matmul_benchmark(512, 512, 512))
+    # -> registry now maps mm:512x512x512 -> {block, grid_order, gflops}
+
+Fallback paths: ``policy="search"`` uses the best traditional search under a
+budget (for machines without a trained checkpoint), ``policy="default"``
+records the untuned nest.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .actions import CPU_SPLITS, TPU_SPLITS, build_action_space
+from .cost_model import TPUAnalyticalBackend
+from .cpu_backend import CPUMeasuredBackend
+from .env import LoopTuneEnv
+from .loop_ir import Contraction, LoopNest, matmul_benchmark
+from .registry import ScheduleRegistry
+from .rl_common import ActFn, greedy_rollout, load_params
+from .search import beam_search, greedy_search
+
+
+def make_backend(kind: str):
+    if kind == "tpu":
+        return TPUAnalyticalBackend()
+    if kind == "cpu":
+        return CPUMeasuredBackend()
+    raise ValueError(f"backend {kind!r} (want 'tpu' or 'cpu')")
+
+
+def make_act_from_checkpoint(path: str) -> ActFn:
+    """Rebuild the greedy act() for a saved TrainResult checkpoint."""
+    import jax.numpy as jnp
+
+    algo, params = load_params(path)
+    if algo in ("dqn",):
+        from .dqn import make_act
+    elif algo in ("apex_dqn",):
+        from .apex_dqn import make_act
+    elif algo == "ppo":
+        from .ppo import make_act
+    elif algo == "a2c":
+        from .a2c import make_act
+    elif algo == "impala":
+        from .impala import make_act
+    else:
+        raise ValueError(f"unknown algo {algo!r} in {path}")
+    import jax
+
+    return make_act([jax.tree.map(jnp.asarray, params)])
+
+
+class LoopTuner:
+    """Tunes contractions and persists schedules for the kernel layer."""
+
+    def __init__(
+        self,
+        act: Optional[ActFn] = None,
+        backend: str = "tpu",
+        registry: Optional[ScheduleRegistry] = None,
+        episode_len: int = 10,
+        policy: str = "policy",  # "policy" | "search" | "default"
+        search_budget_s: float = 10.0,
+    ):
+        self.act = act
+        self.backend_kind = backend
+        self.backend = make_backend(backend)
+        self.registry = registry if registry is not None else ScheduleRegistry()
+        self.episode_len = episode_len
+        self.policy = policy if act is not None or policy != "policy" else "search"
+        self.search_budget_s = search_budget_s
+        splits = TPU_SPLITS if backend == "tpu" else CPU_SPLITS
+        self.actions = build_action_space(splits)
+
+    @classmethod
+    def from_checkpoint(cls, path: str, backend: str = "tpu", **kw) -> "LoopTuner":
+        return cls(act=make_act_from_checkpoint(path), backend=backend, **kw)
+
+    # ------------------------------------------------------------------
+
+    def _env_for(self, bench: Contraction) -> LoopTuneEnv:
+        return LoopTuneEnv([bench], self.backend, actions=self.actions,
+                           episode_len=self.episode_len)
+
+    def tune(self, bench: Contraction, kernel: str = "mm") -> Dict[str, Any]:
+        """Tune one contraction; returns the registry entry."""
+        t0 = time.perf_counter()
+        env = self._env_for(bench)
+        if self.policy == "policy":
+            best_g, actions, nest = greedy_rollout(env, self.act, 0)
+        elif self.policy == "search":
+            res = greedy_search(env, 0, lookahead=1,
+                                budget_s=self.search_budget_s)
+            res2 = beam_search(env, 0, width=4, order="dfs",
+                               budget_s=self.search_budget_s)
+            res = res2 if res2.best_gflops > res.best_gflops else res
+            best_g, actions, nest = res.best_gflops, res.actions, res.best_nest
+        else:  # default / untuned
+            env.reset(0)
+            best_g, actions, nest = env.current_gflops, [], env.nest.clone()
+        dims = tuple(bench.iter_sizes.values())
+        self.registry.put(kernel, dims, best_g, list(actions), nest)
+        entry = dict(self.registry.get(kernel, dims))
+        entry["tune_time_s"] = time.perf_counter() - t0
+        entry["base_gflops"] = env.initial_gflops
+        return entry
+
+    def tune_matmul(self, m: int, k: int, n: int) -> Dict[str, Any]:
+        return self.tune(matmul_benchmark(m, k, n), kernel="mm")
+
+    def tune_many(self, benches: Sequence[Contraction],
+                  kernel: str = "mm") -> List[Dict[str, Any]]:
+        return [self.tune(b, kernel) for b in benches]
+
+    def save(self, path: str) -> None:
+        self.registry.save(path)

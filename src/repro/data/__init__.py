@@ -1,0 +1,3 @@
+from .pipeline import MarkovLMDataset, SyntheticDataset, make_dataset
+
+__all__ = ["SyntheticDataset", "MarkovLMDataset", "make_dataset"]

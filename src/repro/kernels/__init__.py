@@ -1,0 +1,20 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec VMEM tiling) for the
+compute hot-spots LoopTune schedules, each with a jit wrapper (ops.py) and a
+pure-jnp oracle (ref.py).  Validated in interpret mode on CPU."""
+from .ops import (
+    flash_attention,
+    get_registry,
+    mamba_scan,
+    rwkv6_chunk_scan,
+    set_registry,
+    tuned_matmul,
+)
+
+__all__ = [
+    "flash_attention",
+    "mamba_scan",
+    "rwkv6_chunk_scan",
+    "tuned_matmul",
+    "set_registry",
+    "get_registry",
+]

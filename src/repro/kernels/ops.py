@@ -1,0 +1,97 @@
+"""Public kernel entry points: jitted wrappers that consult the LoopTune
+schedule registry for block shapes (the paper's auto-tuned schedules become
+BlockSpecs here — `DESIGN §2`).
+
+``set_registry(path_or_registry)`` installs a tuned-schedule table (produced
+by ``examples/autotune_matmul.py`` or ``LoopTuner``); every wrapper falls
+back to MXU-aligned defaults when no entry exists.  ``interpret`` defaults
+to True (CPU container); on a real TPU fleet the launch scripts pass
+``interpret=False``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.registry import ScheduleRegistry
+
+from .flash_attention import flash_attention as _flash_attention
+from .mamba_scan import mamba_scan as _mamba_scan
+from .matmul import matmul as _matmul
+from .rwkv6_scan import rwkv6_chunk_scan as _rwkv6_chunk_scan
+
+_REGISTRY: Optional[ScheduleRegistry] = None
+
+DEFAULT_MM_BLOCK: Dict[str, int] = {"m": 128, "k": 128, "n": 128}
+
+
+def set_registry(reg: Union[str, ScheduleRegistry, None]) -> None:
+    global _REGISTRY
+    if isinstance(reg, str):
+        reg = ScheduleRegistry(reg)
+    _REGISTRY = reg
+
+
+def get_registry() -> Optional[ScheduleRegistry]:
+    return _REGISTRY
+
+
+def _mm_schedule(m: int, k: int, n: int):
+    """(block sizes, grid order) for an (m, k, n) matmul from the registry."""
+    block = dict(DEFAULT_MM_BLOCK)
+    order = "mn"
+    if _REGISTRY is not None:
+        entry = _REGISTRY.get("mm", (m, k, n))
+        if entry and "block" in entry:
+            block.update({kk: int(vv) for kk, vv in entry["block"].items()})
+            go = [it for it in entry.get("grid_order", []) if it in ("m", "n")]
+            if go and go[0] == "n":
+                order = "nm"
+    return block, order
+
+
+def tuned_matmul(a: jax.Array, b: jax.Array, *, interpret: bool = True,
+                 out_dtype=None) -> jax.Array:
+    """Registry-tuned tiled matmul (falls back to 128^3 MXU blocks)."""
+    m, k = a.shape
+    n = b.shape[1]
+    block, order = _mm_schedule(m, k, n)
+    return _matmul(a, b, bm=block["m"], bk=block["k"], bn=block["n"],
+                   grid_order=order, interpret=interpret, out_dtype=out_dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    interpret: bool = True):
+    """Registry-tuned flash attention (block sizes under kernel id 'fa')."""
+    bq, bk = 128, 128
+    if _REGISTRY is not None:
+        entry = _REGISTRY.get("fa", (q.shape[1], k.shape[1], q.shape[-1]))
+        if entry and "block" in entry:
+            bq = int(entry["block"].get("q", bq))
+            bk = int(entry["block"].get("k", bk))
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap, bq=bq, bk=bk,
+                            interpret=interpret)
+
+
+def rwkv6_chunk_scan(r, k, v, logw, u, *, chunk: int = 64,
+                     interpret: bool = True):
+    if _REGISTRY is not None:
+        entry = _REGISTRY.get("rwkv6", (r.shape[1], r.shape[2]))
+        if entry and "block" in entry:
+            chunk = int(entry["block"].get("l", chunk))
+    return _rwkv6_chunk_scan(r, k, v, logw, u, chunk=chunk,
+                             interpret=interpret)
+
+
+def mamba_scan(dtx, da, b, c, *, chunk: int = 32, bd: int = 128,
+               interpret: bool = True):
+    if _REGISTRY is not None:
+        entry = _REGISTRY.get("mamba", (dtx.shape[1], dtx.shape[2]))
+        if entry and "block" in entry:
+            chunk = int(entry["block"].get("l", chunk))
+            bd = int(entry["block"].get("c", bd))
+    return _mamba_scan(dtx, da, b, c, chunk=chunk, bd=bd, interpret=interpret)

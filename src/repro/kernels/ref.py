@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)
+
+
+def attention_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, HKV, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = jnp.arange(s)
+    kv_pos = jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= kv_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rwkv6_ref(r, k, v, logw, u):
+    """Token-by-token Finch recurrence.  All args f32; r/k/v/logw
+    (BH, S, N); u (BH, N).  Returns (y (BH, S, N), state (BH, N, N))."""
+    bh, s, n = r.shape
+    state = jnp.zeros((bh, n, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        kv = jnp.einsum("bn,bm->bnm", k[:, t], v[:, t])
+        y = jnp.einsum("bn,bnm->bm", r[:, t], state + u[:, :, None] * kv)
+        state = state * jnp.exp(logw[:, t])[..., None] + kv
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state
+
+
+def mamba_scan_ref(dtx, da, b, c):
+    """Token-by-token selective scan.  dtx (B,S,C); da (B,S,C,N) log-decay;
+    b/c (B,S,N).  Returns (y (B,S,C), state (B,C,N))."""
+    bsz, s, ch = dtx.shape
+    n = b.shape[-1]
+    h = jnp.zeros((bsz, ch, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        u = dtx[:, t, :, None] * b[:, t, None, :]
+        h = jnp.exp(da[:, t]) * h + u
+        ys.append(jnp.einsum("bcn,bn->bc", h, c[:, t]))
+    return jnp.stack(ys, axis=1), h

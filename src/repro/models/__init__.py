@@ -1,0 +1,15 @@
+from .transformer import count_params, decode_step, forward, init_cache, init_params
+from .steps import (
+    cross_entropy,
+    init_train_state,
+    make_decode_step,
+    make_loss_fn,
+    make_prefill_step,
+    make_train_step,
+)
+
+__all__ = [
+    "count_params", "decode_step", "forward", "init_cache", "init_params",
+    "cross_entropy", "init_train_state", "make_decode_step", "make_loss_fn",
+    "make_prefill_step", "make_train_step",
+]

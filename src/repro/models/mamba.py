@@ -1,0 +1,180 @@
+"""Mamba selective SSM block (Jamba's attention-free mixer), pure JAX.
+
+Continuous-time SSM discretized per token::
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t     (h: d_inner x d_state)
+    y_t = C_t . h_t + D * x_t
+
+with data-dependent (selective) dt, B, C.  Sequence processing scans over
+chunks (carrying h) and uses an associative scan *within* each chunk — after
+tensor-parallel sharding of ``d_inner`` the per-device intra-chunk buffers
+are tiny.  Decode is the single-step recurrence with (conv window, h) state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import ashard
+
+from .layers import dense_init
+
+
+class MambaState(NamedTuple):
+    h: jax.Array      # (B, d_inner, d_state) f32
+    conv: jax.Array   # (B, d_conv - 1, d_inner) last inputs for causal conv
+
+
+def mamba_params(key, d_model: int, d_state: int, d_conv: int, expand: int,
+                 dtype) -> Dict[str, Any]:
+    d_inner = expand * d_model
+    dt_rank = max(d_model // 16, 1)
+    ks = jax.random.split(key, 7)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None], (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": dense_init(ks[1], (d_conv, d_inner), dtype, 0.5),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], (d_inner, dt_rank + 2 * d_state), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_inner), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((d_inner,), 1e-2, jnp.float32))),
+        "a_log": jnp.log(a),  # A = -exp(a_log), (d_inner, d_state)
+        "d": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_inner, d_model), dtype),
+    }
+
+
+def _conv_causal(xs: jax.Array, w: jax.Array, b: jax.Array,
+                 carry: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  xs: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((xs.shape[0], k - 1, xs.shape[2]), xs.dtype)
+    xp = jnp.concatenate([carry, xs], axis=1)
+    out = sum(xp[:, i : i + xs.shape[1]] * w[i] for i in range(k)) + b
+    return out, xp[:, -(k - 1):]
+
+
+def _ssm_inputs(p, xz: jax.Array):
+    """Common projections.  xz: conv'd + silu'd x part, (B, S, d_inner)."""
+    d_state = p["a_log"].shape[1]
+    dt_rank = p["dt_proj"].shape[0]
+    proj = xz @ p["x_proj"]
+    dt_low, bmat, cmat = jnp.split(
+        proj, [dt_rank, dt_rank + d_state], axis=-1
+    )
+    dt = jax.nn.softplus(
+        dt_low.astype(jnp.float32) @ p["dt_proj"] + p["dt_bias"]
+    )  # (B, S, d_inner) f32 (softplus)
+    # keep the full-sequence streams in bf16; chunk bodies cast per chunk
+    # (full-seq f32 copies were jamba's next-largest buffers, §Perf)
+    return dt.astype(xz.dtype), bmat, cmat
+
+
+def mamba_apply(
+    p: Dict[str, Any],
+    x: jax.Array,
+    state: Optional[MambaState] = None,
+    chunk: int = 64,
+) -> Tuple[jax.Array, MambaState]:
+    """Full-sequence (train / prefill) forward.  x: (B, S, D)."""
+    b, s, _ = x.shape
+    d_inner = p["out_proj"].shape[0]
+    n = p["a_log"].shape[1]
+    xz, z = jnp.split(x @ p["in_proj"], 2, axis=-1)
+    conv_carry = state.conv if state is not None else None
+    xz, conv_out = _conv_causal(xz, p["conv_w"], p["conv_b"], conv_carry)
+    # d_inner stays model-sharded through the scan: the (B, L, d_inner, N)
+    # f32 chunk buffers below are the layer's biggest tensors and GSPMD
+    # does not propagate through associative_scan without the constraint
+    # (jamba train_4k: 183 GiB -> fits, EXPERIMENTS §Perf).
+    xz = ashard(jax.nn.silu(xz), ("batch", None, "model"))
+    dt, bmat, cmat = _ssm_inputs(p, xz)
+    dt = ashard(dt, ("batch", None, "model"))
+    a = -jnp.exp(p["a_log"])  # (d_inner, N)
+    h0 = state.h if state is not None else jnp.zeros((b, d_inner, n), jnp.float32)
+
+    pad = -s % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        xz = jnp.pad(xz, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    def to_chunks(t):  # (B, S, ...) -> (nc, B, L, ...)
+        return t.reshape(b, nc, chunk, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1)
+        )
+
+    dtc, bc, cc, xc = map(to_chunks, (dt, bmat, cmat, xz))
+
+    def chunk_step(h, inp):
+        dtb, bb, cb, xb = (t.astype(jnp.float32) for t in inp)  # (B, L, ...)
+        # log decay per (B, L, d_inner, N)
+        la = dtb[..., None] * a[None, None]  # <= 0
+        u = (dtb * xb)[..., None] * bb[:, :, None, :]  # (B, L, d_inner, N)
+        la = ashard(la, ("batch", None, "model", None))
+        u = ashard(u, ("batch", None, "model", None))
+
+        def comb(e1, e2):
+            a1, u1 = e1
+            a2, u2 = e2
+            return a1 + a2, u1 * jnp.exp(a2) + u2
+
+        cum_a, hs = jax.lax.associative_scan(comb, (la, u), axis=1)
+        hs = hs + jnp.exp(cum_a) * h[:, None]  # include inbound state
+        hs = ashard(hs, ("batch", None, "model", None))
+        y = ashard(jnp.einsum("blcn,bln->blc", hs, cb),
+                   ("batch", None, "model"))
+        y = y + xb * p["d"]  # skip term, chunk-local (f32)
+        return hs[:, -1], y
+
+    # checkpoint the chunk body: the scan otherwise stacks the (B, L,
+    # d_inner, N) f32 intra-chunk states for backward — nc x 2.1 GiB/device
+    # per layer (jamba train_4k §Perf iter 10); with remat only the (B,
+    # d_inner, N) carries are saved and hs is recomputed per chunk.
+    h_final, yc = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                               (dtc, bc, cc, xc))
+    y = yc.transpose(1, 0, 2, 3).reshape(b, sp, d_inner)[:, :s]
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, MambaState(h_final, conv_out)
+
+
+def mamba_decode(
+    p: Dict[str, Any], x: jax.Array, state: MambaState
+) -> Tuple[jax.Array, MambaState]:
+    """Single-token step.  x: (B, 1, D)."""
+    xz, z = jnp.split(x @ p["in_proj"], 2, axis=-1)
+    xz, conv_out = _conv_causal(xz, p["conv_w"], p["conv_b"], state.conv)
+    xz = jax.nn.silu(xz)
+    dt, bmat, cmat = _ssm_inputs(p, xz)
+    a = -jnp.exp(p["a_log"])
+    dt0 = dt[:, 0].astype(jnp.float32)  # (B, d_inner)
+    decay = jnp.exp(dt0[..., None] * a[None])  # (B, d_inner, N)
+    u = (dt0 * xz[:, 0].astype(jnp.float32))[..., None] \
+        * bmat[:, 0, None, :].astype(jnp.float32)
+    h = state.h * decay + u
+    y = jnp.einsum("bcn,bn->bc", h, cmat[:, 0].astype(jnp.float32)) \
+        + xz[:, 0].astype(jnp.float32) * p["d"]
+    out = (y[:, None].astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, MambaState(h, conv_out)
+
+
+def mamba_reference(p, x):
+    """Token-by-token oracle for tests."""
+    b, s, d = x.shape
+    d_inner = p["out_proj"].shape[0]
+    n = p["a_log"].shape[1]
+    st = MambaState(
+        jnp.zeros((b, d_inner, n), jnp.float32),
+        jnp.zeros((b, p["conv_w"].shape[0] - 1, d_inner), x.dtype),
+    )
+    outs = []
+    for t in range(s):
+        o, st = mamba_decode(p, x[:, t : t + 1], st)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1), st

@@ -1,0 +1,227 @@
+"""Mixture-of-Experts FFN with gather-based capacity dispatch.
+
+Dispatch is an *inverse token map*: a small ``(E, C)`` int32 scatter records
+which token fills each expert-capacity slot, tokens are gathered into the
+``(E, C, D)`` expert buffer, experts run as batched matmuls, and the combine
+gathers each token's K slots back and sums them gate-weighted.  Unlike the
+GShard one-hot-einsum dispatch this adds **zero fake FLOPs** (the HLO FLOP
+count stays ~= active-expert matmul FLOPs, which keeps the roofline "useful
+compute" ratio honest) and its transient memory is O(E*C*D + N*K*D) instead
+of O(N*E*C).
+
+Long sequences are **chunked**: ``moe_apply`` scans over ``dispatch_chunk``
+-token slices so the gather/scatter transients stay bounded no matter the
+sequence length (train_4k has 1M global tokens).  Capacity is per chunk.
+
+Experts are sharded over the ``model`` mesh axis (expert parallelism);
+each expert's FFN weights stay local to its shard group.
+
+Covers: olmoe (64e top-8), jamba (16e top-2), llama4-scout (16e top-1 +
+always-on shared expert).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import ashard
+
+from .layers import dense_init, mlp_apply, mlp_params
+
+
+def moe_params(key, d_model: int, moe_cfg, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 5)
+    e, dff = moe_cfg.n_experts, moe_cfg.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], (d_model, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d_model, dff), dtype),
+        "w_up": dense_init(ks[2], (e, d_model, dff), dtype),
+        "w_down": dense_init(ks[3], (e, dff, d_model), dtype),
+    }
+    if moe_cfg.shared_expert:
+        p["shared"] = mlp_params(ks[4], d_model, dff, dtype)
+    return p
+
+
+def _capacity(n_tokens: int, moe_cfg) -> int:
+    cap = int(n_tokens * moe_cfg.top_k * moe_cfg.capacity_factor / moe_cfg.n_experts)
+    return max(cap, moe_cfg.top_k)
+
+
+def _route(p, xt, moe_cfg):
+    """Router: top-k gates + expert assignment.  xt: (N, D)."""
+    logits = xt.astype(jnp.float32) @ p["router"]  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, moe_cfg.top_k)  # (N, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    return logits, probs, gate_vals, expert_idx
+
+
+def _dispatch_indices(expert_idx: jax.Array, e: int, cap: int):
+    """Capacity-limited slot assignment.
+
+    expert_idx: (N, K) int32.  Returns
+      slot (N, K) int32  — flat index into the (E*C) expert buffer, or E*C
+                           (out-of-bounds sentinel) for dropped tokens,
+      keep (N, K) bool   — token-slot kept,
+      token_map (E*C,)   — inverse map: source token (flat N index) per slot;
+                           unfilled slots point at token 0 but contribute 0
+                           via the combine gather's keep-weighting.
+    """
+    n, k = expert_idx.shape
+    flat_e = expert_idx.reshape(-1)  # (N*K,)
+    # rank of each assignment within its expert = its position in the
+    # expert-capacity buffer (stable sort keeps token order deterministic)
+    order = jnp.argsort(flat_e, stable=True)  # (N*K,)
+    # position within the sorted run of equal experts
+    start = jnp.searchsorted(flat_e[order], jnp.arange(e, dtype=flat_e.dtype))
+    pos_sorted = jnp.arange(n * k, dtype=jnp.int32) - start[flat_e[order]]
+    pos = jnp.zeros((n * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)  # sentinel = E*C
+    # inverse map: slot -> flat token index (drop-mode scatter ignores sentinel)
+    token_ids = jnp.arange(n * k, dtype=jnp.int32) // k
+    token_map = (
+        jnp.zeros((e * cap,), jnp.int32)
+        .at[slot]
+        .set(token_ids, mode="drop")
+    )
+    filled = (
+        jnp.zeros((e * cap,), jnp.bool_).at[slot].set(keep, mode="drop")
+    )
+    return slot.reshape(n, k), keep.reshape(n, k), token_map, filled
+
+
+def _experts_ffn(p, xe: jax.Array, act: str) -> jax.Array:
+    """Batched per-expert SwiGLU: xe (E, C, D) -> (E, C, D)."""
+    from .layers import _ACTS
+
+    gate = _ACTS[act](jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    return jnp.einsum("ecf,efd->ecd", gate * up, p["w_down"])
+
+
+def _moe_chunk(p, xt: jax.Array, moe_cfg, act: str):
+    """One chunk of tokens through the routed experts.  xt: (N, D).
+
+    Dispatch = gather into the (E, C, D) expert buffer (E sharded over
+    ``model`` = expert parallelism, C over ``data``); combine = scatter-add
+    back into the token-sharded (N, D) output.  GSPMD lowers the gather to
+    an all-gather of the (N, D) chunk and the scatter to local updates + an
+    all-reduce of (N, D) — both O(N*D), the honest EP communication cost
+    (cheaper than a naive all-to-all of the K-replicated tokens)."""
+    n, d = xt.shape
+    e, k = moe_cfg.n_experts, moe_cfg.top_k
+    cap = _capacity(n, moe_cfg)
+    xt = ashard(xt, ("tokens_dp", None))
+
+    logits, probs, gate_vals, expert_idx = _route(p, xt, moe_cfg)
+    slot, keep, token_map, filled = _dispatch_indices(expert_idx, e, cap)
+
+    # dispatch: gather tokens into the expert buffer (zero for unfilled slots)
+    xe = jnp.take(xt, token_map, axis=0)  # (E*C, D)
+    xe = jnp.where(filled[:, None], xe, jnp.zeros((), xt.dtype))
+    xe = ashard(xe.reshape(e, cap, d), ("expert", "seq", None))
+    ye = _experts_ffn(p, xe, act)
+    ye = ashard(ye, ("expert", "seq", None)).reshape(e * cap, d)
+
+    # combine: scatter each slot's output back to its source token, weighted
+    # by the gate (gates mapped onto slots the same way the tokens were)
+    gate_map = (
+        jnp.zeros((e * cap,), jnp.float32)
+        .at[slot.reshape(-1)]
+        .set(gate_vals.reshape(-1), mode="drop")
+    )
+    contrib = ye * (gate_map * filled.astype(jnp.float32)).astype(ye.dtype)[:, None]
+    out = (
+        jnp.zeros((n, d), xt.dtype)
+        .at[token_map]
+        .add(contrib, mode="drop")
+    )
+    # (tried: D→model here to turn the partial-sum all-reduce into a
+    # reduce-scatter — GSPMD kept the all-reduce AND added a 166 GiB
+    # reshard all-to-all; reverted.  EXPERIMENTS §Perf iter 15.)
+    out = ashard(out, ("tokens_dp", None))
+
+    # Switch-style router losses
+    frac_tokens = jnp.zeros((e,), jnp.float32).at[expert_idx[:, 0]].add(1.0) / n
+    frac_probs = probs.mean(0)
+    aux_loss = moe_cfg.aux_loss * e * jnp.sum(frac_tokens * frac_probs)
+    z_loss = moe_cfg.router_z_loss * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1))
+    )
+    drop = 1.0 - keep.astype(jnp.float32).mean()
+    return out, (aux_loss, z_loss, drop)
+
+
+def moe_apply(
+    p: Dict[str, Any],
+    x: jax.Array,
+    moe_cfg,
+    act: str = "silu",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, D) -> (out, aux).  Scans over SEQUENCE-sliced chunks so
+    dispatch transients are bounded by ``moe_cfg.dispatch_chunk`` tokens and
+    every chunk spans all batch shards (stays data-sharded through the
+    scan)."""
+    b, s, d = x.shape
+    n = b * s
+    chunk = getattr(moe_cfg, "dispatch_chunk", 65_536) or n
+    # largest seq-dim split with >= chunk tokens per slice
+    n_chunks = max(1, n // chunk)
+    while n_chunks > 1 and s % n_chunks != 0:
+        n_chunks -= 1
+
+    if n_chunks == 1:
+        xt = ashard(x.reshape(n, d), ("tokens_dp", None))
+        out, (aux_l, z_l, drop) = _moe_chunk(p, xt, moe_cfg, act)
+    else:
+        sl = s // n_chunks
+        xc = x.reshape(b, n_chunks, sl, d).transpose(1, 0, 2, 3)
+        xc = ashard(xc, (None, "batch", None, None))
+
+        def body(_, xci):  # (B, sl, D): batch-sharded like the residual
+            o, a = _moe_chunk(p, xci.reshape(b * sl, d), moe_cfg, act)
+            return None, (o.reshape(b, sl, d), a)
+
+        _, (outs, (aux_ls, z_ls, drops)) = jax.lax.scan(
+            jax.checkpoint(body), None, xc)
+        out = ashard(outs, (None, "batch", None, None))
+        out = out.transpose(1, 0, 2, 3).reshape(n, d)
+        aux_l, z_l, drop = aux_ls.mean(), z_ls.mean(), drops.mean()
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x.reshape(n, d), act)
+
+    aux = {
+        "moe_aux_loss": aux_l,
+        "moe_z_loss": z_l,
+        "moe_drop_frac": drop,
+    }
+    return out.reshape(b, s, d), aux
+
+
+def moe_ref_dense(p: Dict[str, Any], x: jax.Array, moe_cfg, act: str = "silu"):
+    """Oracle: route every token through its top-k experts with NO capacity
+    limit (dense per-expert pass).  Used by tests to validate dispatch."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, moe_cfg.top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    from .layers import _ACTS
+
+    outs = []
+    for e_i in range(moe_cfg.n_experts):
+        g = _ACTS[act](xt @ p["w_gate"][e_i])
+        y = (g * (xt @ p["w_up"][e_i])) @ p["w_down"][e_i]
+        outs.append(y)
+    per_expert = jnp.stack(outs, axis=1)  # (N, E, D)
+    sel = jnp.take_along_axis(per_expert, expert_idx[..., None], axis=1)
+    out = (sel * gate_vals[..., None].astype(x.dtype)).sum(1)
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], xt, act)
+    return out.reshape(b, s, d)

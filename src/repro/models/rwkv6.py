@@ -1,0 +1,245 @@
+"""RWKV-6 "Finch" time-mix and channel-mix (arXiv:2404.05892), pure JAX.
+
+The time-mix recurrence per head (head dim N)::
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state: N x N)
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with data-dependent per-channel decay ``w_t = exp(-exp(w0 + lora(x_t)))``.
+
+Training/prefill uses a **chunked scan** (the TPU-friendly form also targeted
+by ``repro.kernels.rwkv6_scan``): within a chunk of length L the recurrence
+unrolls into an attention-like lower-triangular matmul with decay ratios
+computed in log-space (stable: all exponents are <= 0); across chunks a
+``lax.scan`` carries the (B, H, N, N) state.  Decode is the single-token
+recurrence.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+LORA_RANK = 32
+
+
+def rwkv_time_mix_params(key, d_model: int, head_dim: int, dtype) -> Dict[str, Any]:
+    h = d_model // head_dim
+    ks = jax.random.split(key, 12)
+    p = {
+        # token-shift interpolation coefficients per stream
+        "mu_r": dense_init(ks[0], (d_model,), jnp.float32, 0.2),
+        "mu_k": dense_init(ks[1], (d_model,), jnp.float32, 0.2),
+        "mu_v": dense_init(ks[2], (d_model,), jnp.float32, 0.2),
+        "mu_w": dense_init(ks[3], (d_model,), jnp.float32, 0.2),
+        "mu_g": dense_init(ks[4], (d_model,), jnp.float32, 0.2),
+        "w_r": dense_init(ks[5], (d_model, d_model), dtype),
+        "w_k": dense_init(ks[6], (d_model, d_model), dtype),
+        "w_v": dense_init(ks[7], (d_model, d_model), dtype),
+        "w_g": dense_init(ks[8], (d_model, d_model), dtype),
+        "w_o": dense_init(ks[9], (d_model, d_model), dtype),
+        # data-dependent decay: w0 + tanh(x A) B  (low-rank, Finch eq. 6)
+        "w0": jnp.full((d_model,), -6.0, jnp.float32),
+        "w_lora_a": dense_init(ks[10], (d_model, LORA_RANK), jnp.float32),
+        "w_lora_b": dense_init(ks[11], (LORA_RANK, d_model), jnp.float32),
+        "u": dense_init(jax.random.fold_in(key, 99), (h, head_dim), jnp.float32, 0.5),
+        "ln_w": jnp.ones((d_model,), jnp.float32),
+        "ln_b": jnp.zeros((d_model,), jnp.float32),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, x_prev: Optional[jax.Array] = None) -> jax.Array:
+    """Previous token's activation (zeros / supplied carry at position 0)."""
+    if x_prev is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = x_prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _streams(p, x, x_shift):
+    xr = _mix(x, x_shift, p["mu_r"])
+    xk = _mix(x, x_shift, p["mu_k"])
+    xv = _mix(x, x_shift, p["mu_v"])
+    xw = _mix(x, x_shift, p["mu_w"])
+    xg = _mix(x, x_shift, p["mu_g"])
+    r = xr @ p["w_r"]
+    k = xk @ p["w_k"]
+    v = xv @ p["w_v"]
+    g = jax.nn.silu(xg @ p["w_g"])
+    logw = -jnp.exp(
+        p["w0"]
+        + jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    )  # (B, S, D)  log of decay in (0, 1)
+    return r, k, v, g, logw
+
+
+def _heads(x: jax.Array, head_dim: int) -> jax.Array:
+    b, s, d = x.shape
+    return x.reshape(b, s, d // head_dim, head_dim)
+
+
+def _group_norm(y: jax.Array, w, b, eps: float = 64e-5) -> jax.Array:
+    """LayerNorm per head (RWKV's GroupNorm with H groups)."""
+    y32 = y.astype(jnp.float32)
+    mean = y32.mean(-1, keepdims=True)
+    var = y32.var(-1, keepdims=True)
+    yn = (y32 - mean) * jax.lax.rsqrt(var + eps)
+    bsz, s, h, n = y.shape
+    yn = yn.reshape(bsz, s, h * n) * w + b
+    return yn
+
+
+def time_mix_chunked(
+    p: Dict[str, Any],
+    x: jax.Array,
+    head_dim: int,
+    chunk: int = 128,
+    state: Optional[jax.Array] = None,
+    x_prev: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence time-mix.  Returns (out, final_state, last_x).
+
+    x: (B, S, D); state: (B, H, N, N) f32; S must be a multiple of ``chunk``
+    (callers pad).
+    """
+    b, s, d = x.shape
+    h = d // head_dim
+    n = head_dim
+    if s % chunk != 0:
+        pad = -s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    x_shift = _token_shift(x, x_prev)
+    r, k, v, g, logw = _streams(p, x, x_shift)
+    if sp != s:
+        # padded positions must be state-neutral: no contribution (k = 0)
+        # and no decay (logw = 0), so the carried state is exactly the
+        # state after the s real tokens.
+        valid = (jnp.arange(sp) < s)[None, :, None]
+        k = jnp.where(valid, k, jnp.zeros((), k.dtype))
+        logw = jnp.where(valid, logw, 0.0)
+    rh, kh, vh = _heads(r, n), _heads(k, n), _heads(v, n)
+    lw = _heads(logw, n)  # (B, S, H, N) f32
+    u = p["u"]  # (H, N)
+
+    nc = sp // chunk
+    # (B, nc, L, H, N) -> (nc, B, H, L, N)
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, h, n).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, wc = map(to_chunks, (rh, kh, vh, lw))
+    rc = rc.astype(jnp.float32)
+    kc = kc.astype(jnp.float32)
+    vc = vc.astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def chunk_step(S, inp):
+        rb, kb, vb, wb = inp  # (B, H, L, N)
+        cum = jnp.cumsum(wb, axis=2)  # inclusive logW
+        cum_ex = cum - wb  # exclusive
+        # inter-chunk: y += (r * exp(cum_ex)) @ S
+        r_dec = rb * jnp.exp(cum_ex)
+        y = jnp.einsum("bhln,bhnm->bhlm", r_dec, S)
+        # intra-chunk lower-triangular (strict) + u-diagonal
+        k_dec = kb * jnp.exp(-cum)  # k_i / W_inc_i
+        att = jnp.einsum("bhln,bhmn->bhlm", r_dec, k_dec)  # (B,H,L,L) t x i
+        li = jnp.arange(chunk)
+        strict = li[:, None] > li[None, :]
+        att = jnp.where(strict[None, None], att, 0.0)
+        diag = jnp.einsum("bhln,bhln->bhl", rb, u[None, :, None, :] * kb)
+        y = y + jnp.einsum("bhlm,bhmn->bhln", att, vb) + diag[..., None] * vb
+        # state update: S' = diag(Winc_L) S + sum_i (k_i * Winc_L/Winc_i)^T v_i
+        wlast = cum[:, :, -1:, :]  # (B, H, 1, N)
+        k_carry = kb * jnp.exp(wlast - cum)
+        S_new = S * jnp.exp(wlast[:, :, 0, :])[..., None] + jnp.einsum(
+            "bhln,bhlm->bhnm", k_carry, vb
+        )
+        return S_new, y
+
+    # checkpointed body: save only the (B, H, N, N) carries, not the
+    # (B, H, L, L) intra-chunk attention stacks (see mamba_apply note)
+    final_state, yc = jax.lax.scan(jax.checkpoint(chunk_step), state,
+                                   (rc, kc, vc, wc))
+    # (nc, B, H, L, N) -> (B, S, H, N)
+    y = yc.transpose(1, 0, 3, 2, 4).reshape(b, sp, h, n)[:, :s]
+    y = _group_norm(y, p["ln_w"], p["ln_b"])
+    out = (y.astype(x.dtype) * g[:, :s]) @ p["w_o"]
+    return out, final_state, x[:, min(s, sp) - 1]
+
+
+def time_mix_decode(
+    p: Dict[str, Any],
+    x: jax.Array,           # (B, 1, D)
+    head_dim: int,
+    state: jax.Array,       # (B, H, N, N) f32
+    x_prev: jax.Array,      # (B, D) last token's input activation
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, _, d = x.shape
+    n = head_dim
+    h = d // n
+    x_shift = x_prev[:, None]
+    r, k, v, g, logw = _streams(p, x, x_shift)
+    rh = _heads(r, n)[:, 0].astype(jnp.float32)  # (B, H, N)
+    kh = _heads(k, n)[:, 0].astype(jnp.float32)
+    vh = _heads(v, n)[:, 0].astype(jnp.float32)
+    w = jnp.exp(_heads(logw, n)[:, 0])  # (B, H, N)
+    u = p["u"]
+    kv = jnp.einsum("bhn,bhm->bhnm", kh, vh)
+    y = jnp.einsum("bhn,bhnm->bhm", rh, state + u[None, :, :, None] * kv)
+    S_new = state * w[..., None] + kv
+    y = _group_norm(y[:, None, :, :].reshape(b, 1, h, n), p["ln_w"], p["ln_b"])
+    out = (y.astype(x.dtype) * g) @ p["w_o"]
+    return out, S_new, x[:, 0]
+
+
+def time_mix_reference(p, x, head_dim, state=None, x_prev=None):
+    """Token-by-token oracle for tests (exact recurrence, O(S) python loop)."""
+    b, s, d = x.shape
+    n = head_dim
+    h = d // n
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), x.dtype)
+    outs = []
+    for t in range(s):
+        o, state, x_prev = time_mix_decode(p, x[:, t : t + 1], n, state, x_prev)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1), state, x_prev
+
+
+# ---------------------------------------------------------------------------
+# Channel mix (RWKV-6 FFN)
+# ---------------------------------------------------------------------------
+
+
+def channel_mix_params(key, d_model: int, d_ff: int, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": dense_init(ks[0], (d_model,), jnp.float32, 0.2),
+        "mu_r": dense_init(ks[1], (d_model,), jnp.float32, 0.2),
+        "w_k": dense_init(ks[2], (d_model, d_ff), dtype),
+        "w_v": dense_init(jax.random.fold_in(key, 7), (d_ff, d_model), dtype),
+        "w_r": dense_init(jax.random.fold_in(key, 8), (d_model, d_model), dtype),
+    }
+
+
+def channel_mix(p, x: jax.Array, x_prev: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out, last_x) — last_x is the decode carry."""
+    xs = _token_shift(x, x_prev)
+    xk = _mix(x, xs, p["mu_k"])
+    xr = _mix(x, xs, p["mu_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]), x[:, -1]

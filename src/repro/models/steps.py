@@ -1,0 +1,157 @@
+"""Step functions: training (loss + AdamW), prefill, decode — the pure
+functions that ``launch/`` jits with in/out shardings."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.optim import AdamWState, adamw_init, adamw_update
+from . import transformer as T
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 1e-4) -> Tuple[jax.Array, jax.Array]:
+    """Mean next-token CE over all positions (+ z-loss).  logits are f32 and
+    may be vocab-sharded — the logsumexp reduction lowers to the vocab
+    all-reduce under GSPMD."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold).mean()
+    zl = z_loss * jnp.square(lse).mean()
+    return ce + zl, ce
+
+
+def chunked_cross_entropy(cfg: ModelConfig, params, hidden: jax.Array,
+                          labels: jax.Array, chunk: int = 512,
+                          z_loss: float = 1e-4
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Seq-chunked CE: logits exist only one (B, chunk, V) slice at a time
+    (rematerialized in the backward), so the full (B, S, V) tensor — ~4 GiB
+    /device at vocab 256k — is never resident.  Numerically identical to
+    :func:`cross_entropy`."""
+    from . import layers as L
+
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    if s % chunk != 0:  # fall back (smoke shapes); memory is small there
+        logits = L.logits_apply(params["embed"], hidden,
+                                params.get("lm_head"), cfg.logit_softcap)
+        return cross_entropy(logits, labels, z_loss)
+    n_chunks = s // chunk
+    hc = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        ce_sum, z_sum = carry
+        h, lab = xs
+        logits = L.logits_apply(params["embed"], h, params.get("lm_head"),
+                                cfg.logit_softcap).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return (ce_sum + (lse - gold).sum(), z_sum + jnp.square(lse).sum()), None
+
+    (ce_sum, z_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc))
+    n = b * s
+    ce = ce_sum / n
+    return ce + z_loss * z_sum / n, ce
+
+
+def make_loss_fn(cfg: ModelConfig, ce_chunk: int = 512) -> Callable:
+    def loss_fn(params, batch):
+        hidden, _, aux = T.hidden_states(params, cfg, batch)
+        loss, ce = chunked_cross_entropy(cfg, params, hidden,
+                                         batch["labels"], chunk=ce_chunk)
+        loss = loss + aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    lr_fn: Callable[[jax.Array], jax.Array],
+    *,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+    n_microbatches: int = 1,
+    grad_transform: Optional[Callable] = None,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``n_microbatches > 1`` runs gradient accumulation via ``lax.scan`` over
+    equal microbatch slices (reduce-scatter of microbatch i overlaps compute
+    of i+1 under XLA's latency-hiding scheduler).
+    ``grad_transform``: optional hook (e.g. int8 compression w/ error
+    feedback) applied to the summed grads before the optimizer."""
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if n_microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                acc = carry
+                (_, m), g = grad_fn(params, mb)
+                return jax.tree.map(jnp.add, acc, g), m
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(n_microbatches, x.shape[0] // n_microbatches,
+                                    *x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(micro, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        lr = lr_fn(opt_state.step)
+        new_params, new_opt, gnorm = adamw_update(
+            grads, opt_state, params, lr,
+            weight_decay=weight_decay, max_grad_norm=max_grad_norm)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    """prefill(params, batch) -> (last_logits, caches, cache_len)."""
+
+    def prefill(params, batch):
+        bsz = (batch["tokens"].shape[0] if "tokens" in batch
+               else batch["embeds"].shape[0])
+        s = (batch["tokens"].shape[1] if "tokens" in batch
+             else batch["embeds"].shape[1])
+        caches = T.init_cache(cfg, bsz, max_len)
+        logits, caches, _ = T.forward(params, cfg, batch, caches=caches)
+        return logits[:, -1], caches, jnp.asarray(s, jnp.int32)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """serve_step(params, batch, caches, cache_len) ->
+    (next_token, logits, caches) — one new token against the cache."""
+
+    def serve_step(params, batch, caches, cache_len):
+        logits, caches = T.decode_step(params, cfg, batch, caches, cache_len)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, logits, caches
+
+    return serve_step
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array):
+    params = T.init_params(cfg, key)
+    opt = adamw_init(params, keep_master=cfg.dtype != "float32")
+    return params, opt

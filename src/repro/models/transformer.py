@@ -1,0 +1,391 @@
+"""Model assembly: embeddings -> scan over stacked layer-periods -> LM head.
+
+Every assigned architecture is a repeating **period** of heterogeneous layers
+(attn / local-attn / mamba / rwkv6 / cross-attn mixers x dense / moe / rwkv
+channel-mix FFNs).  Parameters for each position-in-period are stacked over
+``n_periods`` on axis 0 and the forward runs ``lax.scan`` over periods with
+per-period remat — this keeps the lowered HLO one-period-sized, which is what
+makes 80 production-mesh compiles tractable (and is the standard MaxText
+trick on real fleets).
+
+Three entry points (all pure functions of (params, batch[, cache])):
+  * :func:`forward`        — full-sequence logits (train / prefill)
+  * :func:`decode_step`    — one token with a KV/state cache
+  * :func:`init_cache`     — allocate the decode cache pytree
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ATTN,
+    ATTN_LOCAL,
+    CROSS_ATTN,
+    DENSE,
+    MAMBA,
+    MOE,
+    RWKV6,
+    LayerSpec,
+    ModelConfig,
+)
+from repro.runtime.sharding import ashard
+from . import layers as L
+from . import mamba as M
+from . import moe as X
+from . import rwkv6 as R
+
+RWKV_CMIX = "rwkv_cmix"
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, spec: LayerSpec, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"norm_attn": jnp.ones((d,), dt), "norm_ffn": jnp.ones((d,), dt)}
+    if cfg.post_norm:
+        p["post_attn"] = jnp.ones((d,), dt)
+        p["post_ffn"] = jnp.ones((d,), dt)
+    if spec.mixer in (ATTN, ATTN_LOCAL, CROSS_ATTN):
+        p["attn"] = L.attn_params(ks[0], cfg, dt)
+        if spec.mixer == CROSS_ATTN:
+            p["cross"] = L.attn_params(ks[1], cfg, dt, cross=True)
+            p["norm_cross"] = jnp.ones((d,), dt)
+    elif spec.mixer == MAMBA:
+        p["mamba"] = M.mamba_params(
+            ks[0], d, cfg.ssm_d_state, cfg.ssm_d_conv, cfg.ssm_expand, dt
+        )
+    elif spec.mixer == RWKV6:
+        p["rwkv"] = R.rwkv_time_mix_params(ks[0], d, cfg.rwkv_head_dim, dt)
+    else:
+        raise ValueError(spec.mixer)
+
+    if spec.ffn == DENSE:
+        if spec.mixer == RWKV6:
+            p["cmix"] = R.channel_mix_params(ks[2], d, cfg.d_ff, dt)
+        else:
+            p["mlp"] = L.mlp_params(ks[2], d, cfg.d_ff, dt)
+    elif spec.ffn == MOE:
+        p["moe"] = X.moe_params(ks[2], d, cfg.moe, dt)
+    else:
+        raise ValueError(spec.ffn)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    k_embed, k_head, k_blocks = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "embed": L.embed_params(k_embed, cfg.vocab, cfg.d_model, dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, (cfg.vocab, cfg.d_model), dt, 1.0)
+    blocks = []
+    for pos, spec in enumerate(cfg.period):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, pos), cfg.n_periods)
+        blocks.append(jax.vmap(lambda k: _block_init(k, spec, cfg))(keys))
+    params["blocks"] = tuple(blocks)
+    return params
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        keys = jax.tree_util.keystr(path)
+        n = math.prod(leaf.shape)
+        if active_only and cfg.moe is not None and "moe" in keys and "shared" not in keys and "router" not in keys:
+            n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Tuple[Any, ...]:
+    """Decode cache: one entry per period position, leaves stacked (n_periods, ...)."""
+    dt = _dtype(cfg)
+    np_, hd = cfg.n_periods, cfg.head_dim_
+    caches = []
+    for spec in cfg.period:
+        c: Dict[str, Any] = {}
+        if spec.mixer in (ATTN, ATTN_LOCAL, CROSS_ATTN):
+            win = spec.window if spec.mixer == ATTN_LOCAL else None
+            buf = min(max_len, win) if win else max_len
+            c["k"] = jnp.zeros((np_, batch, buf, cfg.n_kv_heads, hd), dt)
+            c["v"] = jnp.zeros((np_, batch, buf, cfg.n_kv_heads, hd), dt)
+            if spec.mixer == CROSS_ATTN:
+                c["ck"] = jnp.zeros((np_, batch, max(cfg.n_cross_tokens, 1),
+                                     cfg.n_kv_heads, hd), dt)
+                c["cv"] = jnp.zeros_like(c["ck"])
+        elif spec.mixer == MAMBA:
+            d_inner = cfg.ssm_expand * cfg.d_model
+            c["h"] = jnp.zeros((np_, batch, d_inner, cfg.ssm_d_state), jnp.float32)
+            c["conv"] = jnp.zeros((np_, batch, cfg.ssm_d_conv - 1, d_inner), dt)
+        elif spec.mixer == RWKV6:
+            h = cfg.d_model // cfg.rwkv_head_dim
+            c["s"] = jnp.zeros((np_, batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                               jnp.float32)
+            c["xt"] = jnp.zeros((np_, batch, cfg.d_model), dt)
+        if spec.ffn == DENSE and spec.mixer == RWKV6:
+            c["xc"] = jnp.zeros((np_, batch, cfg.d_model), dt)
+        caches.append(c)
+    return tuple(caches)
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_mixer(spec, p, cfg, h, cache, cache_len, positions, encoder, decode):
+    """Mixer on normed input ``h``.  Returns (out, new_cache)."""
+    new_cache = dict(cache) if cache is not None else None
+    if spec.mixer in (ATTN, ATTN_LOCAL, CROSS_ATTN):
+        q, k, v = L.attn_qkv(p["attn"], cfg, h, positions=positions)
+        window = spec.window if spec.mixer == ATTN_LOCAL else None
+
+        def full_seq_attn(q, k, v):
+            # NOTE: the O(S·window) chunk-folded `L.local_attention` is
+            # numerically exact and saves the masked-block compute, but
+            # under GSPMD its batch-fold reshapes fight the seq-sharded
+            # residual layout (gemma3 train_4k: +17 GiB temp, +500 GiB of
+            # collective-permute — EXPERIMENTS §Perf iter 13), so the
+            # masked blocked path stays the default; the chunked form is
+            # the right shape for an explicit-layout Pallas kernel.
+            return L.attention(q, k, v, causal=True, window=window,
+                               softcap=cfg.attn_softcap)
+
+        if cache is None:
+            out = full_seq_attn(q, k, v)
+        elif not decode:  # prefill: run full attention, fill the cache
+            out = full_seq_attn(q, k, v)
+            buf = cache["k"].shape[1]
+            s = k.shape[1]
+            if buf >= s:
+                new_cache["k"] = jax.lax.dynamic_update_slice(
+                    cache["k"], k, (0, 0, 0, 0))
+                new_cache["v"] = jax.lax.dynamic_update_slice(
+                    cache["v"], v, (0, 0, 0, 0))
+            else:  # windowed cache keeps only the tail
+                new_cache["k"] = k[:, -buf:]
+                new_cache["v"] = v[:, -buf:]
+        else:  # decode: append one token, attend over the cache
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k, (0, cache_len, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v, (0, cache_len, 0, 0))
+            new_cache["k"], new_cache["v"] = kc, vc
+            out = L.attention(q, kc, vc, causal=True, q_offset=cache_len,
+                              kv_len=cache_len + 1, window=window,
+                              softcap=cfg.attn_softcap)
+        if spec.mixer == CROSS_ATTN:
+            out = out.reshape(*h.shape[:2], -1) @ p["attn"]["wo"]
+            hx = L.rms_norm(h + out.astype(h.dtype), p["norm_cross"])
+            if decode:
+                ck, cv = cache["ck"], cache["cv"]
+                qx = (hx @ p["cross"]["wq"]).reshape(
+                    *hx.shape[:2], cfg.n_heads, cfg.head_dim_)
+            else:
+                qx, ck, cv = L.attn_qkv(p["cross"], cfg, hx, kv_src=encoder,
+                                        rope=False)
+                if new_cache is not None:
+                    new_cache["ck"], new_cache["cv"] = ck, cv
+            xout = L.attention(qx, ck, cv, causal=False)
+            return (out + (xout.reshape(*h.shape[:2], -1)
+                           @ p["cross"]["wo"]).astype(out.dtype)), new_cache
+        return out.reshape(*h.shape[:2], -1) @ p["attn"]["wo"], new_cache
+
+    if spec.mixer == MAMBA:
+        st = (M.MambaState(cache["h"], cache["conv"]) if cache is not None else None)
+        if decode:
+            out, st2 = M.mamba_decode(p["mamba"], h, st)
+        else:
+            out, st2 = M.mamba_apply(p["mamba"], h, st if cache is not None else None)
+        if new_cache is not None:
+            new_cache["h"], new_cache["conv"] = st2.h, st2.conv
+        return out, new_cache
+
+    if spec.mixer == RWKV6:
+        if decode:
+            out, s2, xt = R.time_mix_decode(
+                p["rwkv"], h, cfg.rwkv_head_dim, cache["s"], cache["xt"])
+        else:
+            s0 = cache["s"] if cache is not None else None
+            xp = cache["xt"] if cache is not None else None
+            out, s2, xt = R.time_mix_chunked(
+                p["rwkv"], h, cfg.rwkv_head_dim, state=s0, x_prev=xp)
+        if new_cache is not None:
+            new_cache["s"], new_cache["xt"] = s2, xt
+        return out, new_cache
+
+    raise ValueError(spec.mixer)
+
+
+def _apply_ffn(spec, p, cfg, h, cache, decode):
+    new_cache = cache
+    aux = None
+    if spec.ffn == MOE:
+        out, aux = X.moe_apply(p["moe"], h, cfg.moe, cfg.act)
+    elif spec.mixer == RWKV6:
+        xc = cache["xc"] if (cache is not None and decode) else None
+        out, last = R.channel_mix(p["cmix"], h, x_prev=xc)
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["xc"] = last
+    else:
+        out = L.mlp_apply(p["mlp"], h, cfg.act)
+    return out, new_cache, aux
+
+
+def _apply_block(spec, p, cfg, x, cache, cache_len, positions, encoder,
+                 decode, aux_acc):
+    h = L.rms_norm(x, p["norm_attn"])
+    mix, new_cache = _apply_mixer(spec, p, cfg, h, cache, cache_len,
+                                  positions, encoder, decode)
+    if cfg.post_norm:
+        mix = L.rms_norm(mix, p["post_attn"])
+    if cfg.parallel_block:
+        ff, new_cache, aux = _apply_ffn(spec, p, cfg, h, new_cache, decode)
+        x = x + mix.astype(x.dtype) + ff.astype(x.dtype)
+    else:
+        x = x + mix.astype(x.dtype)
+        h2 = L.rms_norm(x, p["norm_ffn"])
+        ff, new_cache, aux = _apply_ffn(spec, p, cfg, h2, new_cache, decode)
+        if cfg.post_norm:
+            ff = L.rms_norm(ff, p["post_ffn"])
+        x = x + ff.astype(x.dtype)
+    x = ashard(x, ("batch", "act_seq", None))
+    if aux is not None:
+        aux_acc = aux_acc + aux["moe_aux_loss"] + aux["moe_z_loss"]
+    return x, new_cache, aux_acc
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(params, cfg, batch) -> jax.Array:
+    if cfg.frontend == "tokens":
+        scale = math.sqrt(cfg.d_model) if cfg.embed_scale else None
+        x = L.embed_apply(params["embed"], batch["tokens"], scale)
+    else:  # audio / stub frontends supply precomputed frame embeddings
+        x = batch["embeds"].astype(_dtype(cfg))
+    return ashard(x, ("batch", "act_seq", None))
+
+
+def _run_layers(params, cfg, x, caches, cache_len, positions, encoder,
+                decode, remat=True):
+    n_specs = len(cfg.period)
+    policy = (cfg.remat_policy if remat is True
+              else (remat if isinstance(remat, str) else "none"))
+
+    def make_block_fn(spec):
+        def f(p, x, cache, aux, cache_len, positions, encoder):
+            return _apply_block(spec, p, cfg, x, cache, cache_len,
+                                positions, encoder, decode, aux)
+        return f
+
+    block_fns = [make_block_fn(spec) for spec in cfg.period]
+    if policy == "block":
+        # per-layer remat: the scan backward saves each block's INPUT (one
+        # seq-sharded residual per layer) and recomputes one block at a
+        # time — peak transient = max over layers, not sum over the period
+        # (decisive for wide heterogeneous periods, EXPERIMENTS §Perf).
+        block_fns = [jax.checkpoint(f) for f in block_fns]
+
+    def period_body(carry, xs):
+        x, aux = carry
+        blocks = xs[:n_specs]
+        pcaches = xs[n_specs:] if caches is not None else (None,) * n_specs
+        new_caches = []
+        for pos in range(n_specs):
+            x, nc, aux = block_fns[pos](
+                blocks[pos], x, pcaches[pos], aux, cache_len, positions,
+                encoder)
+            new_caches.append(nc if nc is not None else {})
+        return (x, aux), tuple(new_caches)
+
+    body = jax.checkpoint(period_body) if policy == "period" else period_body
+    xs = params["blocks"] + (caches if caches is not None else ())
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs, length=cfg.n_periods)
+    return x, (new_caches if caches is not None else None), aux
+
+
+def hidden_states(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    caches: Optional[Tuple] = None,
+    remat: bool = True,
+) -> Tuple[jax.Array, Optional[Tuple], jax.Array]:
+    """Full-sequence forward up to the final norm (no logits).
+
+    Returns (hidden (B, S, D), new_caches, aux_loss) — the training loss
+    consumes this through a seq-chunked CE so the (B, S, vocab) logits are
+    never materialized (decisive for the 256k-vocab archs)."""
+    x = _embed_in(params, cfg, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
+    encoder = batch.get("encoder")
+    x, new_caches, aux = _run_layers(
+        params, cfg, x, caches, 0, positions, encoder, decode=False,
+        remat=remat)
+    x = L.rms_norm(x, params["final_norm"])
+    return x, new_caches, aux
+
+
+def forward(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    caches: Optional[Tuple] = None,
+    remat: bool = True,
+) -> Tuple[jax.Array, Optional[Tuple], jax.Array]:
+    """Full-sequence forward (train when caches=None, prefill otherwise).
+
+    Returns (logits, new_caches, aux_loss)."""
+    x, new_caches, aux = hidden_states(params, cfg, batch, caches, remat)
+    logits = L.logits_apply(params["embed"], x, params.get("lm_head"),
+                            cfg.logit_softcap)
+    logits = ashard(logits, ("batch", None, "model"))
+    return logits, new_caches, aux
+
+
+def decode_step(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],      # one-token inputs
+    caches: Tuple,
+    cache_len: jax.Array,             # i32 scalar: valid cache length
+) -> Tuple[jax.Array, Tuple]:
+    """One decode step.  Returns (logits (B, 1, V), new_caches)."""
+    x = _embed_in(params, cfg, batch)
+    positions = jnp.full((1, 1), cache_len, jnp.int32)
+    x, new_caches, _ = _run_layers(
+        params, cfg, x, caches, cache_len, positions, None, decode=True,
+        remat=False)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.logits_apply(params["embed"], x, params.get("lm_head"),
+                            cfg.logit_softcap)
+    return logits, new_caches

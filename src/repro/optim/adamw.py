@@ -1,0 +1,86 @@
+"""AdamW in pure JAX, pytree-generic, mixed-precision aware.
+
+Used by both the RL trainers (small MLPs) and the LM training substrate
+(bf16 params, f32 master copy + moments; the distributed sharding of the
+state is decided by ``runtime/sharding.py`` — this module is math only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # i32 scalar
+    mu: Any  # first moment, f32, like params
+    nu: Any  # second moment, f32, like params
+    master: Any  # f32 master params (None when params are already f32)
+
+
+def _f32(t):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+
+def adamw_init(params, keep_master: bool = False) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = _f32(params) if keep_master else None
+    return AdamWState(jnp.zeros((), jnp.int32), zeros, jax.tree.map(jnp.copy, zeros), master)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: Optional[float] = None,
+) -> Tuple[Any, AdamWState, jax.Array]:
+    """One AdamW step.  Returns (new_params, new_state, grad_norm).
+
+    When ``state.master`` is set, the update is computed against the f32
+    master weights and new params are cast back to the original dtype.
+    """
+    gnorm = jnp.zeros((), jnp.float32)
+    if max_grad_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    grads = _f32(grads)
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+
+    ref = state.master if state.master is not None else params
+
+    def upd(p, m, v):
+        p32 = p.astype(jnp.float32)
+        u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        return p32 - lr * (u + weight_decay * p32)
+
+    new_master = jax.tree.map(upd, ref, mu, nu)
+    if state.master is not None:
+        new_params = jax.tree.map(
+            lambda nm, p: nm.astype(p.dtype), new_master, params
+        )
+        new_state = AdamWState(step, mu, nu, new_master)
+    else:
+        new_params = jax.tree.map(
+            lambda nm, p: nm.astype(p.dtype), new_master, params
+        )
+        new_state = AdamWState(step, mu, nu, None)
+    return new_params, new_state, gnorm

@@ -1,0 +1,24 @@
+"""Learning-rate schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return fn
+
+
+def cosine_with_warmup(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac)
+        )
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn

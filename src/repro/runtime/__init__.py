@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, mesh context, fault tolerance,
+straggler mitigation, elastic remesh, gradient compression."""

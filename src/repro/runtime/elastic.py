@@ -1,0 +1,40 @@
+"""Elastic scaling: reshard a checkpointed state across a different mesh.
+
+``remesh(state, new_mesh, spec_fn)`` re-places every leaf under the new
+mesh/sharding — the mechanism behind shrinking 2 pods -> 1 pod after a pod
+loss, or growing when capacity returns.  On the CPU container this is
+exercised with ``xla_force_host_platform_device_count`` sub-process tests
+(1 -> 8 logical devices); on a fleet the same code runs over real meshes
+because only ``jax.device_put`` semantics are involved.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def remesh(state: Any, mesh: Mesh, spec_tree: Any) -> Any:
+    """Re-place ``state`` so each leaf has its spec under ``mesh``."""
+
+    def one(leaf, spec):
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(
+        one, state, spec_tree,
+        is_leaf=lambda x: isinstance(x, (np.ndarray, jax.Array)))
+
+
+def shrink_batch_for(mesh: Mesh, global_batch: int,
+                     rules: Optional[Dict] = None) -> int:
+    """Largest batch <= global_batch divisible by the mesh's batch axes
+    (elastic data parallelism keeps per-device batch constant)."""
+    from .sharding import DEFAULT_RULES
+
+    rules = dict(rules or DEFAULT_RULES)
+    axes = tuple(a for a in rules["batch"] if a in mesh.axis_names)
+    bsize = math.prod(mesh.shape[a] for a in axes) if axes else 1
+    return max(bsize, (global_batch // bsize) * bsize)

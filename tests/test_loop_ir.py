@@ -1,0 +1,110 @@
+"""Unit tests: loop IR semantics, actions, features (paper §III-A/C)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    LoopNest,
+    build_action_space,
+    encode,
+    matmul_benchmark,
+    stride_bin,
+)
+from repro.core.actions import Action, apply_action, is_legal, legal_mask
+from repro.core.features import FEATS_PER_LOOP, MAX_LOOPS
+
+
+def test_initial_nest_matches_paper_fig3():
+    nest = LoopNest(matmul_benchmark(64, 128, 256))
+    its = [l.iterator for l in nest.compute_loops]
+    assert its == ["m", "k", "n"]  # paper's naive starting order
+    assert [l.iterator for l in nest.writeback_loops] == ["m", "n"]
+    assert nest.cursor == 0  # agent annotation on the first loop
+
+
+def test_split_semantics():
+    nest = LoopNest(matmul_benchmark(100, 64, 64))
+    nest.split(0, 32)  # m=100 split by 32
+    outer, inner = nest.loops[0], nest.loops[1]
+    assert outer.iterator == inner.iterator == "m"
+    assert outer.count == 4 and outer.step == 32  # ceil(100/32)
+    assert inner.count == 32 and inner.step == 1
+    size, tail = nest.size_tail(0)
+    assert (size, tail) == (3, 4)  # paper features: 100 // 32, 100 % 32
+    assert nest.n_compute == 4  # boundary shifted
+
+
+def test_split_illegal_factors():
+    nest = LoopNest(matmul_benchmark(64, 64, 64))
+    with pytest.raises(ValueError):
+        nest.split(0, 64)  # factor == count
+    with pytest.raises(ValueError):
+        nest.split(0, 1)
+
+
+def test_swap_cannot_cross_boundary():
+    nest = LoopNest(matmul_benchmark(64, 64, 64))
+    with pytest.raises(ValueError):
+        nest.swap(2, 3)  # compute loop 2 <-> writeback loop 3
+
+
+def test_action_space_paper_shape():
+    acts = build_action_space()
+    names = [a.name for a in acts]
+    assert names[:4] == ["up", "down", "swap_up", "swap_down"]
+    assert all(n.startswith("split_") for n in names[4:])
+
+
+def test_cursor_moves_and_swaps():
+    nest = LoopNest(matmul_benchmark(64, 64, 64))
+    acts = {a.name: a for a in build_action_space()}
+    assert not is_legal(nest, acts["up"])  # cursor at top
+    assert apply_action(nest, acts["down"]) is False  # moves don't change structure
+    assert nest.cursor == 1
+    assert apply_action(nest, acts["swap_down"]) is True
+    assert [l.iterator for l in nest.compute_loops] == ["m", "n", "k"]
+    assert nest.cursor == 2  # cursor follows the moved loop
+
+
+def test_illegal_actions_are_noops():
+    nest = LoopNest(matmul_benchmark(64, 64, 64))
+    acts = {a.name: a for a in build_action_space()}
+    key_before = nest.key()
+    assert apply_action(nest, acts["up"]) is False
+    assert nest.key() == key_before
+
+
+def test_swap_same_iterator_illegal():
+    nest = LoopNest(matmul_benchmark(64, 64, 64))
+    acts = {a.name: a for a in build_action_space()}
+    apply_action(nest, acts["split_8"])  # m -> m_outer, m_inner
+    nest.cursor = 1
+    assert not is_legal(nest, acts["swap_up"])  # m_inner <-> m_outer degenerate
+
+
+def test_feature_vector_shape_and_content():
+    nest = LoopNest(matmul_benchmark(64, 128, 256))
+    v = encode(nest).reshape(MAX_LOOPS, FEATS_PER_LOOP)
+    assert v.shape == (16, 20)
+    assert v[0, 0] == 1.0 and v[1:, 0].sum() == 0  # cursor bit on loop 0
+    # loop 0 = m: A stride = 128 (row-major mk), C not read in compute nest
+    assert v[0, 1] == 64.0 and v[0, 2] == 0.0  # size, tail
+    assert v[0, 3] == 1.0  # compute bit
+    assert v[0, 4 + stride_bin(128)] == 1.0
+    # writeback loops have compute bit 0
+    assert v[3, 3] == 0.0 and v[4, 3] == 0.0
+    # padding rows all zero
+    assert np.all(v[5:] == 0)
+
+
+def test_stride_bins_match_paper_fig5():
+    assert stride_bin(1) == 0
+    assert stride_bin(2) == 1
+    assert stride_bin(1024) == 10
+    assert stride_bin(1 << 20) == 15  # clamped to the last bin
+
+
+def test_legal_mask_matches_pointwise():
+    nest = LoopNest(matmul_benchmark(64, 64, 64))
+    acts = build_action_space()
+    mask = legal_mask(nest, acts)
+    assert mask == [is_legal(nest, a) for a in acts]

@@ -1,0 +1,84 @@
+"""Property-based tests (hypothesis): every reachable schedule computes the
+reference contraction; features and cost model stay well-formed."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    LoopNest,
+    TPUAnalyticalBackend,
+    build_action_space,
+    conv2d_benchmark,
+    encode,
+    execute,
+    execute_reference,
+    make_inputs,
+    matmul_benchmark,
+    reduction_benchmark,
+    transpose_benchmark,
+)
+from repro.core.actions import apply_action, is_legal
+
+ACTIONS = build_action_space()
+
+
+def _apply_random_actions(nest: LoopNest, seq, max_loops=14):
+    for a_idx in seq:
+        if len(nest.loops) >= max_loops:
+            break
+        apply_action(nest, ACTIONS[a_idx % len(ACTIONS)])
+    return nest
+
+
+@st.composite
+def benchmarks(draw):
+    kind = draw(st.sampled_from(["mm", "conv", "red", "tr"]))
+    dim = st.integers(3, 40)
+    if kind == "mm":
+        return matmul_benchmark(draw(dim), draw(dim), draw(dim))
+    if kind == "conv":
+        return conv2d_benchmark(draw(dim), draw(dim), draw(st.integers(1, 3)),
+                                draw(st.integers(1, 3)))
+    if kind == "red":
+        return reduction_benchmark(draw(dim), draw(dim))
+    return transpose_benchmark(draw(dim), draw(dim))
+
+
+@given(benchmarks(), st.lists(st.integers(0, 9), max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_any_schedule_computes_reference(bench, seq):
+    nest = _apply_random_actions(LoopNest(bench), seq)
+    arrays = make_inputs(bench, seed=0)
+    out = execute(nest, arrays, vec_cap=64)  # small cap: force deep blocking
+    ref = execute_reference(bench, arrays)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+@given(st.lists(st.integers(0, 9), max_size=20))
+@settings(max_examples=40, deadline=None)
+def test_features_always_finite_and_fixed_size(seq):
+    nest = _apply_random_actions(LoopNest(matmul_benchmark(96, 112, 128)), seq)
+    v = encode(nest)
+    assert v.shape == (320,)
+    assert np.isfinite(v).all()
+    assert (v >= 0).all()
+
+
+@given(st.lists(st.integers(0, 9), max_size=20))
+@settings(max_examples=40, deadline=None)
+def test_cost_model_positive_bounded(seq):
+    backend = TPUAnalyticalBackend()
+    nest = _apply_random_actions(LoopNest(matmul_benchmark(128, 128, 128)), seq)
+    g = backend.evaluate(nest)
+    assert 0.0 < g <= backend.peak()
+
+
+@given(st.lists(st.integers(0, 9), max_size=16))
+@settings(max_examples=30, deadline=None)
+def test_cursor_always_in_range(seq):
+    nest = _apply_random_actions(LoopNest(matmul_benchmark(64, 64, 64)), seq)
+    assert 0 <= nest.cursor < len(nest.loops)
+    # per-iterator levels remain outer->inner (monotone decreasing steps)
+    for it in nest.contraction.iter_sizes:
+        steps = [l.step for l in nest.compute_loops if l.iterator == it]
+        assert steps == sorted(steps, reverse=True)
+        assert steps and steps[-1] == 1  # innermost level has step 1
