@@ -56,7 +56,7 @@ def run(n_benchmarks: int = 20, budget_s: float = 10.0, seed: int = 1,
             row[name] = {"gflops": r.best_gflops, "speedup": r.speedup,
                          "time_s": round(r.time_s, 3), "evals": r.n_evals}
         if act is not None:
-            env._cache.clear()
+            env.clear_cache()
             t0 = time.perf_counter()
             g, _, _ = greedy_rollout(env, act, bi)
             row["policy"] = {"gflops": g, "speedup": g / max(base, 1e-9),

@@ -1,0 +1,109 @@
+"""Batched-rollout throughput: VecLoopTuneEnv vs the scalar episode loop.
+
+Measures env-steps/sec of the pre-refactor collection pattern (one jitted
+policy call and one backend evaluation per env per step) against the
+batched substrate (one jitted call + one cached ``evaluate_batch`` per step
+for the whole lane fleet).  Acceptance: vec size >= 8 achieves >= 3x on the
+analytical backend.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    LoopTuneEnv,
+    VecLoopTuneEnv,
+    collect_vec_rollout,
+    epsilon_greedy_batch,
+    small_dataset,
+)
+from repro.core.actions import TPU_SPLITS, build_action_space
+from repro.core.cost_model import TPUAnalyticalBackend
+from repro.core.networks import mlp_batch, mlp_init
+
+from .common import save_result
+
+
+def bench_scalar(params, benches, actions, n_envs, n_steps, seed=0):
+    """Pre-refactor pattern: one policy call + one step per env per step."""
+    envs = [LoopTuneEnv(benches, TPUAnalyticalBackend(), actions=actions,
+                        seed=seed + i) for i in range(n_envs)]
+    obs = [e.reset() for e in envs]
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    steps = 0
+    for t in range(n_steps):
+        for i, e in enumerate(envs):
+            mask = e.action_mask()
+            q = np.asarray(mlp_batch(params, jnp.asarray(obs[i])[None]))[0]
+            a = int(np.argmax(np.where(mask, q, -np.inf)))
+            if rng.random() < 0.1:
+                a = int(rng.choice(np.flatnonzero(mask)))
+            obs[i], _, done, _ = e.step(a)
+            steps += 1
+            if done:
+                obs[i] = e.reset()
+    return steps / (time.perf_counter() - t0)
+
+
+def bench_vec(params, benches, actions, n_envs, n_steps, seed=0):
+    """Batched substrate: one policy call + one evaluate_batch per step."""
+    venv = VecLoopTuneEnv(benches, TPUAnalyticalBackend(), n_envs,
+                          actions=actions, seed=seed)
+    rng = np.random.default_rng(seed)
+
+    def policy(obs_b, mask_b):
+        q = mlp_batch(params, jnp.asarray(obs_b))
+        return epsilon_greedy_batch(q, mask_b, 0.1, rng), {}
+
+    obs = venv.reset()
+    ep = np.zeros(n_envs, np.float32)
+    finished: list = []
+    t0 = time.perf_counter()
+    batch = collect_vec_rollout(venv, policy, n_steps, obs, ep, finished)
+    elapsed = time.perf_counter() - t0
+    return batch.n_steps / elapsed
+
+
+def run(n_envs: int = 8, n_steps: int = 200, n_benchmarks: int = 16,
+        seed: int = 0, out_name: str = "bench_vec_env"):
+    benches = small_dataset(n_benchmarks, seed=seed)
+    actions = build_action_space(TPU_SPLITS)
+    env0 = LoopTuneEnv(benches, TPUAnalyticalBackend(), actions=actions)
+    params = mlp_init(__import__("jax").random.PRNGKey(seed),
+                      [env0.state_dim, 64, 64, env0.n_actions])
+    # warm the jit caches outside the timed region
+    mlp_batch(params, jnp.zeros((1, env0.state_dim)))
+    mlp_batch(params, jnp.zeros((n_envs, env0.state_dim)))
+
+    scalar_sps = bench_scalar(params, benches, actions, n_envs, n_steps, seed)
+    vec_sps = bench_vec(params, benches, actions, n_envs, n_steps, seed)
+    speedup = vec_sps / scalar_sps
+    payload = {
+        "n_envs": n_envs,
+        "n_steps_per_env": n_steps,
+        "scalar_steps_per_s": round(scalar_sps, 1),
+        "vec_steps_per_s": round(vec_sps, 1),
+        "speedup": round(speedup, 2),
+    }
+    print(f"[vec_env] n_envs={n_envs} scalar={scalar_sps:8.1f} steps/s "
+          f"vec={vec_sps:8.1f} steps/s speedup={speedup:.2f}x", flush=True)
+    save_result(out_name, payload)
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--envs", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--benchmarks", type=int, default=16)
+    args = ap.parse_args()
+    run(args.envs, args.steps, args.benchmarks)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: rl,search,tuned,kernels,roofline")
+                    help="comma list: rl,search,tuned,kernels,roofline,vec_env")
     args = ap.parse_args(argv)
 
     want = set(args.only.split(",")) if args.only else None
@@ -63,6 +63,11 @@ def main(argv=None) -> int:
         section("tuned", lambda: bench_tuned_vs_baselines.run(
             budget_s=10.0 if args.full else 2.0,
             out_name="bench_tuned_vs_baselines" + sfx))
+    if should("vec_env"):
+        from . import bench_vec_env
+        section("vec_env", lambda: bench_vec_env.run(
+            n_envs=8, n_steps=400 if args.full else 150,
+            out_name="bench_vec_env" + sfx))
     if should("roofline"):
         from . import bench_roofline
         section("roofline-single", lambda: bench_roofline.run("single"))

@@ -15,6 +15,7 @@ from .actions import (
     is_legal,
     legal_mask,
 )
+from .backend import Backend
 from .cost_model import TPUAnalyticalBackend
 from .cpu_backend import CPUMeasuredBackend, execute, execute_reference, make_inputs
 from .dataset import (
@@ -37,7 +38,19 @@ from .loop_ir import (
     transpose_benchmark,
 )
 from .registry import ScheduleRegistry, schedule_to_blockspec
-from .rl_common import TrainResult, evaluate_policy, greedy_rollout, load_params
+from .rl_common import (
+    RolloutBatch,
+    TrainResult,
+    collect_vec_rollout,
+    epsilon_greedy_batch,
+    evaluate_policy,
+    greedy_rollout,
+    greedy_rollout_vec,
+    load_params,
+    make_masked_act,
+    sample_masked,
+)
+from .schedule_cache import ScheduleCache
 from .search import (
     SEARCHES,
     SearchResult,
@@ -47,5 +60,6 @@ from .search import (
     run_all_searches,
 )
 from .tuner import LoopTuner, make_act_from_checkpoint
+from .vec_env import VecLoopTuneEnv
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -3,8 +3,10 @@ Mnih et al. 2016; DESIGN §2 records the adaptation).
 
 A3C's workers compute gradients asynchronously and ship them to a central
 model; on one core the unbiased synchronous variant (A2C) is the standard
-stand-in: the worker fleet steps in lockstep and a single n-step
-actor-critic update is applied per rollout.
+stand-in: the worker fleet is the lane dimension of a
+:class:`VecLoopTuneEnv` stepped in lockstep through the shared
+batched-rollout helper, and a single n-step actor-critic update is applied
+per rollout.
 """
 from __future__ import annotations
 
@@ -16,8 +18,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .networks import actor_critic_apply, actor_critic_init
-from .rl_common import TrainResult
+from .networks import actor_critic_apply, actor_critic_batch, actor_critic_init
+from .rl_common import (TrainResult, collect_vec_rollout, make_masked_act,
+                        sample_masked)
+from .vec_env import VecLoopTuneEnv
 
 
 @dataclass
@@ -70,77 +74,53 @@ def make_update_fn(cfg: A2CConfig):
     return update
 
 
-@jax.jit
-def _policy(params, obs):
-    logits, value = actor_critic_apply(params, obs[None])
-    return logits[0], value[0]
-
-
-def make_act(params_ref):
-    def act(obs: np.ndarray, mask: np.ndarray, greedy: bool = True) -> int:
-        logits, _ = _policy(params_ref[0], jnp.asarray(obs))
-        return int(np.argmax(np.where(mask, np.asarray(logits), -np.inf)))
-
-    return act
+make_act = make_masked_act(lambda p, o: actor_critic_batch(p, jnp.asarray(o))[0])
 
 
 def train_a2c(env_factory, n_iterations: int = 300,
               cfg: Optional[A2CConfig] = None) -> TrainResult:
+    """The worker fleet steps as vectorized lanes.  ``env_factory`` is
+    called once with index 0 — pass a scalar LoopTuneEnv factory (lanes are
+    differentiated by per-lane rng seeds ``cfg.seed + lane``, sharing the
+    env's benchmarks/backend/cache) or return a ready VecLoopTuneEnv."""
     cfg = cfg or A2CConfig()
     rng = np.random.default_rng(cfg.seed)
-    envs = [env_factory(i) for i in range(cfg.n_envs)]
-    env0 = envs[0]
-    params = actor_critic_init(jax.random.PRNGKey(cfg.seed), env0.state_dim,
-                               list(cfg.hidden), env0.n_actions)
+    venv = VecLoopTuneEnv.ensure(env_factory(0), cfg.n_envs, seed=cfg.seed)
+    n_envs = venv.n_envs
+    params = actor_critic_init(jax.random.PRNGKey(cfg.seed), venv.state_dim,
+                               list(cfg.hidden), venv.n_actions)
     opt = (jax.tree.map(jnp.zeros_like, params),
            jax.tree.map(jnp.zeros_like, params),
            jnp.zeros((), jnp.int32))
     update = make_update_fn(cfg)
     params_ref = [params]
 
-    obs = np.stack([e.reset() for e in envs])
-    ep_rewards = np.zeros(cfg.n_envs)
+    def policy(obs, mask):
+        logits, _ = actor_critic_batch(params_ref[0], jnp.asarray(obs))
+        a, _ = sample_masked(np.asarray(logits), mask, rng)
+        return a, {}
+
+    obs = venv.reset()
+    ep_rewards = np.zeros(n_envs, np.float32)
     finished: list = []
     rewards_log, times = [], []
     t_start = time.perf_counter()
-    t_len, n = cfg.rollout_len, cfg.n_envs
+    t_len, n = cfg.rollout_len, n_envs
 
     for it in range(n_iterations):
-        S = np.zeros((t_len, n, env0.state_dim), np.float32)
-        A = np.zeros((t_len, n), np.int32)
-        R = np.zeros((t_len, n), np.float32)
-        D = np.zeros((t_len, n), np.float32)
-        V = np.zeros((t_len, n), np.float32)
-        M = np.zeros((t_len, n, env0.n_actions), bool)
-        for t in range(t_len):
-            for i, e in enumerate(envs):
-                mask = e.action_mask()
-                logits, value = _policy(params_ref[0], jnp.asarray(obs[i]))
-                logits = np.asarray(logits, np.float64)
-                logits[~mask] = -np.inf
-                z = logits - logits.max()
-                p = np.exp(z) / np.exp(z).sum()
-                a = int(rng.choice(len(p), p=p))
-                S[t, i], A[t, i], M[t, i], V[t, i] = obs[i], a, mask, float(value)
-                obs2, r, done, _ = e.step(a)
-                R[t, i], D[t, i] = r, float(done)
-                ep_rewards[i] += r
-                if done:
-                    finished.append(ep_rewards[i])
-                    ep_rewards[i] = 0.0
-                    obs2 = e.reset()
-                obs[i] = obs2
+        batch = collect_vec_rollout(venv, policy, t_len, obs, ep_rewards,
+                                    finished)
+        obs = batch.final_obs
         # n-step returns bootstrapped from the last value
         ret = np.zeros((t_len, n), np.float32)
-        nxt = np.array([
-            float(_policy(params_ref[0], jnp.asarray(obs[i]))[1])
-            for i in range(n)])
+        nxt = np.asarray(
+            actor_critic_batch(params_ref[0], jnp.asarray(obs))[1], np.float32)
         for t in reversed(range(t_len)):
-            nxt = R[t] + cfg.gamma * (1.0 - D[t]) * nxt
+            nxt = batch.rewards[t] + cfg.gamma * (1.0 - batch.dones[t]) * nxt
             ret[t] = nxt
-        flat = lambda x: x.reshape(t_len * n, *x.shape[2:])
-        batch = tuple(jnp.asarray(flat(x)) for x in (S, A, ret, M))
-        params_ref[0], opt, _ = update(params_ref[0], opt, batch)
+        data = tuple(jnp.asarray(batch.flat(x)) for x in
+                     (batch.obs, batch.actions, ret, batch.masks))
+        params_ref[0], opt, _ = update(params_ref[0], opt, data)
         rewards_log.append(float(np.mean(finished[-20:])) if finished else 0.0)
         times.append(time.perf_counter() - t_start)
     return TrainResult("a2c", params_ref[0], make_act(params_ref),

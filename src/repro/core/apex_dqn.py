@@ -1,12 +1,13 @@
 """APEX_DQN (Horgan et al. 2018) — the paper's winning trainer (§VI-A).
 
 Distributed prioritized experience replay, adapted to one core (DESIGN §2):
-the actor fleet is a set of *interleaved* environment instances, each with
-its own ε from the APEX exploration ladder; experiences land in a shared
-proportional prioritized replay (sum-tree); the learner uses Double-DQN with
-a dueling head and n-step returns; priorities are updated from sampled TD
-errors.  The prioritization logic — the reason APEX wins in the paper — is
-exactly Horgan et al.'s.
+the actor fleet is the lane dimension of a :class:`VecLoopTuneEnv` — lane i
+carries ε_i from the APEX exploration ladder, all lanes share one jitted
+Q call and one batched backend call per step, and their experiences land in
+a shared proportional prioritized replay (sum-tree) through per-lane n-step
+accumulators.  The learner uses Double-DQN with a dueling head; priorities
+are updated from sampled TD errors.  The prioritization logic — the reason
+APEX wins in the paper — is exactly Horgan et al.'s.
 """
 from __future__ import annotations
 
@@ -18,10 +19,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .env import LoopTuneEnv
-from .networks import dueling_apply, dueling_init
+from .networks import dueling_apply, dueling_batch, dueling_init
 from .replay import PrioritizedReplay
-from .rl_common import TrainResult, epsilon_ladder
+from .rl_common import (TrainResult, collect_vec_rollout, epsilon_greedy_batch,
+                        epsilon_ladder, make_masked_act)
+from .vec_env import VecLoopTuneEnv
 
 
 @dataclass
@@ -74,38 +76,20 @@ def make_update_fn(cfg: ApexConfig):
     return update
 
 
-@jax.jit
-def _q_values(params, obs):
-    return dueling_apply(params, obs[None])[0]
+make_act = make_masked_act(lambda p, o: dueling_batch(p, jnp.asarray(o)))
 
 
-def make_act(params_ref):
-    def act(obs: np.ndarray, mask: np.ndarray, greedy: bool = True) -> int:
-        q = np.asarray(_q_values(params_ref[0], jnp.asarray(obs)))
-        return int(np.argmax(np.where(mask, q, -np.inf)))
+class _NStepLane:
+    """Per-lane n-step accumulator feeding the shared prioritized replay."""
 
-    return act
-
-
-class _Actor:
-    """One interleaved actor: owns an env instance, an ε, and an n-step
-    accumulator; feeds the shared prioritized replay."""
-
-    def __init__(self, env: LoopTuneEnv, eps: float, gamma: float, n_step: int,
-                 rng: np.random.Generator):
-        self.env = env
-        self.eps = eps
+    def __init__(self, gamma: float, n_step: int):
         self.gamma = gamma
         self.n_step = n_step
-        self.rng = rng
-        self.obs = env.reset()
         self.pending: List[Tuple] = []  # (s, a, r)
-        self.ep_reward = 0.0
-        self.finished_rewards: List[float] = []
 
-    def _flush(self, buf: PrioritizedReplay, s2, done, mask2, flush_all):
-        """Emit n-step transitions from the pending window."""
-        while self.pending and (len(self.pending) >= self.n_step or flush_all):
+    def push(self, buf: PrioritizedReplay, s, a, r, s2, done, mask2) -> None:
+        self.pending.append((s, a, r))
+        while self.pending and (len(self.pending) >= self.n_step or done):
             ret, disc = 0.0, 1.0
             for (_, _, r_i) in self.pending[: self.n_step]:
                 ret += disc * r_i
@@ -113,26 +97,8 @@ class _Actor:
             s0, a0, _ = self.pending[0]
             buf.add(s0, a0, ret, s2, done, mask2=mask2, discount=disc)
             self.pending.pop(0)
-            if not flush_all:
+            if not done:
                 break
-
-    def step(self, params_ref, buf: PrioritizedReplay) -> None:
-        mask = self.env.action_mask()
-        if self.rng.random() < self.eps:
-            a = int(self.rng.choice(np.flatnonzero(mask)))
-        else:
-            q = np.asarray(_q_values(params_ref[0], jnp.asarray(self.obs)))
-            a = int(np.argmax(np.where(mask, q, -np.inf)))
-        obs2, r, done, _ = self.env.step(a)
-        mask2 = self.env.action_mask()
-        self.pending.append((self.obs, a, r))
-        self.ep_reward += r
-        self._flush(buf, obs2, done, mask2, flush_all=done)
-        self.obs = obs2
-        if done:
-            self.finished_rewards.append(self.ep_reward)
-            self.ep_reward = 0.0
-            self.obs = self.env.reset()
 
 
 def train_apex(
@@ -141,49 +107,67 @@ def train_apex(
     cfg: Optional[ApexConfig] = None,
     steps_per_iteration: int = 10,
 ) -> TrainResult:
-    """``env_factory(actor_idx) -> LoopTuneEnv``.  One iteration ~ one episode
-    per actor (paper: episode of 10 actions, then a net update)."""
+    """Actors run as vector lanes.  ``env_factory`` is called once with
+    index 0 — pass a scalar LoopTuneEnv factory (actor lanes get the ε-ladder
+    plus per-lane rng seeds, sharing the env's benchmarks/backend/cache) or
+    return a ready VecLoopTuneEnv.  One iteration ~ one episode per actor
+    (paper: episode of 10 actions, then net updates)."""
     cfg = cfg or ApexConfig()
     key = jax.random.PRNGKey(cfg.seed)
-    env0 = env_factory(0)
-    params = dueling_init(key, env0.state_dim, list(cfg.hidden), env0.n_actions)
+    venv = VecLoopTuneEnv.ensure(env_factory(0), cfg.n_actors, seed=cfg.seed)
+    n = venv.n_envs
+    params = dueling_init(key, venv.state_dim, list(cfg.hidden), venv.n_actions)
     target = jax.tree.map(jnp.copy, params)
     opt = (jax.tree.map(jnp.zeros_like, params),
            jax.tree.map(jnp.zeros_like, params),
            jnp.zeros((), jnp.int32))
-    buf = PrioritizedReplay(cfg.buffer_size, env0.state_dim,
+    buf = PrioritizedReplay(cfg.buffer_size, venv.state_dim,
                             alpha=cfg.per_alpha, beta0=cfg.per_beta0)
     update = make_update_fn(cfg)
     params_ref = [params]
 
-    eps = epsilon_ladder(cfg.n_actors, cfg.eps_base, cfg.eps_alpha)
-    actors = [
-        _Actor(env_factory(i) if i else env0, float(eps[i]), cfg.gamma,
-               cfg.n_step, np.random.default_rng(cfg.seed * 1000 + i))
-        for i in range(cfg.n_actors)
-    ]
+    eps = epsilon_ladder(n, cfg.eps_base, cfg.eps_alpha)
+    lane_rngs = [np.random.default_rng(cfg.seed * 1000 + i) for i in range(n)]
+    lanes = [_NStepLane(cfg.gamma, cfg.n_step) for _ in range(n)]
 
+    def policy(obs, mask):
+        q = dueling_batch(params_ref[0], jnp.asarray(obs))
+        return epsilon_greedy_batch(q, mask, eps, lane_rngs), {}
+
+    obs = venv.reset()
+    ep_rewards = np.zeros(n, np.float32)
+    finished: list = []
     rewards, times = [], []
-    total_steps, updates = 0, 0
+    updates = 0
+    step_debt = 0  # env steps not yet consumed by a learner update
     t_start = time.perf_counter()
     rng = np.random.default_rng(cfg.seed + 999)
     for it in range(n_iterations):
-        for _ in range(steps_per_iteration):
-            for actor in actors:
-                actor.step(params_ref, buf)
-                total_steps += 1
-                if (buf.size >= cfg.warmup_steps
-                        and total_steps % cfg.update_every == 0):
-                    (s, a, r, s2, d, m2, disc, idx), w = buf.sample(
-                        cfg.batch_size, rng)
-                    params_ref[0], opt, loss, td = update(
-                        params_ref[0], target, opt,
-                        (s, a, r, s2, d, m2, disc), jnp.asarray(w))
-                    buf.update_priorities(idx, np.asarray(td))
-                    updates += 1
-                    if updates % cfg.target_sync_every == 0:
-                        target = jax.tree.map(jnp.copy, params_ref[0])
-        recent = [r for a_ in actors for r in a_.finished_rewards[-5:]]
+        batch = collect_vec_rollout(venv, policy, steps_per_iteration, obs,
+                                    ep_rewards, finished)
+        obs = batch.final_obs
+        for t in range(batch.obs.shape[0]):
+            done_t = batch.dones[t]
+            for i in range(n):
+                lanes[i].push(buf, batch.obs[t, i], int(batch.actions[t, i]),
+                              float(batch.rewards[t, i]), batch.next_obs[t, i],
+                              bool(done_t[i]), batch.next_masks[t, i])
+        if buf.size >= cfg.warmup_steps:
+            # one update per post-warmup update_every env steps, remainder
+            # carried over (pre-warmup steps never accrue update debt)
+            step_debt += batch.n_steps
+            n_updates, step_debt = divmod(step_debt, cfg.update_every)
+            for _ in range(n_updates):
+                (s, a, r, s2, d, m2, disc, idx), w = buf.sample(
+                    cfg.batch_size, rng)
+                params_ref[0], opt, loss, td = update(
+                    params_ref[0], target, opt,
+                    (s, a, r, s2, d, m2, disc), jnp.asarray(w))
+                buf.update_priorities(idx, np.asarray(td))
+                updates += 1
+                if updates % cfg.target_sync_every == 0:
+                    target = jax.tree.map(jnp.copy, params_ref[0])
+        recent = finished[-5 * n:]
         rewards.append(float(np.mean(recent)) if recent else 0.0)
         times.append(time.perf_counter() - t_start)
     return TrainResult("apex_dqn", params_ref[0], make_act(params_ref),

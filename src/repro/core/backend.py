@@ -1,0 +1,46 @@
+"""Evaluation-backend protocol for LoopTune reward sources.
+
+Every reward source — the analytical TPU cost model and the measured CPU
+executor today, real-hardware measurement services tomorrow — implements
+:class:`Backend`:
+
+* ``evaluate(nest) -> float``          — GFLOPS of one schedule
+* ``evaluate_batch(nests) -> ndarray`` — GFLOPS of many schedules at once
+* ``peak() -> float``                  — peak GFLOPS (reward normalizer)
+
+``evaluate_batch`` is the substrate for batched tuning (AutoTVM-style
+amortized measurement): :class:`~repro.core.vec_env.VecLoopTuneEnv` steps N
+nests as a batch and re-evaluates only the structurally-changed lanes in a
+single call, and the traditional searches score a whole expansion frontier
+at once.  The default implementation loops ``evaluate`` so the batched and
+scalar paths are numerically identical; backends with a cheaper amortized
+path (vectorized analytics, RPC measurement services) override it.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Sequence
+
+import numpy as np
+
+from .loop_ir import LoopNest
+
+
+class Backend(abc.ABC):
+    """Schedule -> GFLOPS evaluation protocol."""
+
+    @abc.abstractmethod
+    def evaluate(self, nest: LoopNest) -> float:
+        """GFLOPS of one schedule (higher is better)."""
+
+    def evaluate_batch(self, nests: Sequence[LoopNest]) -> np.ndarray:
+        """GFLOPS of each schedule, as a float64 array of ``len(nests)``.
+
+        Must agree elementwise with looped ``evaluate`` calls; the default
+        simply loops, so overrides only change *cost*, never values.
+        """
+        return np.array([self.evaluate(n) for n in nests], dtype=np.float64)
+
+    @abc.abstractmethod
+    def peak(self) -> float:
+        """Peak GFLOPS of the target — the paper's reward normalizer."""

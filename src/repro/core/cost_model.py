@@ -37,6 +37,7 @@ from __future__ import annotations
 import math
 from typing import Dict, List, Tuple
 
+from .backend import Backend
 from .loop_ir import Contraction, LoopLevel, LoopNest
 
 PEAK_FLOPS = 197e12  # bf16 per chip
@@ -95,7 +96,7 @@ def _util(e: int, t: int) -> float:
     return e / (math.ceil(e / t) * t) if e > 0 else 1.0
 
 
-class TPUAnalyticalBackend:
+class TPUAnalyticalBackend(Backend):
     """Schedule -> modelled GFLOPS for a single TPU v5e core."""
 
     def __init__(self, dtype_bytes: int = 2, vmem_budget: int = VMEM_BUDGET,

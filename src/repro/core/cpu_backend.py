@@ -19,6 +19,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .backend import Backend
 from .loop_ir import Contraction, LoopLevel, LoopNest
 
 VEC_CAP_DEFAULT = 4096  # max elements enumerated by the vectorized suffix
@@ -158,7 +159,7 @@ def execute(
 # ---------------------------------------------------------------------------
 
 
-class CPUMeasuredBackend:
+class CPUMeasuredBackend(Backend):
     """Measured-GFLOPS reward backend (paper §III-B).
 
     Best-of-``repeats`` wall time with one warm-up run, mirroring LoopNest's

@@ -1,24 +1,28 @@
 """DQN (Mnih et al. 2013) with Double-DQN targets — pure JAX.
 
-The paper's baseline "DQN" trainer: uniform replay, ε-greedy single actor,
-target network, Huber loss.  APEX_DQN (the paper's winner) extends this with
-prioritized replay, n-step returns and an actor fleet — see ``apex_dqn.py``.
+The paper's baseline "DQN" trainer: uniform replay, ε-greedy exploration,
+target network, Huber loss.  Rollouts come from a :class:`VecLoopTuneEnv`
+lane fleet through the shared batched-rollout helper — one jitted Q call and
+one batched backend call per step for all lanes.  APEX_DQN (the paper's
+winner) extends this with prioritized replay, n-step returns and the
+ε-ladder actor fleet — see ``apex_dqn.py``.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from functools import partial
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .env import LoopTuneEnv
-from .networks import mlp_apply, mlp_init
+from .networks import mlp_apply, mlp_batch, mlp_init
 from .replay import ReplayBuffer
-from .rl_common import TrainResult
+from .rl_common import (TrainResult, collect_vec_rollout, epsilon_greedy_batch,
+                        make_masked_act)
+from .vec_env import VecLoopTuneEnv
 
 
 @dataclass
@@ -28,6 +32,7 @@ class DQNConfig:
     gamma: float = 0.99
     batch_size: int = 64
     buffer_size: int = 50_000
+    n_envs: int = 4  # vectorized rollout lanes
     eps_start: float = 1.0
     eps_end: float = 0.05
     eps_decay_steps: int = 5_000
@@ -84,64 +89,66 @@ def adam_init(params):
     return (z, jax.tree.map(jnp.copy, z), jnp.zeros((), jnp.int32))
 
 
-@partial(jax.jit, static_argnums=())
-def _q_values(params, obs):
-    return mlp_apply(params, obs[None])[0]
-
-
-def make_act(params_ref):
-    """Greedy act() over a mutable params holder (list of one element)."""
-
-    def act(obs: np.ndarray, mask: np.ndarray, greedy: bool = True) -> int:
-        q = np.asarray(_q_values(params_ref[0], jnp.asarray(obs)))
-        q = np.where(mask, q, -np.inf)
-        return int(np.argmax(q))
-
-    return act
+# greedy act() over a mutable params holder; single obs (D,) -> int,
+# batch (N, D) -> (N,) ints
+make_act = make_masked_act(lambda p, o: mlp_batch(p, jnp.asarray(o)))
 
 
 def train_dqn(
-    env: LoopTuneEnv,
+    env: Union[LoopTuneEnv, VecLoopTuneEnv],
     n_iterations: int = 300,
     cfg: Optional[DQNConfig] = None,
     log_every: int = 10,
 ) -> TrainResult:
-    """One iteration = one episode (paper: 'the optimizer applies the episode
-    of 10 actions and updates the neural network')."""
+    """One iteration = one vectorized episode: every lane plays its 10-action
+    episode (paper: 'the optimizer applies the episode of 10 actions and
+    updates the neural network'), then the learner consumes the batch."""
     cfg = cfg or DQNConfig()
+    venv = VecLoopTuneEnv.ensure(env, cfg.n_envs, seed=cfg.seed)
+    n = venv.n_envs
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
-    params = mlp_init(key, [env.state_dim, *cfg.hidden, env.n_actions])
+    params = mlp_init(key, [venv.state_dim, *cfg.hidden, venv.n_actions])
     target = jax.tree.map(jnp.copy, params)
     opt = adam_init(params)
-    buf = ReplayBuffer(cfg.buffer_size, env.state_dim)
+    buf = ReplayBuffer(cfg.buffer_size, venv.state_dim)
     update = make_update_fn(cfg)
     params_ref = [params]
 
+    steps_seen = [0]
+
+    def policy(obs, mask):
+        eps = cfg.eps_end + (cfg.eps_start - cfg.eps_end) * max(
+            0.0, 1.0 - steps_seen[0] / cfg.eps_decay_steps)
+        q = mlp_batch(params_ref[0], jnp.asarray(obs))
+        steps_seen[0] += n
+        return epsilon_greedy_batch(q, mask, eps, rng), {}
+
+    obs = venv.reset()
+    ep_rewards = np.zeros(n, np.float32)
+    finished: list = []
     rewards, times = [], []
-    total_steps, updates = 0, 0
+    updates = 0
+    step_debt = 0  # env steps not yet consumed by a learner update
     t_start = time.perf_counter()
     for it in range(n_iterations):
-        obs = env.reset()
-        ep_reward = 0.0
-        for _ in range(env.episode_len):
-            eps = cfg.eps_end + (cfg.eps_start - cfg.eps_end) * max(
-                0.0, 1.0 - total_steps / cfg.eps_decay_steps)
-            mask = env.action_mask()
-            if rng.random() < eps:
-                a = int(rng.choice(np.flatnonzero(mask)))
-            else:
-                q = np.asarray(_q_values(params_ref[0], jnp.asarray(obs)))
-                a = int(np.argmax(np.where(mask, q, -np.inf)))
-            obs2, r, done, _ = env.step(a)
-            buf.add(obs, a, r, obs2, done, mask2=env.action_mask(),
-                    discount=cfg.gamma)
-            obs = obs2
-            ep_reward += r
-            total_steps += 1
-            if buf.size >= cfg.warmup_steps and total_steps % cfg.update_every == 0:
-                batch = buf.sample(cfg.batch_size, rng)
-                s, a_, r_, s2, d_, m2, disc, _ = batch
+        n_done_before = len(finished)
+        batch = collect_vec_rollout(venv, policy, venv.episode_len, obs,
+                                    ep_rewards, finished)
+        obs = batch.final_obs
+        for t in range(batch.obs.shape[0]):
+            for i in range(n):
+                buf.add(batch.obs[t, i], int(batch.actions[t, i]),
+                        float(batch.rewards[t, i]), batch.next_obs[t, i],
+                        bool(batch.dones[t, i]), mask2=batch.next_masks[t, i],
+                        discount=cfg.gamma)
+        if buf.size >= cfg.warmup_steps:
+            # one update per post-warmup update_every env steps, remainder
+            # carried over (pre-warmup steps never accrue update debt)
+            step_debt += batch.n_steps
+            n_updates, step_debt = divmod(step_debt, cfg.update_every)
+            for _ in range(n_updates):
+                s, a_, r_, s2, d_, m2, disc, _ = buf.sample(cfg.batch_size, rng)
                 params_ref[0], opt, loss, _ = update(
                     params_ref[0], target, opt,
                     (s, a_, r_, s2, d_, m2, disc),
@@ -149,7 +156,8 @@ def train_dqn(
                 updates += 1
                 if updates % cfg.target_sync_every == 0:
                     target = jax.tree.map(jnp.copy, params_ref[0])
-        rewards.append(ep_reward)
+        new_eps = finished[n_done_before:]
+        rewards.append(float(np.mean(new_eps)) if new_eps else 0.0)
         times.append(time.perf_counter() - t_start)
     return TrainResult("dqn", params_ref[0], make_act(params_ref),
-                       rewards, times)
+                       rewards, times, extra={"updates": updates})

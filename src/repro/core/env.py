@@ -7,18 +7,20 @@ structure changed, and returns the paper's normalized reward::
     reward = (GFLOPS(S') - GFLOPS(S)) / GFLOPS_peak
 
 Episodes are fixed length (paper: 10 actions, implicit stop); structure
-evaluations are cached by canonical schedule key so searches and replayed
-states never re-measure.
+evaluations are cached in a shared :class:`ScheduleCache` (LRU, keyed by
+canonical schedule key) so searches, vectorized lanes and replayed states
+never re-measure.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .actions import Action, apply_action, build_action_space, legal_mask
 from .features import STATE_DIM, encode, normalize
 from .loop_ir import Contraction, LoopNest
+from .schedule_cache import DEFAULT_CAPACITY, ScheduleCache
 
 DEFAULT_EPISODE_LEN = 10
 
@@ -31,15 +33,15 @@ class LoopTuneEnv:
         actions: Optional[Sequence[Action]] = None,
         episode_len: int = DEFAULT_EPISODE_LEN,
         seed: int = 0,
-        cache_size: int = 200_000,
+        cache_size: int = DEFAULT_CAPACITY,
+        cache: Optional[ScheduleCache] = None,
     ):
         self.benchmarks = list(benchmarks)
         self.backend = backend
         self.actions = list(actions) if actions is not None else build_action_space()
         self.episode_len = episode_len
         self.rng = np.random.default_rng(seed)
-        self._cache: Dict[Tuple, float] = {}
-        self._cache_size = cache_size
+        self.cache = cache if cache is not None else ScheduleCache(cache_size)
         self.peak = backend.peak()
         self.nest: Optional[LoopNest] = None
         self.t = 0
@@ -49,14 +51,15 @@ class LoopTuneEnv:
     # -- evaluation with caching ----------------------------------------------
 
     def gflops(self, nest: LoopNest) -> float:
-        key = nest.structure_key()
-        hit = self._cache.get(key)
-        if hit is None:
-            if len(self._cache) >= self._cache_size:
-                self._cache.clear()
-            hit = self.backend.evaluate(nest)
-            self._cache[key] = hit
-        return hit
+        return self.cache.evaluate(self.backend, nest)
+
+    def gflops_batch(self, nests: Sequence[LoopNest]) -> np.ndarray:
+        """Cached batched evaluation (one ``Backend.evaluate_batch`` call for
+        the deduped misses)."""
+        return self.cache.evaluate_batch(self.backend, nests)
+
+    def clear_cache(self) -> None:
+        self.cache.clear()
 
     # -- gym API ----------------------------------------------------------------
 

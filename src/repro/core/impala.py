@@ -1,7 +1,8 @@
 """IMPALA (Espeholt et al. 2018): V-trace off-policy actor-critic.
 
 Actors run a *stale* copy of the policy (synced every ``actor_sync_every``
-iterations — modelling IMPALA's decoupled actor/learner lag on one core);
+iterations — modelling IMPALA's decoupled actor/learner lag on one core)
+over :class:`VecLoopTuneEnv` lanes via the shared batched-rollout helper;
 the learner corrects the off-policy-ness with V-trace importance weights.
 """
 from __future__ import annotations
@@ -14,8 +15,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .networks import actor_critic_apply, actor_critic_init
-from .rl_common import TrainResult
+from .networks import actor_critic_apply, actor_critic_batch, actor_critic_init
+from .rl_common import (TrainResult, collect_vec_rollout, make_masked_act,
+                        sample_masked)
+from .vec_env import VecLoopTuneEnv
 
 
 @dataclass
@@ -90,33 +93,21 @@ def make_update_fn(cfg: ImpalaConfig):
     return update
 
 
-@jax.jit
-def _policy(params, obs):
-    logits, value = actor_critic_apply(params, obs[None])
-    return logits[0], value[0]
-
-
-@jax.jit
-def _batch_policy(params, obs):
-    return actor_critic_apply(params, obs)
-
-
-def make_act(params_ref):
-    def act(obs: np.ndarray, mask: np.ndarray, greedy: bool = True) -> int:
-        logits, _ = _policy(params_ref[0], jnp.asarray(obs))
-        return int(np.argmax(np.where(mask, np.asarray(logits), -np.inf)))
-
-    return act
+make_act = make_masked_act(lambda p, o: actor_critic_batch(p, jnp.asarray(o))[0])
 
 
 def train_impala(env_factory, n_iterations: int = 300,
                  cfg: Optional[ImpalaConfig] = None) -> TrainResult:
+    """Stale-policy actors run as vectorized lanes.  ``env_factory`` is
+    called once with index 0 — pass a scalar LoopTuneEnv factory (lanes are
+    differentiated by per-lane rng seeds ``cfg.seed + lane``, sharing the
+    env's benchmarks/backend/cache) or return a ready VecLoopTuneEnv."""
     cfg = cfg or ImpalaConfig()
     rng = np.random.default_rng(cfg.seed)
-    envs = [env_factory(i) for i in range(cfg.n_envs)]
-    env0 = envs[0]
-    params = actor_critic_init(jax.random.PRNGKey(cfg.seed), env0.state_dim,
-                               list(cfg.hidden), env0.n_actions)
+    venv = VecLoopTuneEnv.ensure(env_factory(0), cfg.n_envs, seed=cfg.seed)
+    n_envs = venv.n_envs
+    params = actor_critic_init(jax.random.PRNGKey(cfg.seed), venv.state_dim,
+                               list(cfg.hidden), venv.n_actions)
     actor_params = jax.tree.map(jnp.copy, params)  # the stale behavior policy
     opt = (jax.tree.map(jnp.zeros_like, params),
            jax.tree.map(jnp.zeros_like, params),
@@ -124,59 +115,43 @@ def train_impala(env_factory, n_iterations: int = 300,
     update = make_update_fn(cfg)
     params_ref = [params]
 
-    obs = np.stack([e.reset() for e in envs])
-    ep_rewards = np.zeros(cfg.n_envs)
+    def policy(obs, mask):
+        logits, _ = actor_critic_batch(actor_params, jnp.asarray(obs))
+        a, logp = sample_masked(np.asarray(logits), mask, rng)
+        return a, {"logp": logp}
+
+    obs = venv.reset()
+    ep_rewards = np.zeros(n_envs, np.float32)
     finished: list = []
     rewards_log, times = [], []
     t_start = time.perf_counter()
-    t_len, n = cfg.rollout_len, cfg.n_envs
+    t_len, n = cfg.rollout_len, n_envs
 
     for it in range(n_iterations):
         if it % cfg.actor_sync_every == 0:
             actor_params = jax.tree.map(jnp.copy, params_ref[0])
-        S = np.zeros((t_len, n, env0.state_dim), np.float32)
-        A = np.zeros((t_len, n), np.int32)
-        BLP = np.zeros((t_len, n), np.float32)  # behavior log-probs
-        R = np.zeros((t_len, n), np.float32)
-        D = np.zeros((t_len, n), np.float32)
-        M = np.zeros((t_len, n, env0.n_actions), bool)
-        for t in range(t_len):
-            for i, e in enumerate(envs):
-                mask = e.action_mask()
-                logits, _ = _policy(actor_params, jnp.asarray(obs[i]))
-                logits = np.asarray(logits, np.float64)
-                logits[~mask] = -np.inf
-                z = logits - logits.max()
-                p = np.exp(z) / np.exp(z).sum()
-                a = int(rng.choice(len(p), p=p))
-                S[t, i], A[t, i], M[t, i] = obs[i], a, mask
-                BLP[t, i] = np.log(max(p[a], 1e-12))
-                obs2, r, done, _ = e.step(a)
-                R[t, i], D[t, i] = r, float(done)
-                ep_rewards[i] += r
-                if done:
-                    finished.append(ep_rewards[i])
-                    ep_rewards[i] = 0.0
-                    obs2 = e.reset()
-                obs[i] = obs2
+        batch = collect_vec_rollout(venv, policy, t_len, obs, ep_rewards,
+                                    finished)
+        obs = batch.final_obs
+        S, A, M = batch.obs, batch.actions, batch.masks
+        R, D, BLP = batch.rewards, batch.dones, batch.aux["logp"]
         # learner: evaluate target policy on the rollout, V-trace correct
-        flatS = S.reshape(t_len * n, -1)
-        logits_t, values_t = _batch_policy(params_ref[0], jnp.asarray(flatS))
+        flatS = batch.flat(S)
+        logits_t, values_t = actor_critic_batch(params_ref[0], jnp.asarray(flatS))
         logits_t = np.array(logits_t).reshape(t_len, n, -1)  # writable copy
         logits_t[~M] = -np.inf
         z = logits_t - logits_t.max(-1, keepdims=True)
         p_t = np.exp(z) / np.exp(z).sum(-1, keepdims=True)
         tlp = np.log(np.maximum(
-            np.take_along_axis(p_t, A[..., None], -1)[..., 0], 1e-12))
+            np.take_along_axis(p_t, A[..., None].astype(np.int64), -1)[..., 0],
+            1e-12))
         values_t = np.asarray(values_t).reshape(t_len, n)
-        boot = np.array([
-            float(_policy(params_ref[0], jnp.asarray(obs[i]))[1])
-            for i in range(n)])
+        boot = np.asarray(
+            actor_critic_batch(params_ref[0], jnp.asarray(obs))[1], np.float32)
         vs, pg_adv = vtrace(BLP, tlp.astype(np.float32), R, values_t, D, boot,
                             cfg.gamma, cfg.rho_bar, cfg.c_bar)
-        flat = lambda x: x.reshape(t_len * n, *x.shape[2:])
-        batch = tuple(jnp.asarray(flat(x)) for x in (S, A, vs, pg_adv, M))
-        params_ref[0], opt, _ = update(params_ref[0], opt, batch)
+        data = tuple(jnp.asarray(batch.flat(x)) for x in (S, A, vs, pg_adv, M))
+        params_ref[0], opt, _ = update(params_ref[0], opt, data)
         rewards_log.append(float(np.mean(finished[-20:])) if finished else 0.0)
         times.append(time.perf_counter() - t_start)
     return TrainResult("impala", params_ref[0], make_act(params_ref),

@@ -266,7 +266,11 @@ class LoopNest:
 
     def key(self, with_cursor: bool = True) -> Tuple:
         body = tuple((l.iterator, l.count, l.step) for l in self.loops)
-        return (body, self.n_compute, self.cursor if with_cursor else -1)
+        # the contraction name disambiguates structurally-identical schedules
+        # of different contractions (tensor layouts change the evaluation),
+        # so caches may be shared across benchmarks
+        return (self.contraction.name, body, self.n_compute,
+                self.cursor if with_cursor else -1)
 
     def structure_key(self) -> Tuple:
         return self.key(with_cursor=False)

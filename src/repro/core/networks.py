@@ -65,6 +65,12 @@ def actor_critic_apply(params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     return logits, value
 
 
+# jitted batched appliers shared by the trainers' rollout/act paths
+mlp_batch = jax.jit(mlp_apply)
+dueling_batch = jax.jit(dueling_apply)
+actor_critic_batch = jax.jit(actor_critic_apply)
+
+
 def masked_argmax(q: np.ndarray, mask: np.ndarray) -> int:
     q = np.where(mask, q, -np.inf)
     return int(np.argmax(q))

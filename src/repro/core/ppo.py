@@ -1,8 +1,9 @@
 """PPO (Schulman et al. 2017): clipped surrogate + GAE(λ), minibatch epochs.
 
 The paper's second-best trainer (Fig. 7: converges ~1000 iters to ~8% of
-peak).  Rollouts come from a fleet of interleaved env instances; the policy
-is a masked categorical over the action space.
+peak).  Rollouts come from a :class:`VecLoopTuneEnv` lane fleet via the
+shared batched-rollout helper; the policy is a masked categorical over the
+action space, sampled from one batched network call per step.
 """
 from __future__ import annotations
 
@@ -14,9 +15,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .env import LoopTuneEnv
-from .networks import actor_critic_apply, actor_critic_init
-from .rl_common import TrainResult
+from .networks import actor_critic_apply, actor_critic_batch, actor_critic_init
+from .rl_common import (TrainResult, collect_vec_rollout, make_masked_act,
+                        sample_masked)
+from .vec_env import VecLoopTuneEnv
 
 
 @dataclass
@@ -77,19 +79,7 @@ def make_update_fn(cfg: PPOConfig):
     return update
 
 
-@jax.jit
-def _policy(params, obs):
-    logits, value = actor_critic_apply(params, obs[None])
-    return logits[0], value[0]
-
-
-def make_act(params_ref):
-    def act(obs: np.ndarray, mask: np.ndarray, greedy: bool = True) -> int:
-        logits, _ = _policy(params_ref[0], jnp.asarray(obs))
-        logits = np.where(mask, np.asarray(logits), -np.inf)
-        return int(np.argmax(logits))
-
-    return act
+make_act = make_masked_act(lambda p, o: actor_critic_batch(p, jnp.asarray(o))[0])
 
 
 def gae(rewards, values, dones, last_value, gamma, lam):
@@ -112,69 +102,56 @@ def train_ppo(
     n_iterations: int = 300,
     cfg: Optional[PPOConfig] = None,
 ) -> TrainResult:
+    """Rollouts are collected over vectorized lanes.  ``env_factory`` is
+    called once with index 0 — pass a scalar LoopTuneEnv factory (lanes are
+    differentiated by per-lane rng seeds ``cfg.seed + lane``, sharing the
+    env's benchmarks/backend/cache) or return a ready VecLoopTuneEnv."""
     cfg = cfg or PPOConfig()
     rng = np.random.default_rng(cfg.seed)
-    envs = [env_factory(i) for i in range(cfg.n_envs)]
-    env0 = envs[0]
+    venv = VecLoopTuneEnv.ensure(env_factory(0), cfg.n_envs, seed=cfg.seed)
+    n_envs = venv.n_envs
     key = jax.random.PRNGKey(cfg.seed)
-    params = actor_critic_init(key, env0.state_dim, list(cfg.hidden),
-                               env0.n_actions)
+    params = actor_critic_init(key, venv.state_dim, list(cfg.hidden),
+                               venv.n_actions)
     opt = (jax.tree.map(jnp.zeros_like, params),
            jax.tree.map(jnp.zeros_like, params),
            jnp.zeros((), jnp.int32))
     update = make_update_fn(cfg)
     params_ref = [params]
 
-    obs = np.stack([e.reset() for e in envs])
-    ep_rewards = np.zeros(cfg.n_envs)
+    def policy(obs, mask):
+        logits, value = actor_critic_batch(params_ref[0], jnp.asarray(obs))
+        a, logp = sample_masked(np.asarray(logits), mask, rng)
+        return a, {"logp": logp,
+                   "value": np.asarray(value, np.float32)}
+
+    obs = venv.reset()
+    ep_rewards = np.zeros(n_envs, np.float32)
     finished: list = []
     rewards_log, times = [], []
     t_start = time.perf_counter()
-    t_len, n = cfg.rollout_len, cfg.n_envs
+    t_len, n = cfg.rollout_len, n_envs
 
     for it in range(n_iterations):
-        S = np.zeros((t_len, n, env0.state_dim), np.float32)
-        A = np.zeros((t_len, n), np.int32)
-        LP = np.zeros((t_len, n), np.float32)
-        R = np.zeros((t_len, n), np.float32)
-        D = np.zeros((t_len, n), np.float32)
-        V = np.zeros((t_len, n), np.float32)
-        M = np.zeros((t_len, n, env0.n_actions), bool)
-        for t in range(t_len):
-            for i, e in enumerate(envs):
-                mask = e.action_mask()
-                logits, value = _policy(params_ref[0], jnp.asarray(obs[i]))
-                logits = np.asarray(logits, np.float64)
-                logits[~mask] = -np.inf
-                z = logits - logits.max()
-                p = np.exp(z) / np.exp(z).sum()
-                a = int(rng.choice(len(p), p=p))
-                S[t, i], A[t, i], M[t, i] = obs[i], a, mask
-                LP[t, i] = np.log(max(p[a], 1e-12))
-                V[t, i] = float(value)
-                obs2, r, done, _ = e.step(a)
-                R[t, i], D[t, i] = r, float(done)
-                ep_rewards[i] += r
-                if done:
-                    finished.append(ep_rewards[i])
-                    ep_rewards[i] = 0.0
-                    obs2 = e.reset()
-                obs[i] = obs2
-        last_v = np.array([
-            float(_policy(params_ref[0], jnp.asarray(obs[i]))[1])
-            for i in range(n)])
-        adv, ret = gae(R, V, D, last_v, cfg.gamma, cfg.lam)
+        batch = collect_vec_rollout(venv, policy, t_len, obs, ep_rewards,
+                                    finished)
+        obs = batch.final_obs
+        last_v = np.asarray(
+            actor_critic_batch(params_ref[0], jnp.asarray(obs))[1], np.float32)
+        adv, ret = gae(batch.rewards, batch.aux["value"], batch.dones, last_v,
+                       cfg.gamma, cfg.lam)
 
-        flat = lambda x: x.reshape(t_len * n, *x.shape[2:])
-        data = (flat(S), flat(A), flat(LP), flat(adv), flat(ret), flat(M))
+        data = (batch.flat(batch.obs), batch.flat(batch.actions),
+                batch.flat(batch.aux["logp"]), batch.flat(adv),
+                batch.flat(ret), batch.flat(batch.masks))
         idx_all = np.arange(t_len * n)
         mb = t_len * n // cfg.n_minibatches
         for _ in range(cfg.n_epochs):
             rng.shuffle(idx_all)
             for k in range(cfg.n_minibatches):
                 sel = idx_all[k * mb:(k + 1) * mb]
-                batch = tuple(jnp.asarray(d[sel]) for d in data)
-                params_ref[0], opt, loss = update(params_ref[0], opt, batch)
+                minibatch = tuple(jnp.asarray(d[sel]) for d in data)
+                params_ref[0], opt, loss = update(params_ref[0], opt, minibatch)
         rewards_log.append(float(np.mean(finished[-20:])) if finished else 0.0)
         times.append(time.perf_counter() - t_start)
     return TrainResult("ppo", params_ref[0], make_act(params_ref),

@@ -1,0 +1,116 @@
+"""Shared structure-keyed LRU cache for schedule evaluations.
+
+The paper caches every state evaluation ("we implemented each search with
+caching to avoid repeating evaluations of the same states"); previously that
+cache lived as a private dict inside :class:`LoopTuneEnv` with
+clear-everything-on-overflow eviction, and searches reached into
+``env._cache`` directly.  :class:`ScheduleCache` makes it a first-class,
+shareable component: true LRU eviction, hit/miss/eviction counters, and
+batched lookup-or-evaluate that dedups within the batch and sends only the
+misses to :meth:`Backend.evaluate_batch`.
+
+One cache instance can back many environments (scalar and vectorized lanes
+alike), so a policy rollout, a search, and a tuner all amortize each other's
+measurements.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .loop_ir import LoopNest
+
+DEFAULT_CAPACITY = 200_000
+
+
+class ScheduleCache:
+    """LRU map from ``nest.structure_key()`` to evaluated GFLOPS."""
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._data: "OrderedDict[Hashable, float]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -- plain mapping surface ------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._data
+
+    def get(self, key: Hashable) -> Optional[float]:
+        """Value for ``key`` (refreshing recency), or None."""
+        val = self._data.get(key)
+        if val is not None:
+            self._data.move_to_end(key)
+        return val
+
+    def put(self, key: Hashable, value: float) -> None:
+        if key in self._data:
+            self._data.move_to_end(key)
+        self._data[key] = value
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._data.clear()
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "size": len(self._data),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }
+
+    # -- lookup-or-evaluate ---------------------------------------------------
+
+    def evaluate(self, backend, nest: LoopNest) -> float:
+        """Cached ``backend.evaluate(nest)`` keyed by structure."""
+        key = nest.structure_key()
+        hit = self.get(key)
+        if hit is not None:
+            self.hits += 1
+            return hit
+        self.misses += 1
+        val = float(backend.evaluate(nest))
+        self.put(key, val)
+        return val
+
+    def evaluate_batch(self, backend, nests: Sequence[LoopNest]) -> np.ndarray:
+        """Cached GFLOPS for each nest; misses are deduped by structure key
+        and evaluated in one ``backend.evaluate_batch`` call."""
+        keys = [n.structure_key() for n in nests]
+        out = np.empty(len(nests), dtype=np.float64)
+        miss_keys: List[Hashable] = []
+        miss_nests: List[LoopNest] = []
+        miss_slots: Dict[Hashable, List[int]] = {}
+        for i, (key, nest) in enumerate(zip(keys, nests)):
+            hit = self.get(key)
+            if hit is not None:
+                self.hits += 1
+                out[i] = hit
+            elif key in miss_slots:
+                miss_slots[key].append(i)
+            else:
+                self.misses += 1
+                miss_slots[key] = [i]
+                miss_keys.append(key)
+                miss_nests.append(nest)
+        if miss_nests:
+            vals = np.asarray(backend.evaluate_batch(miss_nests), np.float64)
+            for key, val in zip(miss_keys, vals):
+                v = float(val)
+                self.put(key, v)
+                for i in miss_slots[key]:
+                    out[i] = v
+        return out

@@ -5,9 +5,12 @@
                               time budget elapses before the full graph
 * Random search             — uniform random action sequences
 
-All searches share the environment's structure-keyed evaluation cache
+All searches share the environment's structure-keyed :class:`ScheduleCache`
 (paper: "we implemented each search with caching to avoid repeating
-evaluations of the same states") and a wall-clock budget.
+evaluations of the same states") and a wall-clock budget.  Expansion is
+batched: all children of a frontier node are scored through one
+``Backend.evaluate_batch`` call (cache-deduped), so measurement cost is
+amortized exactly like the vectorized RL rollouts.
 """
 from __future__ import annotations
 
@@ -60,11 +63,39 @@ class _Budget:
 
 def _eval(env: LoopTuneEnv, nest: LoopNest, budget: _Budget) -> float:
     key = nest.structure_key()
-    cached = key in env._cache
+    cached = key in env.cache
     g = env.gflops(nest)
     if not cached:
         budget.spend_eval()
     return g
+
+
+def _eval_batch(env: LoopTuneEnv, nests: Sequence[LoopNest],
+                budget: _Budget) -> np.ndarray:
+    """Score ``nests`` through one cached ``evaluate_batch`` call; the budget
+    is charged once per deduped cache miss.  When ``max_evals`` is set the
+    batch is truncated so the eval budget is never exceeded (mirroring the
+    old per-child break) — the returned array may then be shorter than
+    ``nests``.  The wall-clock budget is checked between batches, so it can
+    overshoot by at most one frontier."""
+    if budget.max_evals is not None:
+        allowed = max(0, budget.max_evals - budget.evals)
+        keep, misses = [], set()
+        for n in nests:
+            k = n.structure_key()
+            if k in env.cache or k in misses:
+                keep.append(n)
+            elif len(misses) < allowed:
+                misses.add(k)
+                keep.append(n)
+            else:
+                break  # budget exhausted: later children stay unscored
+        nests = keep
+    misses_before = env.cache.misses
+    gs = env.gflops_batch(nests)
+    for _ in range(env.cache.misses - misses_before):
+        budget.spend_eval()
+    return gs
 
 
 def _children(env: LoopTuneEnv, nest: LoopNest) -> List[Tuple[int, LoopNest]]:
@@ -118,8 +149,12 @@ def greedy_search(
         g_here = _eval(env, n, budget)
         if depth == 0 or budget.exhausted():
             return g_here, []
+        kids = _children(env, n)
+        # score the whole frontier in one batched backend call; the recursion
+        # below then hits the cache for each child's own evaluation
+        _eval_batch(env, [child for _, child in kids], budget)
         best, bseq = g_here, []
-        for ai, child in _children(env, n):
+        for ai, child in kids:
             g_c, s_c = expand(child, depth - 1)
             if g_c > best:
                 best, bseq = g_c, [ai] + s_c
@@ -167,16 +202,24 @@ def beam_search(
     visited: Dict[Tuple, float] = {}
 
     def ranked_children(n: LoopNest) -> List[Tuple[float, int, LoopNest]]:
-        scored = []
+        fresh, seen_here = [], set()
         for ai, child in _children(env, n):
             k = child.key()  # cursor-aware: moves reach distinct states
-            g = _eval(env, child, budget)
-            if k in visited:
-                continue  # already expanded this exact (structure, cursor)
+            if k in visited or k in seen_here:
+                continue  # already expanded: costs no budget at all
+            seen_here.add(k)
+            fresh.append((ai, child, k))
+        if not fresh:
+            return []
+        # score all children of the frontier node in one batched call
+        # (may be truncated when max_evals runs out; zip drops the rest,
+        # leaving them unvisited — exactly like the old per-child break)
+        gs = _eval_batch(env, [child for _, child, _ in fresh], budget)
+        scored = []
+        for (ai, child, k), g in zip(fresh, gs):
+            g = float(g)
             visited[k] = g
             scored.append((g, ai, child))
-            if budget.exhausted():
-                break
         scored.sort(key=lambda t: -t[0])
         return scored[:width]
 
@@ -282,7 +325,7 @@ def run_all_searches(
     out = {}
     for name, fn in SEARCHES.items():
         if fresh_cache:
-            env._cache.clear()  # fair per-search eval counts / times
+            env.clear_cache()  # fair per-search eval counts / times
         out[name] = fn(env, benchmark_idx, budget_s=budget_s,
                        max_evals=max_evals)
     return out

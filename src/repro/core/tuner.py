@@ -26,8 +26,10 @@ from .cpu_backend import CPUMeasuredBackend
 from .env import LoopTuneEnv
 from .loop_ir import Contraction, LoopNest, matmul_benchmark
 from .registry import ScheduleRegistry
-from .rl_common import ActFn, greedy_rollout, load_params
+from .rl_common import ActFn, greedy_rollout, greedy_rollout_vec, load_params
+from .schedule_cache import ScheduleCache
 from .search import beam_search, greedy_search
+from .vec_env import VecLoopTuneEnv
 
 
 def make_backend(kind: str):
@@ -81,6 +83,9 @@ class LoopTuner:
         self.search_budget_s = search_budget_s
         splits = TPU_SPLITS if backend == "tpu" else CPU_SPLITS
         self.actions = build_action_space(splits)
+        # one evaluation cache for every env this tuner creates, so repeated
+        # tune() calls and tune_many() lanes amortize each other
+        self.cache = ScheduleCache()
 
     @classmethod
     def from_checkpoint(cls, path: str, backend: str = "tpu", **kw) -> "LoopTuner":
@@ -90,7 +95,7 @@ class LoopTuner:
 
     def _env_for(self, bench: Contraction) -> LoopTuneEnv:
         return LoopTuneEnv([bench], self.backend, actions=self.actions,
-                           episode_len=self.episode_len)
+                           episode_len=self.episode_len, cache=self.cache)
 
     def tune(self, bench: Contraction, kernel: str = "mm") -> Dict[str, Any]:
         """Tune one contraction; returns the registry entry."""
@@ -118,9 +123,38 @@ class LoopTuner:
     def tune_matmul(self, m: int, k: int, n: int) -> Dict[str, Any]:
         return self.tune(matmul_benchmark(m, k, n), kernel="mm")
 
-    def tune_many(self, benches: Sequence[Contraction],
-                  kernel: str = "mm") -> List[Dict[str, Any]]:
-        return [self.tune(b, kernel) for b in benches]
+    def tune_many(self, benches: Sequence[Contraction], kernel: str = "mm",
+                  vec_size: int = 16) -> List[Dict[str, Any]]:
+        """Tune many contractions at once.
+
+        With a trained policy, the contractions become lanes of a
+        :class:`VecLoopTuneEnv` (chunks of ``vec_size``) and the policy is
+        rolled out greedily over all of them simultaneously — one batched
+        act() and one batched backend call per step.  Search/default
+        policies fall back to per-contraction tuning.
+        """
+        if self.policy != "policy":
+            return [self.tune(b, kernel) for b in benches]
+        entries: List[Dict[str, Any]] = []
+        for lo in range(0, len(benches), vec_size):
+            chunk = list(benches[lo:lo + vec_size])
+            t0 = time.perf_counter()
+            venv = VecLoopTuneEnv(chunk, self.backend, n_envs=len(chunk),
+                                  actions=self.actions,
+                                  episode_len=self.episode_len,
+                                  cache=self.cache)
+            best_g, names, nests = greedy_rollout_vec(
+                venv, self.act, benchmark_indices=list(range(len(chunk))))
+            per_bench_s = (time.perf_counter() - t0) / len(chunk)
+            for i, bench in enumerate(chunk):
+                dims = tuple(bench.iter_sizes.values())
+                self.registry.put(kernel, dims, float(best_g[i]),
+                                  list(names[i]), nests[i])
+                entry = dict(self.registry.get(kernel, dims))
+                entry["tune_time_s"] = per_bench_s
+                entry["base_gflops"] = float(venv.initial_gflops[i])
+                entries.append(entry)
+        return entries
 
     def save(self, path: str) -> None:
         self.registry.save(path)

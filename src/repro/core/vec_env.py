@@ -1,0 +1,194 @@
+"""Vectorized LoopTune environment: N independent nests stepped as a batch.
+
+``VecLoopTuneEnv`` holds N lanes, each semantically identical to a scalar
+:class:`LoopTuneEnv` seeded ``seed + lane``: same featurization, same action
+legality, same normalized-GFLOPS-delta reward.  The difference is cost
+shape — per step, only the lanes whose *structure* changed are re-evaluated,
+and those go through the shared :class:`ScheduleCache` /
+:meth:`Backend.evaluate_batch` in a single call, so lanes exploring the same
+schedules amortize each other's measurements and batched policies pay one
+network call per step instead of N.
+
+This is the rollout substrate for all five RL trainers
+(:func:`repro.core.rl_common.collect_vec_rollout`) and for the tuner's
+``tune_many`` (one lane per contraction).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .actions import Action, apply_action, build_action_space, legal_mask
+from .env import DEFAULT_EPISODE_LEN, LoopTuneEnv
+from .features import STATE_DIM, encode, normalize
+from .loop_ir import Contraction, LoopNest
+from .schedule_cache import DEFAULT_CAPACITY, ScheduleCache
+
+
+class VecLoopTuneEnv:
+    def __init__(
+        self,
+        benchmarks: Sequence[Contraction],
+        backend,
+        n_envs: int,
+        actions: Optional[Sequence[Action]] = None,
+        episode_len: int = DEFAULT_EPISODE_LEN,
+        seed: int = 0,
+        cache_size: int = DEFAULT_CAPACITY,
+        cache: Optional[ScheduleCache] = None,
+    ):
+        if n_envs < 1:
+            raise ValueError(f"n_envs must be >= 1, got {n_envs}")
+        self.benchmarks = list(benchmarks)
+        self.backend = backend
+        self.actions = list(actions) if actions is not None else build_action_space()
+        self.n_envs = n_envs
+        self.episode_len = episode_len
+        # lane i draws benchmarks exactly like LoopTuneEnv(seed=seed + i)
+        self.rngs = [np.random.default_rng(seed + i) for i in range(n_envs)]
+        self.cache = cache if cache is not None else ScheduleCache(cache_size)
+        self.peak = backend.peak()
+        self.nests: List[Optional[LoopNest]] = [None] * n_envs
+        self.t = np.zeros(n_envs, dtype=np.int64)
+        self._gflops = np.zeros(n_envs, dtype=np.float64)
+        self.initial_gflops = np.zeros(n_envs, dtype=np.float64)
+
+    @classmethod
+    def from_env(cls, env: LoopTuneEnv, n_envs: int,
+                 seed: int = 0) -> "VecLoopTuneEnv":
+        """Vectorize an existing scalar env: share its benchmarks, backend,
+        action space, episode length and evaluation cache."""
+        return cls(env.benchmarks, env.backend, n_envs, actions=env.actions,
+                   episode_len=env.episode_len, seed=seed, cache=env.cache)
+
+    @classmethod
+    def ensure(cls, env, n_envs: int, seed: int = 0) -> "VecLoopTuneEnv":
+        """Pass a VecLoopTuneEnv through unchanged; vectorize a scalar env."""
+        if isinstance(env, cls):
+            return env
+        return cls.from_env(env, n_envs, seed=seed)
+
+    # -- evaluation -----------------------------------------------------------
+
+    def gflops_batch(self, nests: Sequence[LoopNest]) -> np.ndarray:
+        return self.cache.evaluate_batch(self.backend, nests)
+
+    def clear_cache(self) -> None:
+        self.cache.clear()
+
+    # -- gym-like vector API ---------------------------------------------------
+
+    @property
+    def n_actions(self) -> int:
+        return len(self.actions)
+
+    @property
+    def state_dim(self) -> int:
+        return STATE_DIM
+
+    @property
+    def current_gflops(self) -> np.ndarray:
+        return self._gflops
+
+    def reset(
+        self, benchmark_indices: Optional[Sequence[int]] = None
+    ) -> np.ndarray:
+        """Reset every lane; returns observations ``(n_envs, state_dim)``."""
+        if benchmark_indices is None:
+            benchmark_indices = [
+                int(rng.integers(len(self.benchmarks))) for rng in self.rngs
+            ]
+        if len(benchmark_indices) != self.n_envs:
+            raise ValueError(
+                f"benchmark_indices has {len(benchmark_indices)} entries "
+                f"for {self.n_envs} lanes")
+        for i, bi in enumerate(benchmark_indices):
+            self.nests[i] = LoopNest(self.benchmarks[bi])
+            self.t[i] = 0
+        g = self.gflops_batch(self.nests)
+        self._gflops[:] = g
+        self.initial_gflops[:] = g
+        return self.observe()
+
+    def reset_lane(self, i: int, benchmark_idx: Optional[int] = None) -> np.ndarray:
+        """Reset lane ``i`` only; returns its observation ``(state_dim,)``."""
+        self.reset_lanes([i], None if benchmark_idx is None else [benchmark_idx])
+        return self.observe_lane(i)
+
+    def reset_lanes(
+        self,
+        lanes: Sequence[int],
+        benchmark_indices: Optional[Sequence[int]] = None,
+    ) -> None:
+        """Reset a subset of lanes, evaluating their fresh nests in one
+        batched (cached) backend call."""
+        if benchmark_indices is None:
+            benchmark_indices = [
+                int(self.rngs[i].integers(len(self.benchmarks))) for i in lanes
+            ]
+        for i, bi in zip(lanes, benchmark_indices):
+            self.nests[i] = LoopNest(self.benchmarks[bi])
+            self.t[i] = 0
+        g = self.gflops_batch([self.nests[i] for i in lanes])
+        for j, i in enumerate(lanes):
+            self._gflops[i] = g[j]
+            self.initial_gflops[i] = g[j]
+
+    def observe_lane(self, i: int) -> np.ndarray:
+        return normalize(encode(self.nests[i]))
+
+    def observe(self) -> np.ndarray:
+        return np.stack([self.observe_lane(i) for i in range(self.n_envs)])
+
+    def action_mask_lane(self, i: int) -> np.ndarray:
+        return np.asarray(legal_mask(self.nests[i], self.actions), dtype=bool)
+
+    def action_mask(self) -> np.ndarray:
+        """Legal-action mask ``(n_envs, n_actions)`` bool."""
+        return np.asarray(
+            [legal_mask(nest, self.actions) for nest in self.nests], dtype=bool
+        )
+
+    def step(
+        self, action_indices: Sequence[int]
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, List[dict]]:
+        """Apply one action per lane.  Only the structurally-changed lanes are
+        re-evaluated, through a single batched (cached) backend call.  Returns
+        ``(obs (N, D), rewards (N,), dones (N,), infos)``.  Lanes are NOT
+        auto-reset on done — callers decide (see ``collect_vec_rollout``)."""
+        assert all(n is not None for n in self.nests), "call reset() first"
+        n = self.n_envs
+        assert len(action_indices) == n, (len(action_indices), n)
+        names: List[str] = [""] * n
+        changed: List[int] = []
+        for i in range(n):
+            action = self.actions[int(action_indices[i])]
+            names[i] = action.name
+            if apply_action(self.nests[i], action):
+                changed.append(i)
+        rewards = np.zeros(n, dtype=np.float64)
+        if changed:
+            new_g = self.gflops_batch([self.nests[i] for i in changed])
+            for j, i in enumerate(changed):
+                # same float64 arithmetic as the scalar env's step()
+                rewards[i] = (float(new_g[j]) - float(self._gflops[i])) / self.peak
+                self._gflops[i] = new_g[j]
+        self.t += 1
+        dones = self.t >= self.episode_len
+        infos = [
+            {"gflops": float(self._gflops[i]), "action": names[i]}
+            for i in range(n)
+        ]
+        return self.observe(), rewards, dones, infos
+
+    # -- snapshots (per-lane, mirroring LoopTuneEnv) ---------------------------
+
+    def snapshot_lane(self, i: int) -> Tuple[LoopNest, int, float]:
+        return self.nests[i].clone(), int(self.t[i]), float(self._gflops[i])
+
+    def restore_lane(self, i: int, snap: Tuple[LoopNest, int, float]) -> None:
+        nest, t, g = snap
+        self.nests[i] = nest.clone()
+        self.t[i] = t
+        self._gflops[i] = g

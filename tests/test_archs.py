@@ -12,6 +12,9 @@ from repro.models import transformer as T
 from repro.optim import adamw_init
 from repro.optim.schedules import constant
 
+# several minutes of reduced-config training across every architecture
+pytestmark = pytest.mark.slow
+
 ARCH_IDS = sorted(ARCHS)
 
 

@@ -49,9 +49,9 @@ def test_episode_fixed_length(env):
 
 def test_eval_cache_hits(env):
     env.reset(0)
-    n0 = len(env._cache)
+    n0 = len(env.cache)
     env.reset(0)  # same benchmark: initial eval must be cached
-    assert len(env._cache) == n0
+    assert len(env.cache) == n0
 
 
 def test_greedy1_terminates_at_local_minimum(env):

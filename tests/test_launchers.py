@@ -11,6 +11,9 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
 
+# subprocess train/serve launches take tens of seconds each
+pytestmark = pytest.mark.slow
+
 
 def _run(args, timeout=900):
     return subprocess.run([sys.executable, "-m", *args], env=ENV, text=True,

@@ -1,6 +1,8 @@
 """Property-based tests (hypothesis): every reachable schedule computes the
 reference contraction; features and cost model stay well-formed."""
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't break collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
