@@ -1,0 +1,90 @@
+"""Encoder inference throughput: flat MLP vs graph message-passing.
+
+The graph encoder buys permutation-robustness and depth-agnosticism; this
+harness prices that in batched-inference terms at the vectorized-rollout
+batch size (vec=8 by default) — the shape every trainer's policy() call and
+the tuner's ``tune_many`` actually issue.  Reports jitted batches/sec,
+states/sec and parameter counts for the Q head of each registered encoder.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    EncoderConfig,
+    VecLoopTuneEnv,
+    build_network,
+    get_encoder,
+    small_dataset,
+)
+from repro.core.actions import TPU_SPLITS, build_action_space
+from repro.core.cost_model import TPUAnalyticalBackend
+
+from .common import save_result
+
+
+def _n_params(params) -> int:
+    return int(sum(np.asarray(p).size for p in jax.tree.leaves(params)))
+
+
+def bench_encoder(kind: str, obs: np.ndarray, n_actions: int,
+                  iters: int, hidden=(256, 256)) -> dict:
+    cfg = EncoderConfig(kind=kind).resolved(hidden)
+    net = build_network("q", cfg, n_actions)
+    params = net.init(jax.random.PRNGKey(0))
+    out = net.batch(params, obs)
+    np.asarray(out)  # warm the jit cache outside the timed region
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = net.batch(params, obs)
+    np.asarray(out)  # block on the last result
+    elapsed = time.perf_counter() - t0
+    return {
+        "kind": kind,
+        "state_dim": int(obs.shape[1]),
+        "n_params": _n_params(params),
+        "batches_per_s": iters / elapsed,
+        "states_per_s": iters * len(obs) / elapsed,
+        "us_per_batch": 1e6 * elapsed / iters,
+    }
+
+
+def run(vec: int = 8, iters: int = 500, n_benchmarks: int = 8, seed: int = 0,
+        out_name: str = "bench_networks"):
+    benches = small_dataset(n_benchmarks, seed=seed)
+    actions = build_action_space(TPU_SPLITS)
+    rows = {}
+    for kind in ("flat", "graph"):
+        cfg = EncoderConfig(kind=kind).resolved()
+        feat = get_encoder(kind).featurizer(cfg)
+        venv = VecLoopTuneEnv(benches, TPUAnalyticalBackend(), vec,
+                              actions=actions, seed=seed, featurizer=feat)
+        obs = venv.reset()  # real observations, not synthetic noise
+        rows[kind] = bench_encoder(kind, obs, venv.n_actions, iters)
+        print(f"{kind:>6}: dim={rows[kind]['state_dim']:>4} "
+              f"params={rows[kind]['n_params']:>8} "
+              f"{rows[kind]['batches_per_s']:>9.0f} batches/s "
+              f"({rows[kind]['us_per_batch']:.0f} us/batch of {vec})")
+    slowdown = rows["flat"]["batches_per_s"] / rows["graph"]["batches_per_s"]
+    print(f"graph encoder costs {slowdown:.1f}x flat at vec={vec}")
+    payload = {"vec": vec, "iters": iters, "encoders": rows,
+               "graph_over_flat_slowdown": slowdown}
+    save_result(out_name, payload)
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--vec", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=500)
+    ap.add_argument("--n-benchmarks", type=int, default=8)
+    args = ap.parse_args(argv)
+    run(vec=args.vec, iters=args.iters, n_benchmarks=args.n_benchmarks)
+
+
+if __name__ == "__main__":
+    main()

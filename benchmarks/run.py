@@ -18,7 +18,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: rl,search,tuned,kernels,roofline,vec_env")
+                    help="comma list: rl,search,tuned,kernels,roofline,"
+                         "vec_env,networks")
     args = ap.parse_args(argv)
 
     want = set(args.only.split(",")) if args.only else None
@@ -68,6 +69,11 @@ def main(argv=None) -> int:
         section("vec_env", lambda: bench_vec_env.run(
             n_envs=8, n_steps=400 if args.full else 150,
             out_name="bench_vec_env" + sfx))
+    if should("networks"):
+        from . import bench_networks
+        section("networks", lambda: bench_networks.run(
+            vec=8, iters=500 if args.full else 150,
+            out_name="bench_networks" + sfx))
     if should("roofline"):
         from . import bench_roofline
         section("roofline-single", lambda: bench_roofline.run("single"))

@@ -25,8 +25,29 @@ from .dataset import (
     small_dataset,
     train_test_split,
 )
+from .encoders import (
+    EncoderConfig,
+    Network,
+    build_network,
+    checkpoint_meta,
+    get_encoder,
+    make_policy_act,
+    register_encoder,
+)
 from .env import LoopTuneEnv
 from .features import MAX_LOOPS, STATE_DIM, encode, normalize, stride_bin
+from .graph_features import (
+    GRAPH_MAX_LOOPS,
+    N_EDGE_TYPES,
+    FlatFeaturizer,
+    GraphFeaturizer,
+    LoopGraph,
+    build_adjacency,
+    encode_graph,
+    packed_dim,
+    unpack_graph,
+)
+from .networks import MASK_SENTINEL, masked_argmax, masked_fill, masked_logits
 from .loop_ir import (
     Contraction,
     LoopLevel,
@@ -46,6 +67,7 @@ from .rl_common import (
     evaluate_policy,
     greedy_rollout,
     greedy_rollout_vec,
+    load_checkpoint,
     load_params,
     make_masked_act,
     sample_masked,
@@ -59,7 +81,7 @@ from .search import (
     random_search,
     run_all_searches,
 )
-from .tuner import LoopTuner, make_act_from_checkpoint
+from .tuner import LoopTuner, load_policy, make_act_from_checkpoint
 from .vec_env import VecLoopTuneEnv
 
 __all__ = [k for k in dir() if not k.startswith("_")]

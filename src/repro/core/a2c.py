@@ -11,14 +11,16 @@ per rollout.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .networks import actor_critic_apply, actor_critic_batch, actor_critic_init
+from .encoders import (EncoderConfig, build_network, checkpoint_meta,
+                       get_encoder, make_score_fn)
+from .networks import masked_logits
 from .rl_common import (TrainResult, collect_vec_rollout, make_masked_act,
                         sample_masked)
 from .vec_env import VecLoopTuneEnv
@@ -27,6 +29,7 @@ from .vec_env import VecLoopTuneEnv
 @dataclass
 class A2CConfig:
     hidden: Tuple[int, ...] = (256, 256)
+    encoder: EncoderConfig = field(default_factory=EncoderConfig)
     lr: float = 7e-4
     gamma: float = 0.99
     n_envs: int = 8
@@ -37,11 +40,11 @@ class A2CConfig:
     seed: int = 0
 
 
-def make_update_fn(cfg: A2CConfig):
+def make_update_fn(cfg: A2CConfig, ac_apply):
     def loss_fn(params, batch):
         s, a, ret, mask = batch
-        logits, value = actor_critic_apply(params, s)
-        logits = jnp.where(mask, logits, -1e9)
+        logits, value = ac_apply(params, s)
+        logits = masked_logits(logits, mask)
         logp_all = jax.nn.log_softmax(logits)
         logp = jnp.take_along_axis(logp_all, a[:, None], 1)[:, 0]
         adv = jax.lax.stop_gradient(ret - value)
@@ -74,9 +77,6 @@ def make_update_fn(cfg: A2CConfig):
     return update
 
 
-make_act = make_masked_act(lambda p, o: actor_critic_batch(p, jnp.asarray(o))[0])
-
-
 def train_a2c(env_factory, n_iterations: int = 300,
               cfg: Optional[A2CConfig] = None) -> TrainResult:
     """The worker fleet steps as vectorized lanes.  ``env_factory`` is
@@ -84,19 +84,22 @@ def train_a2c(env_factory, n_iterations: int = 300,
     differentiated by per-lane rng seeds ``cfg.seed + lane``, sharing the
     env's benchmarks/backend/cache) or return a ready VecLoopTuneEnv."""
     cfg = cfg or A2CConfig()
+    enc_cfg = cfg.encoder.resolved(cfg.hidden)
     rng = np.random.default_rng(cfg.seed)
-    venv = VecLoopTuneEnv.ensure(env_factory(0), cfg.n_envs, seed=cfg.seed)
+    venv = VecLoopTuneEnv.ensure(
+        env_factory(0), cfg.n_envs, seed=cfg.seed,
+        featurizer=get_encoder(enc_cfg.kind).featurizer(enc_cfg))
+    net = build_network("actor_critic", enc_cfg, venv.n_actions)
     n_envs = venv.n_envs
-    params = actor_critic_init(jax.random.PRNGKey(cfg.seed), venv.state_dim,
-                               list(cfg.hidden), venv.n_actions)
+    params = net.init(jax.random.PRNGKey(cfg.seed))
     opt = (jax.tree.map(jnp.zeros_like, params),
            jax.tree.map(jnp.zeros_like, params),
            jnp.zeros((), jnp.int32))
-    update = make_update_fn(cfg)
+    update = make_update_fn(cfg, net.apply)
     params_ref = [params]
 
     def policy(obs, mask):
-        logits, _ = actor_critic_batch(params_ref[0], jnp.asarray(obs))
+        logits, _ = net.batch(params_ref[0], jnp.asarray(obs))
         a, _ = sample_masked(np.asarray(logits), mask, rng)
         return a, {}
 
@@ -114,7 +117,7 @@ def train_a2c(env_factory, n_iterations: int = 300,
         # n-step returns bootstrapped from the last value
         ret = np.zeros((t_len, n), np.float32)
         nxt = np.asarray(
-            actor_critic_batch(params_ref[0], jnp.asarray(obs))[1], np.float32)
+            net.batch(params_ref[0], jnp.asarray(obs))[1], np.float32)
         for t in reversed(range(t_len)):
             nxt = batch.rewards[t] + cfg.gamma * (1.0 - batch.dones[t]) * nxt
             ret[t] = nxt
@@ -123,5 +126,8 @@ def train_a2c(env_factory, n_iterations: int = 300,
         params_ref[0], opt, _ = update(params_ref[0], opt, data)
         rewards_log.append(float(np.mean(finished[-20:])) if finished else 0.0)
         times.append(time.perf_counter() - t_start)
-    return TrainResult("a2c", params_ref[0], make_act(params_ref),
-                       rewards_log, times)
+    return TrainResult("a2c", params_ref[0],
+                       make_masked_act(make_score_fn(net))(params_ref),
+                       rewards_log, times,
+                       meta=checkpoint_meta("actor_critic", enc_cfg,
+                                            venv.actions, venv.state_dim))

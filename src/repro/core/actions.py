@@ -44,6 +44,26 @@ def build_action_space(splits: Sequence[int] = CPU_SPLITS) -> List[Action]:
     return acts
 
 
+_FIXED_ACTIONS = {a.name: a for a in build_action_space(())}
+
+
+def action_from_name(name: str) -> Action:
+    """Invert ``Action.name`` (the form checkpoints record)."""
+    if name in _FIXED_ACTIONS:
+        return _FIXED_ACTIONS[name]
+    if name.startswith("split_"):
+        return Action(name, "split", int(name[len("split_"):]))
+    raise ValueError(f"unknown action name {name!r}")
+
+
+def actions_from_names(names: Sequence[str]) -> List[Action]:
+    """Rebuild an action space, in order, from recorded action names — used
+    to restore a checkpoint's exact action space (arbitrary split ladders
+    and orderings included, so index i always means what the policy's
+    output unit i was trained to mean)."""
+    return [action_from_name(n) for n in names]
+
+
 def is_legal(nest: LoopNest, action: Action) -> bool:
     c = nest.cursor
     if action.kind == "move":

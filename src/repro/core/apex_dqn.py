@@ -12,14 +12,16 @@ APEX wins in the paper — is exactly Horgan et al.'s.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .networks import dueling_apply, dueling_batch, dueling_init
+from .encoders import (EncoderConfig, build_network, checkpoint_meta,
+                       get_encoder, make_score_fn)
+from .networks import masked_logits
 from .replay import PrioritizedReplay
 from .rl_common import (TrainResult, collect_vec_rollout, epsilon_greedy_batch,
                         epsilon_ladder, make_masked_act)
@@ -29,6 +31,7 @@ from .vec_env import VecLoopTuneEnv
 @dataclass
 class ApexConfig:
     hidden: Tuple[int, ...] = (256, 256)
+    encoder: EncoderConfig = field(default_factory=EncoderConfig)
     lr: float = 1e-3
     gamma: float = 0.99
     n_step: int = 3
@@ -45,13 +48,13 @@ class ApexConfig:
     seed: int = 0
 
 
-def make_update_fn(cfg: ApexConfig):
+def make_update_fn(cfg: ApexConfig, q_apply):
     def q_loss(params, target_params, batch, weights):
         s, a, r, s2, done, mask2, disc = batch
-        q_sa = jnp.take_along_axis(dueling_apply(params, s), a[:, None], 1)[:, 0]
-        q2_online = jnp.where(mask2, dueling_apply(params, s2), -jnp.inf)
+        q_sa = jnp.take_along_axis(q_apply(params, s), a[:, None], 1)[:, 0]
+        q2_online = masked_logits(q_apply(params, s2), mask2)
         a2 = jnp.argmax(q2_online, axis=1)
-        q2 = jnp.take_along_axis(dueling_apply(target_params, s2), a2[:, None], 1)[:, 0]
+        q2 = jnp.take_along_axis(q_apply(target_params, s2), a2[:, None], 1)[:, 0]
         target = r + disc * (1.0 - done) * q2
         td = q_sa - jax.lax.stop_gradient(target)
         loss = jnp.where(jnp.abs(td) < 1.0, 0.5 * td * td, jnp.abs(td) - 0.5)
@@ -74,9 +77,6 @@ def make_update_fn(cfg: ApexConfig):
         return params, (m, v, t), loss, td
 
     return update
-
-
-make_act = make_masked_act(lambda p, o: dueling_batch(p, jnp.asarray(o)))
 
 
 class _NStepLane:
@@ -113,17 +113,21 @@ def train_apex(
     return a ready VecLoopTuneEnv.  One iteration ~ one episode per actor
     (paper: episode of 10 actions, then net updates)."""
     cfg = cfg or ApexConfig()
+    enc_cfg = cfg.encoder.resolved(cfg.hidden)
     key = jax.random.PRNGKey(cfg.seed)
-    venv = VecLoopTuneEnv.ensure(env_factory(0), cfg.n_actors, seed=cfg.seed)
+    venv = VecLoopTuneEnv.ensure(
+        env_factory(0), cfg.n_actors, seed=cfg.seed,
+        featurizer=get_encoder(enc_cfg.kind).featurizer(enc_cfg))
+    net = build_network("dueling", enc_cfg, venv.n_actions)
     n = venv.n_envs
-    params = dueling_init(key, venv.state_dim, list(cfg.hidden), venv.n_actions)
+    params = net.init(key)
     target = jax.tree.map(jnp.copy, params)
     opt = (jax.tree.map(jnp.zeros_like, params),
            jax.tree.map(jnp.zeros_like, params),
            jnp.zeros((), jnp.int32))
     buf = PrioritizedReplay(cfg.buffer_size, venv.state_dim,
                             alpha=cfg.per_alpha, beta0=cfg.per_beta0)
-    update = make_update_fn(cfg)
+    update = make_update_fn(cfg, net.apply)
     params_ref = [params]
 
     eps = epsilon_ladder(n, cfg.eps_base, cfg.eps_alpha)
@@ -131,7 +135,7 @@ def train_apex(
     lanes = [_NStepLane(cfg.gamma, cfg.n_step) for _ in range(n)]
 
     def policy(obs, mask):
-        q = dueling_batch(params_ref[0], jnp.asarray(obs))
+        q = net.batch(params_ref[0], jnp.asarray(obs))
         return epsilon_greedy_batch(q, mask, eps, lane_rngs), {}
 
     obs = venv.reset()
@@ -170,5 +174,8 @@ def train_apex(
         recent = finished[-5 * n:]
         rewards.append(float(np.mean(recent)) if recent else 0.0)
         times.append(time.perf_counter() - t_start)
-    return TrainResult("apex_dqn", params_ref[0], make_act(params_ref),
-                       rewards, times, extra={"updates": updates})
+    return TrainResult("apex_dqn", params_ref[0],
+                       make_masked_act(make_score_fn(net))(params_ref),
+                       rewards, times, extra={"updates": updates},
+                       meta=checkpoint_meta("dueling", enc_cfg, venv.actions,
+                                            venv.state_dim))

@@ -10,15 +10,17 @@ winner) extends this with prioritized replay, n-step returns and the
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .encoders import (EncoderConfig, build_network, checkpoint_meta,
+                       get_encoder, make_score_fn)
 from .env import LoopTuneEnv
-from .networks import mlp_apply, mlp_batch, mlp_init
+from .networks import masked_logits
 from .replay import ReplayBuffer
 from .rl_common import (TrainResult, collect_vec_rollout, epsilon_greedy_batch,
                         make_masked_act)
@@ -28,6 +30,7 @@ from .vec_env import VecLoopTuneEnv
 @dataclass
 class DQNConfig:
     hidden: Tuple[int, ...] = (256, 256)
+    encoder: EncoderConfig = field(default_factory=EncoderConfig)
     lr: float = 1e-3
     gamma: float = 0.99
     batch_size: int = 64
@@ -43,21 +46,21 @@ class DQNConfig:
     seed: int = 0
 
 
-def make_update_fn(cfg: DQNConfig):
-    """Jitted Q-learning update; returns (loss, td_errors, new_params, new_opt)."""
+def make_update_fn(cfg: DQNConfig, q_apply):
+    """Jitted Q-learning update over the encoder network's ``q_apply``;
+    returns (loss, td_errors, new_params, new_opt)."""
 
     def q_loss(params, target_params, batch, weights):
         s, a, r, s2, done, mask2, disc = batch
-        q = mlp_apply(params, s)
+        q = q_apply(params, s)
         q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
-        q2_online = mlp_apply(params, s2)
-        q2_target = mlp_apply(target_params, s2)
-        q2_online = jnp.where(mask2, q2_online, -jnp.inf)
+        q2_online = masked_logits(q_apply(params, s2), mask2)
+        q2_target = q_apply(target_params, s2)
         if cfg.double:
             a2 = jnp.argmax(q2_online, axis=1)
             q2 = jnp.take_along_axis(q2_target, a2[:, None], axis=1)[:, 0]
         else:
-            q2 = jnp.max(jnp.where(mask2, q2_target, -jnp.inf), axis=1)
+            q2 = jnp.max(masked_logits(q2_target, mask2), axis=1)
         target = r + disc * (1.0 - done) * q2
         td = q_sa - jax.lax.stop_gradient(target)
         # Huber
@@ -89,11 +92,6 @@ def adam_init(params):
     return (z, jax.tree.map(jnp.copy, z), jnp.zeros((), jnp.int32))
 
 
-# greedy act() over a mutable params holder; single obs (D,) -> int,
-# batch (N, D) -> (N,) ints
-make_act = make_masked_act(lambda p, o: mlp_batch(p, jnp.asarray(o)))
-
-
 def train_dqn(
     env: Union[LoopTuneEnv, VecLoopTuneEnv],
     n_iterations: int = 300,
@@ -104,15 +102,19 @@ def train_dqn(
     episode (paper: 'the optimizer applies the episode of 10 actions and
     updates the neural network'), then the learner consumes the batch."""
     cfg = cfg or DQNConfig()
-    venv = VecLoopTuneEnv.ensure(env, cfg.n_envs, seed=cfg.seed)
+    enc_cfg = cfg.encoder.resolved(cfg.hidden)
+    venv = VecLoopTuneEnv.ensure(
+        env, cfg.n_envs, seed=cfg.seed,
+        featurizer=get_encoder(enc_cfg.kind).featurizer(enc_cfg))
+    net = build_network("q", enc_cfg, venv.n_actions)
     n = venv.n_envs
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
-    params = mlp_init(key, [venv.state_dim, *cfg.hidden, venv.n_actions])
+    params = net.init(key)
     target = jax.tree.map(jnp.copy, params)
     opt = adam_init(params)
     buf = ReplayBuffer(cfg.buffer_size, venv.state_dim)
-    update = make_update_fn(cfg)
+    update = make_update_fn(cfg, net.apply)
     params_ref = [params]
 
     steps_seen = [0]
@@ -120,7 +122,7 @@ def train_dqn(
     def policy(obs, mask):
         eps = cfg.eps_end + (cfg.eps_start - cfg.eps_end) * max(
             0.0, 1.0 - steps_seen[0] / cfg.eps_decay_steps)
-        q = mlp_batch(params_ref[0], jnp.asarray(obs))
+        q = net.batch(params_ref[0], jnp.asarray(obs))
         steps_seen[0] += n
         return epsilon_greedy_batch(q, mask, eps, rng), {}
 
@@ -159,5 +161,8 @@ def train_dqn(
         new_eps = finished[n_done_before:]
         rewards.append(float(np.mean(new_eps)) if new_eps else 0.0)
         times.append(time.perf_counter() - t_start)
-    return TrainResult("dqn", params_ref[0], make_act(params_ref),
-                       rewards, times, extra={"updates": updates})
+    return TrainResult("dqn", params_ref[0],
+                       make_masked_act(make_score_fn(net))(params_ref),
+                       rewards, times, extra={"updates": updates},
+                       meta=checkpoint_meta("q", enc_cfg, venv.actions,
+                                            venv.state_dim))

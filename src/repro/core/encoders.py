@@ -1,0 +1,271 @@
+"""Pluggable policy-encoder registry (paper §III-C/D, graph representation).
+
+Every trainer used to hardcode one of three fixed MLP families over the
+flat feature vector (``networks.py``).  This module abstracts "how the
+state becomes network input" behind an :class:`EncoderConfig` + registry:
+
+* ``flat`` — the pre-refactor MLPs, *bit-for-bit*: same init RNG
+  consumption, same forward math, same jitted batch appliers.  Default.
+* ``graph`` — a masked message-passing encoder over the packed graph
+  observation (``graph_features.py``): per-node embeddings updated over
+  typed adjacency (nest-order / same-iterator / membership edges), masked
+  mean-pooled into a fixed embedding, with the usual Q / dueling /
+  actor-critic head on top.  Permutation-robust (padding and node order
+  cannot leak) and depth-agnostic (any ``max_loops``).
+
+``build_network(head, cfg, n_actions)`` returns a :class:`Network` whose
+``init/apply/batch`` the trainers use in place of direct ``mlp_*`` /
+``dueling_*`` / ``actor_critic_*`` calls; ``cfg.to_dict()`` rides in every
+checkpoint (``rl_common.TrainResult.meta``) so ``LoopTuner.from_checkpoint``
+rebuilds the exact network + featurizer without guessing.
+
+Register a custom encoder with :func:`register_encoder` — it becomes
+selectable from every trainer config and every checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .actions import Action
+from .features import FEATS_PER_LOOP, MAX_LOOPS
+from .graph_features import (GRAPH_MAX_LOOPS, FlatFeaturizer, GraphFeaturizer,
+                             N_EDGE_TYPES, build_adjacency, packed_dim,
+                             unpack_graph)
+from .networks import (actor_critic_apply, actor_critic_batch,
+                       actor_critic_init, dueling_apply, dueling_batch,
+                       dueling_init, mlp_apply, mlp_batch, mlp_init)
+
+HEADS = ("q", "dueling", "actor_critic")
+DEFAULT_HIDDEN = (256, 256)
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Serializable spec of the state encoder a policy was built with.
+
+    ``hidden``/``max_loops`` default to None meaning "resolve from the
+    trainer's ``hidden`` and the encoder's own default" — call
+    :meth:`resolved` (idempotent) before building networks or featurizers.
+    """
+
+    kind: str = "flat"
+    hidden: Optional[Tuple[int, ...]] = None  # head MLP widths
+    max_loops: Optional[int] = None           # featurizer capacity
+    embed_dim: int = 64                       # graph: node/pooled embedding
+    n_rounds: int = 2                         # graph: message-passing rounds
+
+    def resolved(self, hidden: Sequence[int] = DEFAULT_HIDDEN) -> "EncoderConfig":
+        return replace(
+            self,
+            hidden=tuple(self.hidden) if self.hidden else tuple(hidden),
+            max_loops=self.max_loops or get_encoder(self.kind).default_max_loops,
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["hidden"] = list(self.hidden) if self.hidden else None
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "EncoderConfig":
+        return cls(
+            kind=d.get("kind", "flat"),
+            hidden=tuple(d["hidden"]) if d.get("hidden") else None,
+            max_loops=d.get("max_loops"),
+            embed_dim=int(d.get("embed_dim", 64)),
+            n_rounds=int(d.get("n_rounds", 2)),
+        )
+
+
+@dataclass(frozen=True)
+class Network:
+    """One policy network: parameter factory + (jitted) appliers."""
+
+    head: str
+    config: EncoderConfig
+    init: Callable[[jax.Array], Any]
+    apply: Callable[[Any, jax.Array], Any]  # used inside trainer loss fns
+    batch: Callable[[Any, jax.Array], Any]  # jitted batched applier
+
+
+class FlatEncoder:
+    """The pre-refactor flat-MLP family, behavior-preserving.
+
+    ``init`` consumes the PRNG key exactly like the old direct
+    ``mlp_init``/``dueling_init``/``actor_critic_init`` calls and ``batch``
+    IS the old module-level jitted applier, so flat-encoder training runs
+    are bit-identical to the pre-registry code."""
+
+    kind = "flat"
+    default_max_loops = MAX_LOOPS
+
+    def featurizer(self, cfg: EncoderConfig) -> FlatFeaturizer:
+        return FlatFeaturizer(cfg.max_loops or self.default_max_loops)
+
+    def state_dim(self, cfg: EncoderConfig) -> int:
+        return (cfg.max_loops or self.default_max_loops) * FEATS_PER_LOOP
+
+    def make_network(self, head: str, cfg: EncoderConfig,
+                     n_actions: int) -> Network:
+        d, hid = self.state_dim(cfg), list(cfg.hidden)
+        if head == "q":
+            return Network(head, cfg,
+                           lambda key: mlp_init(key, [d, *hid, n_actions]),
+                           mlp_apply, mlp_batch)
+        if head == "dueling":
+            return Network(head, cfg,
+                           lambda key: dueling_init(key, d, hid, n_actions),
+                           dueling_apply, dueling_batch)
+        if head == "actor_critic":
+            return Network(head, cfg,
+                           lambda key: actor_critic_init(key, d, hid, n_actions),
+                           actor_critic_apply, actor_critic_batch)
+        raise ValueError(f"unknown head {head!r} (want one of {HEADS})")
+
+
+def _linear_init(key, fan_in: int, fan_out: int) -> Dict[str, jax.Array]:
+    return mlp_init(key, [fan_in, fan_out])[0]
+
+
+class GraphEncoder:
+    """Masked message passing over the typed loop-nest graph.
+
+    Per round: ``h_i <- relu(h_i W_self + sum_e (A_e_norm h)_i W_e + b)``,
+    with degree-normalized adjacency per edge type and padding nodes zeroed
+    after every round; the graph embedding is the masked mean of the final
+    node states.  Everything downstream (Q / dueling / actor-critic head)
+    is the standard MLP machinery over that embedding."""
+
+    kind = "graph"
+    default_max_loops = GRAPH_MAX_LOOPS
+
+    def featurizer(self, cfg: EncoderConfig) -> GraphFeaturizer:
+        return GraphFeaturizer(cfg.max_loops or self.default_max_loops)
+
+    def state_dim(self, cfg: EncoderConfig) -> int:
+        return packed_dim(cfg.max_loops or self.default_max_loops)
+
+    def trunk_init(self, key, cfg: EncoderConfig):
+        e = cfg.embed_dim
+        keys = jax.random.split(key, 1 + 2 * cfg.n_rounds)
+        rounds = []
+        for r in range(cfg.n_rounds):
+            k_self, k_edge = keys[1 + 2 * r], keys[2 + 2 * r]
+            rounds.append({
+                "self": _linear_init(k_self, e, e),
+                "edge": jax.random.normal(
+                    k_edge, (N_EDGE_TYPES, e, e), jnp.float32)
+                * jnp.sqrt(2.0 / (N_EDGE_TYPES * e)),
+            })
+        return {"embed": _linear_init(keys[0], FEATS_PER_LOOP, e),
+                "rounds": rounds}
+
+    def trunk_apply(self, params, cfg: EncoderConfig, x: jax.Array) -> jax.Array:
+        m = cfg.max_loops or self.default_max_loops
+        nodes, mask, section, iter_id, pos = unpack_graph(x, m)
+        adj = build_adjacency(mask, section, iter_id, pos, jnp)
+        adj = adj / jnp.maximum(adj.sum(-1, keepdims=True), 1.0)
+        keep = mask[..., None]
+        h = jax.nn.relu(
+            nodes @ params["embed"]["w"] + params["embed"]["b"]) * keep
+        for layer in params["rounds"]:
+            msg = jnp.einsum("...eij,...jd,edk->...ik", adj, h, layer["edge"])
+            h = jax.nn.relu(
+                h @ layer["self"]["w"] + msg + layer["self"]["b"]) * keep
+        denom = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+        return (h * keep).sum(-2) / denom  # (..., embed_dim) masked mean
+
+    def make_network(self, head: str, cfg: EncoderConfig,
+                     n_actions: int) -> Network:
+        e, hid = cfg.embed_dim, list(cfg.hidden)
+        if head == "q":
+            head_init = lambda k: mlp_init(k, [e, *hid, n_actions])  # noqa: E731
+            head_apply = mlp_apply
+        elif head == "dueling":
+            head_init = lambda k: dueling_init(k, e, hid, n_actions)  # noqa: E731
+            head_apply = dueling_apply
+        elif head == "actor_critic":
+            head_init = lambda k: actor_critic_init(k, e, hid, n_actions)  # noqa: E731
+            head_apply = actor_critic_apply
+        else:
+            raise ValueError(f"unknown head {head!r} (want one of {HEADS})")
+
+        def init(key):
+            k_enc, k_head = jax.random.split(key)
+            return {"enc": self.trunk_init(k_enc, cfg),
+                    "head": head_init(k_head)}
+
+        def apply(params, x):
+            return head_apply(params["head"],
+                              self.trunk_apply(params["enc"], cfg, x))
+
+        return Network(head, cfg, init, apply, jax.jit(apply))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_ENCODERS: Dict[str, Any] = {}
+
+
+def register_encoder(encoder) -> Any:
+    """Register an encoder instance under its ``.kind``; returns it."""
+    _ENCODERS[encoder.kind] = encoder
+    return encoder
+
+
+def get_encoder(kind: str):
+    try:
+        return _ENCODERS[kind]
+    except KeyError:
+        raise KeyError(
+            f"unknown encoder kind {kind!r}; registered: {sorted(_ENCODERS)}"
+        ) from None
+
+
+register_encoder(FlatEncoder())
+register_encoder(GraphEncoder())
+
+
+def build_network(head: str, cfg: EncoderConfig, n_actions: int) -> Network:
+    """Resolve ``cfg`` and build the (head, encoder) network."""
+    cfg = cfg.resolved(cfg.hidden or DEFAULT_HIDDEN)
+    return get_encoder(cfg.kind).make_network(head, cfg, n_actions)
+
+
+def make_score_fn(net: Network):
+    """Batched ``(params, obs (N, D)) -> scores (N, A)`` for masked acting —
+    Q-values for value heads, logits for actor-critic."""
+    if net.head == "actor_critic":
+        return lambda p, o: net.batch(p, jnp.asarray(o))[0]
+    return lambda p, o: net.batch(p, jnp.asarray(o))
+
+
+def make_policy_act(head: str, cfg: EncoderConfig, n_actions: int = 0):
+    """``make_act(params_ref)`` factory for a (head, encoder) pair — what
+    the tuner uses to rebuild greedy acting straight from checkpoint
+    metadata (``n_actions`` only matters if you call ``init``)."""
+    from .rl_common import make_masked_act
+
+    return make_masked_act(make_score_fn(build_network(head, cfg, n_actions)))
+
+
+def checkpoint_meta(head: str, cfg: EncoderConfig,
+                    actions: Sequence[Action], state_dim: int) -> Dict[str, Any]:
+    """The metadata every trainer embeds in its checkpoints so acting can be
+    reconstructed without assuming defaults: network head, encoder config,
+    and the exact action space (names + split factors)."""
+    return {
+        "head": head,
+        "encoder": cfg.to_dict(),
+        "n_actions": len(actions),
+        "actions": [a.name for a in actions],
+        "splits": [a.param for a in actions if a.kind == "split"],
+        "state_dim": int(state_dim),
+    }

@@ -13,12 +13,12 @@ never re-measure.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from .actions import Action, apply_action, build_action_space, legal_mask
-from .features import STATE_DIM, encode, normalize
+from .graph_features import FlatFeaturizer
 from .loop_ir import Contraction, LoopNest
 from .schedule_cache import DEFAULT_CAPACITY, ScheduleCache
 
@@ -35,12 +35,18 @@ class LoopTuneEnv:
         seed: int = 0,
         cache_size: int = DEFAULT_CAPACITY,
         cache: Optional[ScheduleCache] = None,
+        featurizer=None,
     ):
         self.benchmarks = list(benchmarks)
         self.backend = backend
         self.actions = list(actions) if actions is not None else build_action_space()
         self.episode_len = episode_len
         self.rng = np.random.default_rng(seed)
+        # how the nest becomes the observation vector: FlatFeaturizer (the
+        # paper's MAX_LOOPS x 20 flattening, the default) or GraphFeaturizer
+        # (packed graph obs for the message-passing encoder) — see
+        # graph_features.py; the policy's EncoderConfig dictates the choice
+        self.featurizer = featurizer if featurizer is not None else FlatFeaturizer()
         self.cache = cache if cache is not None else ScheduleCache(cache_size)
         self.peak = backend.peak()
         self.nest: Optional[LoopNest] = None
@@ -69,7 +75,7 @@ class LoopTuneEnv:
 
     @property
     def state_dim(self) -> int:
-        return STATE_DIM
+        return self.featurizer.state_dim
 
     def reset(self, benchmark_idx: Optional[int] = None) -> np.ndarray:
         if benchmark_idx is None:
@@ -81,7 +87,7 @@ class LoopTuneEnv:
         return self.observe()
 
     def observe(self) -> np.ndarray:
-        return normalize(encode(self.nest))
+        return self.featurizer(self.nest)
 
     def action_mask(self) -> np.ndarray:
         return np.asarray(legal_mask(self.nest, self.actions), dtype=bool)

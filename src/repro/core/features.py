@@ -39,21 +39,23 @@ def loop_features(nest: LoopNest, idx: int) -> np.ndarray:
     return row
 
 
-def encode(nest: LoopNest) -> np.ndarray:
-    """Flatten the nest to the fixed-size state vector."""
-    out = np.zeros((MAX_LOOPS, FEATS_PER_LOOP), dtype=np.float32)
-    for i in range(min(len(nest.loops), MAX_LOOPS)):
+def encode(nest: LoopNest, max_loops: int = MAX_LOOPS) -> np.ndarray:
+    """Flatten the nest to the fixed-size state vector (``max_loops`` rows;
+    deeper nests are silently truncated — the graph path in
+    ``graph_features.py`` is the depth-agnostic alternative)."""
+    out = np.zeros((max_loops, FEATS_PER_LOOP), dtype=np.float32)
+    for i in range(min(len(nest.loops), max_loops)):
         out[i] = loop_features(nest, i)
     return out.reshape(-1)
 
 
-def normalize(state: np.ndarray) -> np.ndarray:
+def normalize(state: np.ndarray, max_loops: int = MAX_LOOPS) -> np.ndarray:
     """Squash unbounded size/tail features with log1p for NN stability.
 
     (The paper feeds raw integers to RLlib, which normalizes internally; we
     make the normalization explicit since our trainers are from scratch.)
     """
-    s = state.reshape(MAX_LOOPS, FEATS_PER_LOOP).copy()
+    s = state.reshape(max_loops, FEATS_PER_LOOP).copy()
     s[:, 1] = np.log1p(s[:, 1])
     s[:, 2] = np.log1p(s[:, 2])
     return s.reshape(-1)

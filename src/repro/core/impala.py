@@ -8,14 +8,16 @@ the learner corrects the off-policy-ness with V-trace importance weights.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .networks import actor_critic_apply, actor_critic_batch, actor_critic_init
+from .encoders import (EncoderConfig, build_network, checkpoint_meta,
+                       get_encoder, make_score_fn)
+from .networks import MASK_SENTINEL, masked_logits
 from .rl_common import (TrainResult, collect_vec_rollout, make_masked_act,
                         sample_masked)
 from .vec_env import VecLoopTuneEnv
@@ -24,6 +26,7 @@ from .vec_env import VecLoopTuneEnv
 @dataclass
 class ImpalaConfig:
     hidden: Tuple[int, ...] = (256, 256)
+    encoder: EncoderConfig = field(default_factory=EncoderConfig)
     lr: float = 3e-4
     gamma: float = 0.99
     n_envs: int = 8
@@ -57,11 +60,11 @@ def vtrace(behavior_logp, target_logp, rewards, values, dones, bootstrap,
     return vs, pg_adv
 
 
-def make_update_fn(cfg: ImpalaConfig):
+def make_update_fn(cfg: ImpalaConfig, ac_apply):
     def loss_fn(params, batch):
         s, a, vs, pg_adv, mask = batch
-        logits, value = actor_critic_apply(params, s)
-        logits = jnp.where(mask, logits, -1e9)
+        logits, value = ac_apply(params, s)
+        logits = masked_logits(logits, mask)
         logp_all = jax.nn.log_softmax(logits)
         logp = jnp.take_along_axis(logp_all, a[:, None], 1)[:, 0]
         pg = -(logp * pg_adv).mean()
@@ -93,9 +96,6 @@ def make_update_fn(cfg: ImpalaConfig):
     return update
 
 
-make_act = make_masked_act(lambda p, o: actor_critic_batch(p, jnp.asarray(o))[0])
-
-
 def train_impala(env_factory, n_iterations: int = 300,
                  cfg: Optional[ImpalaConfig] = None) -> TrainResult:
     """Stale-policy actors run as vectorized lanes.  ``env_factory`` is
@@ -103,20 +103,23 @@ def train_impala(env_factory, n_iterations: int = 300,
     differentiated by per-lane rng seeds ``cfg.seed + lane``, sharing the
     env's benchmarks/backend/cache) or return a ready VecLoopTuneEnv."""
     cfg = cfg or ImpalaConfig()
+    enc_cfg = cfg.encoder.resolved(cfg.hidden)
     rng = np.random.default_rng(cfg.seed)
-    venv = VecLoopTuneEnv.ensure(env_factory(0), cfg.n_envs, seed=cfg.seed)
+    venv = VecLoopTuneEnv.ensure(
+        env_factory(0), cfg.n_envs, seed=cfg.seed,
+        featurizer=get_encoder(enc_cfg.kind).featurizer(enc_cfg))
+    net = build_network("actor_critic", enc_cfg, venv.n_actions)
     n_envs = venv.n_envs
-    params = actor_critic_init(jax.random.PRNGKey(cfg.seed), venv.state_dim,
-                               list(cfg.hidden), venv.n_actions)
+    params = net.init(jax.random.PRNGKey(cfg.seed))
     actor_params = jax.tree.map(jnp.copy, params)  # the stale behavior policy
     opt = (jax.tree.map(jnp.zeros_like, params),
            jax.tree.map(jnp.zeros_like, params),
            jnp.zeros((), jnp.int32))
-    update = make_update_fn(cfg)
+    update = make_update_fn(cfg, net.apply)
     params_ref = [params]
 
     def policy(obs, mask):
-        logits, _ = actor_critic_batch(actor_params, jnp.asarray(obs))
+        logits, _ = net.batch(actor_params, jnp.asarray(obs))
         a, logp = sample_masked(np.asarray(logits), mask, rng)
         return a, {"logp": logp}
 
@@ -137,9 +140,9 @@ def train_impala(env_factory, n_iterations: int = 300,
         R, D, BLP = batch.rewards, batch.dones, batch.aux["logp"]
         # learner: evaluate target policy on the rollout, V-trace correct
         flatS = batch.flat(S)
-        logits_t, values_t = actor_critic_batch(params_ref[0], jnp.asarray(flatS))
+        logits_t, values_t = net.batch(params_ref[0], jnp.asarray(flatS))
         logits_t = np.array(logits_t).reshape(t_len, n, -1)  # writable copy
-        logits_t[~M] = -np.inf
+        logits_t[~M] = MASK_SENTINEL
         z = logits_t - logits_t.max(-1, keepdims=True)
         p_t = np.exp(z) / np.exp(z).sum(-1, keepdims=True)
         tlp = np.log(np.maximum(
@@ -147,12 +150,15 @@ def train_impala(env_factory, n_iterations: int = 300,
             1e-12))
         values_t = np.asarray(values_t).reshape(t_len, n)
         boot = np.asarray(
-            actor_critic_batch(params_ref[0], jnp.asarray(obs))[1], np.float32)
+            net.batch(params_ref[0], jnp.asarray(obs))[1], np.float32)
         vs, pg_adv = vtrace(BLP, tlp.astype(np.float32), R, values_t, D, boot,
                             cfg.gamma, cfg.rho_bar, cfg.c_bar)
         data = tuple(jnp.asarray(batch.flat(x)) for x in (S, A, vs, pg_adv, M))
         params_ref[0], opt, _ = update(params_ref[0], opt, data)
         rewards_log.append(float(np.mean(finished[-20:])) if finished else 0.0)
         times.append(time.perf_counter() - t_start)
-    return TrainResult("impala", params_ref[0], make_act(params_ref),
-                       rewards_log, times)
+    return TrainResult("impala", params_ref[0],
+                       make_masked_act(make_score_fn(net))(params_ref),
+                       rewards_log, times,
+                       meta=checkpoint_meta("actor_critic", enc_cfg,
+                                            venv.actions, venv.state_dim))

@@ -65,16 +65,30 @@ def actor_critic_apply(params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     return logits, value
 
 
-# jitted batched appliers shared by the trainers' rollout/act paths
+# jitted batched appliers shared by the flat-encoder rollout/act paths
+# (the encoder registry in encoders.py hands these out as the flat
+# Network.batch; graph networks get their own jitted composite)
 mlp_batch = jax.jit(mlp_apply)
 dueling_batch = jax.jit(dueling_apply)
 actor_critic_batch = jax.jit(actor_critic_apply)
 
+# The one masking sentinel, everywhere.  A finite fill (not -inf) so that a
+# fully-masked row degrades to a uniform softmax instead of NaN
+# probabilities, while exp(MASK_SENTINEL - max_legal) underflows to exactly
+# 0 whenever at least one action is legal — so sampling and argmax are
+# unchanged on every reachable state.
+MASK_SENTINEL = -1e9
+
+
+def masked_fill(x, mask):
+    """``x`` where ``mask`` else the sentinel (numpy and jax arrays alike)."""
+    return jnp.where(mask, x, MASK_SENTINEL) if isinstance(
+        x, jax.Array) else np.where(mask, x, MASK_SENTINEL)
+
 
 def masked_argmax(q: np.ndarray, mask: np.ndarray) -> int:
-    q = np.where(mask, q, -np.inf)
-    return int(np.argmax(q))
+    return int(np.argmax(np.where(mask, q, MASK_SENTINEL)))
 
 
 def masked_logits(logits: jax.Array, mask: jax.Array) -> jax.Array:
-    return jnp.where(mask, logits, -1e9)
+    return jnp.where(mask, logits, MASK_SENTINEL)

@@ -8,14 +8,16 @@ action space, sampled from one batched network call per step.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .networks import actor_critic_apply, actor_critic_batch, actor_critic_init
+from .encoders import (EncoderConfig, build_network, checkpoint_meta,
+                       get_encoder, make_score_fn)
+from .networks import masked_logits
 from .rl_common import (TrainResult, collect_vec_rollout, make_masked_act,
                         sample_masked)
 from .vec_env import VecLoopTuneEnv
@@ -24,6 +26,7 @@ from .vec_env import VecLoopTuneEnv
 @dataclass
 class PPOConfig:
     hidden: Tuple[int, ...] = (256, 256)
+    encoder: EncoderConfig = field(default_factory=EncoderConfig)
     lr: float = 3e-4
     gamma: float = 0.99
     lam: float = 0.95
@@ -38,11 +41,11 @@ class PPOConfig:
     seed: int = 0
 
 
-def make_update_fn(cfg: PPOConfig):
+def make_update_fn(cfg: PPOConfig, ac_apply):
     def loss_fn(params, batch):
         s, a, logp_old, adv, ret, mask = batch
-        logits, value = actor_critic_apply(params, s)
-        logits = jnp.where(mask, logits, -1e9)
+        logits, value = ac_apply(params, s)
+        logits = masked_logits(logits, mask)
         logp_all = jax.nn.log_softmax(logits)
         logp = jnp.take_along_axis(logp_all, a[:, None], 1)[:, 0]
         ratio = jnp.exp(logp - logp_old)
@@ -79,9 +82,6 @@ def make_update_fn(cfg: PPOConfig):
     return update
 
 
-make_act = make_masked_act(lambda p, o: actor_critic_batch(p, jnp.asarray(o))[0])
-
-
 def gae(rewards, values, dones, last_value, gamma, lam):
     """rewards/values/dones: (T, N).  Returns (advantages, returns)."""
     t_len, n = rewards.shape
@@ -107,20 +107,23 @@ def train_ppo(
     differentiated by per-lane rng seeds ``cfg.seed + lane``, sharing the
     env's benchmarks/backend/cache) or return a ready VecLoopTuneEnv."""
     cfg = cfg or PPOConfig()
+    enc_cfg = cfg.encoder.resolved(cfg.hidden)
     rng = np.random.default_rng(cfg.seed)
-    venv = VecLoopTuneEnv.ensure(env_factory(0), cfg.n_envs, seed=cfg.seed)
+    venv = VecLoopTuneEnv.ensure(
+        env_factory(0), cfg.n_envs, seed=cfg.seed,
+        featurizer=get_encoder(enc_cfg.kind).featurizer(enc_cfg))
+    net = build_network("actor_critic", enc_cfg, venv.n_actions)
     n_envs = venv.n_envs
     key = jax.random.PRNGKey(cfg.seed)
-    params = actor_critic_init(key, venv.state_dim, list(cfg.hidden),
-                               venv.n_actions)
+    params = net.init(key)
     opt = (jax.tree.map(jnp.zeros_like, params),
            jax.tree.map(jnp.zeros_like, params),
            jnp.zeros((), jnp.int32))
-    update = make_update_fn(cfg)
+    update = make_update_fn(cfg, net.apply)
     params_ref = [params]
 
     def policy(obs, mask):
-        logits, value = actor_critic_batch(params_ref[0], jnp.asarray(obs))
+        logits, value = net.batch(params_ref[0], jnp.asarray(obs))
         a, logp = sample_masked(np.asarray(logits), mask, rng)
         return a, {"logp": logp,
                    "value": np.asarray(value, np.float32)}
@@ -137,7 +140,7 @@ def train_ppo(
                                     finished)
         obs = batch.final_obs
         last_v = np.asarray(
-            actor_critic_batch(params_ref[0], jnp.asarray(obs))[1], np.float32)
+            net.batch(params_ref[0], jnp.asarray(obs))[1], np.float32)
         adv, ret = gae(batch.rewards, batch.aux["value"], batch.dones, last_v,
                        cfg.gamma, cfg.lam)
 
@@ -154,5 +157,8 @@ def train_ppo(
                 params_ref[0], opt, loss = update(params_ref[0], opt, minibatch)
         rewards_log.append(float(np.mean(finished[-20:])) if finished else 0.0)
         times.append(time.perf_counter() - t_start)
-    return TrainResult("ppo", params_ref[0], make_act(params_ref),
-                       rewards_log, times)
+    return TrainResult("ppo", params_ref[0],
+                       make_masked_act(make_score_fn(net))(params_ref),
+                       rewards_log, times,
+                       meta=checkpoint_meta("actor_critic", enc_cfg,
+                                            venv.actions, venv.state_dim))

@@ -19,7 +19,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .env import LoopTuneEnv
-from .loop_ir import Contraction, LoopNest
+from .loop_ir import LoopNest
+from .networks import masked_fill
 from .vec_env import VecLoopTuneEnv
 
 # act(obs, mask, greedy) -> action index.  Every trainer's act() also accepts
@@ -39,6 +40,10 @@ class TrainResult:
     rewards: List[float] = field(default_factory=list)  # episode_reward_mean / iter
     times: List[float] = field(default_factory=list)    # wall-clock per iter
     extra: Dict[str, Any] = field(default_factory=dict)
+    # checkpoint metadata: head, encoder config, action space (see
+    # encoders.checkpoint_meta) — everything from_checkpoint needs to
+    # rebuild acting without assuming defaults
+    meta: Dict[str, Any] = field(default_factory=dict)
 
     def save(self, path: str) -> None:
         import jax
@@ -47,13 +52,22 @@ class TrainResult:
             pickle.dump(
                 {"algo": self.algo,
                  "params": jax.tree.map(np.asarray, self.params),
-                 "rewards": self.rewards},
+                 "rewards": self.rewards,
+                 "meta": self.meta},
                 f)
 
 
-def load_params(path: str) -> Tuple[str, Any]:
+def load_checkpoint(path: str) -> Dict[str, Any]:
+    """Full checkpoint dict: algo, params, rewards, meta (``meta`` is empty
+    for pre-metadata checkpoints, which load fine with flat defaults)."""
     with open(path, "rb") as f:
         d = pickle.load(f)
+    d.setdefault("meta", {})
+    return d
+
+
+def load_params(path: str) -> Tuple[str, Any]:
+    d = load_checkpoint(path)
     return d["algo"], d["params"]
 
 
@@ -149,9 +163,9 @@ def make_masked_act(score_fn) -> Callable[[list], ActFn]:
             obs = np.asarray(obs)
             if obs.ndim == 1:
                 q = np.asarray(score_fn(params_ref[0], obs[None]))[0]
-                return int(np.argmax(np.where(mask, q, -np.inf)))
+                return int(np.argmax(masked_fill(q, mask)))
             q = np.asarray(score_fn(params_ref[0], obs))
-            return np.argmax(np.where(mask, q, -np.inf), axis=1)
+            return np.argmax(masked_fill(q, mask), axis=1)
 
         return act
 
@@ -170,7 +184,7 @@ def epsilon_greedy_batch(
     a per-lane sequence (APEX ladder).  Returns (N,) int32 actions."""
     q = np.asarray(q)
     n = len(q)
-    a = np.argmax(np.where(mask, q, -np.inf), axis=1).astype(np.int32)
+    a = np.argmax(masked_fill(q, mask), axis=1).astype(np.int32)
     eps_arr = np.broadcast_to(np.asarray(eps, np.float64), (n,))
     rngs = rng if isinstance(rng, (list, tuple)) else [rng] * n
     for i in range(n):
@@ -183,13 +197,17 @@ def sample_masked(
     logits: np.ndarray, mask: np.ndarray, rng: np.random.Generator
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Sample one action per row from the masked softmax of ``logits``
-    (N, A); returns ``(actions (N,) int32, log_probs (N,) float32)``."""
+    (N, A); returns ``(actions (N,) int32, log_probs (N,) float32)``.
+
+    Masked entries get the shared finite ``MASK_SENTINEL`` (not -inf): with
+    any legal action present their probability underflows to exactly 0, and
+    a fully-masked row degrades to a uniform draw instead of NaN."""
     logits = np.asarray(logits, np.float64)
     n = logits.shape[0]
     a = np.zeros(n, np.int32)
     logp = np.zeros(n, np.float32)
     for i in range(n):
-        row = np.where(mask[i], logits[i], -np.inf)
+        row = masked_fill(logits[i], mask[i])
         z = row - row.max()
         p = np.exp(z)
         p /= p.sum()

@@ -20,7 +20,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .actions import Action, apply_action, is_legal
+from .actions import apply_action, is_legal
 from .env import LoopTuneEnv
 from .loop_ir import LoopNest
 
@@ -36,10 +36,19 @@ class SearchResult:
     best_nest: Optional[LoopNest] = None
     # best-so-far after each search step (paper Fig. 10 upper)
     trace: List[Tuple[float, float]] = field(default_factory=list)  # (t, gflops)
+    # ScheduleCache traffic attributable to this search (delta of the shared
+    # cache's counters): how much of the frontier was amortized vs measured
+    cache_hits: int = 0
+    cache_misses: int = 0
 
     @property
     def speedup(self) -> float:
         return self.best_gflops / max(self.base_gflops, 1e-9)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
 
 
 class _Budget:
@@ -109,7 +118,14 @@ def _children(env: LoopTuneEnv, nest: LoopNest) -> List[Tuple[int, LoopNest]]:
     return out
 
 
-def _mk_result(name, env, base, best_g, best_seq, best_nest, budget, trace):
+def _cache_counters(env: LoopTuneEnv) -> Tuple[int, int]:
+    """Snapshot (hits, misses) of the env's shared ScheduleCache."""
+    return env.cache.hits, env.cache.misses
+
+
+def _mk_result(name, env, base, best_g, best_seq, best_nest, budget, trace,
+               cache0=(0, 0)):
+    h0, m0 = cache0
     return SearchResult(
         name=name,
         best_gflops=best_g,
@@ -119,6 +135,8 @@ def _mk_result(name, env, base, best_g, best_seq, best_nest, budget, trace):
         time_s=budget.elapsed(),
         best_nest=best_nest,
         trace=trace,
+        cache_hits=env.cache.hits - h0,
+        cache_misses=env.cache.misses - m0,
     )
 
 
@@ -135,6 +153,7 @@ def greedy_search(
     budget_s: float = 60.0,
     max_evals: Optional[int] = None,
 ) -> SearchResult:
+    cache0 = _cache_counters(env)
     env.reset(benchmark_idx)
     base = env.current_gflops
     budget = _Budget(budget_s, max_evals)
@@ -176,7 +195,7 @@ def greedy_search(
             best_g, best_nest, best_seq = cur_g, nest.clone(), list(seq)
         trace.append((budget.elapsed(), best_g))
     return _mk_result(f"greedy{lookahead}", env, base, best_g, best_seq,
-                      best_nest, budget, trace)
+                      best_nest, budget, trace, cache0)
 
 
 # ---------------------------------------------------------------------------
@@ -193,6 +212,7 @@ def beam_search(
     budget_s: float = 60.0,
     max_evals: Optional[int] = None,
 ) -> SearchResult:
+    cache0 = _cache_counters(env)
     env.reset(benchmark_idx)
     base = env.current_gflops
     budget = _Budget(budget_s, max_evals)
@@ -257,7 +277,7 @@ def beam_search(
             # keep the global top width^2 states to bound the frontier
             frontier = [(n, s) for _, n, s in nxt[: width * width]]
     return _mk_result(f"beam{width}{order}", env, base, best_g, best_seq,
-                      best_nest, budget, trace)
+                      best_nest, budget, trace, cache0)
 
 
 # ---------------------------------------------------------------------------
@@ -273,6 +293,7 @@ def random_search(
     max_evals: Optional[int] = None,
     seed: int = 0,
 ) -> SearchResult:
+    cache0 = _cache_counters(env)
     env.reset(benchmark_idx)
     base = env.current_gflops
     budget = _Budget(budget_s, max_evals)
@@ -297,7 +318,7 @@ def random_search(
                 break
         trace.append((budget.elapsed(), best_g))
     return _mk_result("random", env, base, best_g, best_seq, best_nest,
-                      budget, trace)
+                      budget, trace, cache0)
 
 
 # ---------------------------------------------------------------------------

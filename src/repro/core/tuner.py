@@ -16,17 +16,16 @@ records the untuned nest.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
-from .actions import CPU_SPLITS, TPU_SPLITS, build_action_space
+from .actions import CPU_SPLITS, TPU_SPLITS, actions_from_names, build_action_space
 from .cost_model import TPUAnalyticalBackend
 from .cpu_backend import CPUMeasuredBackend
+from .encoders import EncoderConfig, get_encoder, make_policy_act
 from .env import LoopTuneEnv
-from .loop_ir import Contraction, LoopNest, matmul_benchmark
+from .loop_ir import Contraction, matmul_benchmark
 from .registry import ScheduleRegistry
-from .rl_common import ActFn, greedy_rollout, greedy_rollout_vec, load_params
+from .rl_common import ActFn, greedy_rollout, greedy_rollout_vec, load_checkpoint
 from .schedule_cache import ScheduleCache
 from .search import beam_search, greedy_search
 from .vec_env import VecLoopTuneEnv
@@ -40,26 +39,42 @@ def make_backend(kind: str):
     raise ValueError(f"backend {kind!r} (want 'tpu' or 'cpu')")
 
 
-def make_act_from_checkpoint(path: str) -> ActFn:
-    """Rebuild the greedy act() for a saved TrainResult checkpoint."""
+# legacy checkpoints (no meta) carry only the algo name; map it to the
+# network head the trainer used so they keep loading with flat defaults
+_DEFAULT_HEADS = {
+    "dqn": "q",
+    "apex_dqn": "dueling",
+    "ppo": "actor_critic",
+    "a2c": "actor_critic",
+    "impala": "actor_critic",
+}
+
+
+def load_policy(path: str) -> Tuple[ActFn, Dict[str, Any], EncoderConfig]:
+    """Rebuild greedy acting from a checkpoint's embedded metadata.
+
+    Returns ``(act, meta, encoder_config)``.  The metadata (head, encoder
+    config, action space — see ``encoders.checkpoint_meta``) removes all
+    guessing; pre-metadata checkpoints fall back to the per-algo default
+    head and the flat encoder, which is exactly what produced them."""
+    import jax
     import jax.numpy as jnp
 
-    algo, params = load_params(path)
-    if algo in ("dqn",):
-        from .dqn import make_act
-    elif algo in ("apex_dqn",):
-        from .apex_dqn import make_act
-    elif algo == "ppo":
-        from .ppo import make_act
-    elif algo == "a2c":
-        from .a2c import make_act
-    elif algo == "impala":
-        from .impala import make_act
-    else:
+    d = load_checkpoint(path)
+    algo, meta = d["algo"], d["meta"]
+    head = meta.get("head") or _DEFAULT_HEADS.get(algo)
+    if head is None:
         raise ValueError(f"unknown algo {algo!r} in {path}")
-    import jax
+    enc_cfg = (EncoderConfig.from_dict(meta["encoder"])
+               if meta.get("encoder") else EncoderConfig()).resolved()
+    params = jax.tree.map(jnp.asarray, d["params"])
+    act = make_policy_act(head, enc_cfg, meta.get("n_actions", 0))([params])
+    return act, meta, enc_cfg
 
-    return make_act([jax.tree.map(jnp.asarray, params)])
+
+def make_act_from_checkpoint(path: str) -> ActFn:
+    """Rebuild the greedy act() for a saved TrainResult checkpoint."""
+    return load_policy(path)[0]
 
 
 class LoopTuner:
@@ -73,6 +88,7 @@ class LoopTuner:
         episode_len: int = 10,
         policy: str = "policy",  # "policy" | "search" | "default"
         search_budget_s: float = 10.0,
+        featurizer=None,  # None -> env default (flat); set to match the act
     ):
         self.act = act
         self.backend_kind = backend
@@ -81,6 +97,7 @@ class LoopTuner:
         self.episode_len = episode_len
         self.policy = policy if act is not None or policy != "policy" else "search"
         self.search_budget_s = search_budget_s
+        self.featurizer = featurizer
         splits = TPU_SPLITS if backend == "tpu" else CPU_SPLITS
         self.actions = build_action_space(splits)
         # one evaluation cache for every env this tuner creates, so repeated
@@ -89,13 +106,25 @@ class LoopTuner:
 
     @classmethod
     def from_checkpoint(cls, path: str, backend: str = "tpu", **kw) -> "LoopTuner":
-        return cls(act=make_act_from_checkpoint(path), backend=backend, **kw)
+        """Rebuild the exact tuning setup a checkpoint was trained with: the
+        network (head + encoder), the matching observation featurizer, and
+        the trained action space (its split ladder), all from the embedded
+        metadata — no defaults assumed."""
+        act, meta, enc_cfg = load_policy(path)
+        tuner = cls(act=act, backend=backend, **kw)
+        tuner.featurizer = get_encoder(enc_cfg.kind).featurizer(enc_cfg)
+        if meta.get("actions") is not None:
+            # the full recorded list, not just the split ladder: index i must
+            # mean exactly what the policy's output unit i was trained on
+            tuner.actions = actions_from_names(meta["actions"])
+        return tuner
 
     # ------------------------------------------------------------------
 
     def _env_for(self, bench: Contraction) -> LoopTuneEnv:
         return LoopTuneEnv([bench], self.backend, actions=self.actions,
-                           episode_len=self.episode_len, cache=self.cache)
+                           episode_len=self.episode_len, cache=self.cache,
+                           featurizer=self.featurizer)
 
     def tune(self, bench: Contraction, kernel: str = "mm") -> Dict[str, Any]:
         """Tune one contraction; returns the registry entry."""
@@ -142,7 +171,8 @@ class LoopTuner:
             venv = VecLoopTuneEnv(chunk, self.backend, n_envs=len(chunk),
                                   actions=self.actions,
                                   episode_len=self.episode_len,
-                                  cache=self.cache)
+                                  cache=self.cache,
+                                  featurizer=self.featurizer)
             best_g, names, nests = greedy_rollout_vec(
                 venv, self.act, benchmark_indices=list(range(len(chunk))))
             per_bench_s = (time.perf_counter() - t0) / len(chunk)
@@ -155,6 +185,17 @@ class LoopTuner:
                 entry["base_gflops"] = float(venv.initial_gflops[i])
                 entries.append(entry)
         return entries
+
+    def stats(self) -> Dict[str, Any]:
+        """Observability: tuned-schedule count plus the shared evaluation
+        cache's hit/miss/eviction counters (how much the batched-eval
+        substrate is actually amortizing)."""
+        return {
+            "policy": self.policy,
+            "backend": self.backend_kind,
+            "registry_size": len(self.registry),
+            "cache": self.cache.stats(),
+        }
 
     def save(self, path: str) -> None:
         self.registry.save(path)

@@ -21,7 +21,7 @@ import numpy as np
 
 from .actions import Action, apply_action, build_action_space, legal_mask
 from .env import DEFAULT_EPISODE_LEN, LoopTuneEnv
-from .features import STATE_DIM, encode, normalize
+from .graph_features import FlatFeaturizer
 from .loop_ir import Contraction, LoopNest
 from .schedule_cache import DEFAULT_CAPACITY, ScheduleCache
 
@@ -37,6 +37,7 @@ class VecLoopTuneEnv:
         seed: int = 0,
         cache_size: int = DEFAULT_CAPACITY,
         cache: Optional[ScheduleCache] = None,
+        featurizer=None,
     ):
         if n_envs < 1:
             raise ValueError(f"n_envs must be >= 1, got {n_envs}")
@@ -47,6 +48,8 @@ class VecLoopTuneEnv:
         self.episode_len = episode_len
         # lane i draws benchmarks exactly like LoopTuneEnv(seed=seed + i)
         self.rngs = [np.random.default_rng(seed + i) for i in range(n_envs)]
+        # same pluggable observation function as LoopTuneEnv (all lanes share)
+        self.featurizer = featurizer if featurizer is not None else FlatFeaturizer()
         self.cache = cache if cache is not None else ScheduleCache(cache_size)
         self.peak = backend.peak()
         self.nests: List[Optional[LoopNest]] = [None] * n_envs
@@ -55,19 +58,39 @@ class VecLoopTuneEnv:
         self.initial_gflops = np.zeros(n_envs, dtype=np.float64)
 
     @classmethod
-    def from_env(cls, env: LoopTuneEnv, n_envs: int,
-                 seed: int = 0) -> "VecLoopTuneEnv":
+    def from_env(cls, env: LoopTuneEnv, n_envs: int, seed: int = 0,
+                 featurizer=None) -> "VecLoopTuneEnv":
         """Vectorize an existing scalar env: share its benchmarks, backend,
-        action space, episode length and evaluation cache."""
+        action space, episode length and evaluation cache.  ``featurizer``
+        overrides the scalar env's observation function (the trainers pass
+        the one their EncoderConfig demands)."""
         return cls(env.benchmarks, env.backend, n_envs, actions=env.actions,
-                   episode_len=env.episode_len, seed=seed, cache=env.cache)
+                   episode_len=env.episode_len, seed=seed, cache=env.cache,
+                   featurizer=featurizer if featurizer is not None
+                   else env.featurizer)
 
     @classmethod
-    def ensure(cls, env, n_envs: int, seed: int = 0) -> "VecLoopTuneEnv":
-        """Pass a VecLoopTuneEnv through unchanged; vectorize a scalar env."""
+    def ensure(cls, env, n_envs: int, seed: int = 0,
+               featurizer=None) -> "VecLoopTuneEnv":
+        """Pass a VecLoopTuneEnv through unchanged; vectorize a scalar env.
+
+        A demanded ``featurizer`` (what the trainer's EncoderConfig needs)
+        must be compatible with an already-vectorized env's observation
+        format — mutating the caller's env in place would silently break any
+        policy already acting on its old observations, so mismatch is an
+        error: construct the VecLoopTuneEnv with the right ``featurizer=``
+        (or pass a scalar env / factory and let the trainer wrap it)."""
         if isinstance(env, cls):
+            if featurizer is not None and (
+                    featurizer.kind != env.featurizer.kind
+                    or featurizer.state_dim != env.featurizer.state_dim):
+                raise ValueError(
+                    f"env featurizer {env.featurizer!r} does not match the "
+                    f"encoder's required {featurizer!r}; build the "
+                    f"VecLoopTuneEnv with featurizer={featurizer!r} or pass "
+                    f"a scalar env")
             return env
-        return cls.from_env(env, n_envs, seed=seed)
+        return cls.from_env(env, n_envs, seed=seed, featurizer=featurizer)
 
     # -- evaluation -----------------------------------------------------------
 
@@ -85,7 +108,7 @@ class VecLoopTuneEnv:
 
     @property
     def state_dim(self) -> int:
-        return STATE_DIM
+        return self.featurizer.state_dim
 
     @property
     def current_gflops(self) -> np.ndarray:
@@ -136,7 +159,7 @@ class VecLoopTuneEnv:
             self.initial_gflops[i] = g[j]
 
     def observe_lane(self, i: int) -> np.ndarray:
-        return normalize(encode(self.nests[i]))
+        return self.featurizer(self.nests[i])
 
     def observe(self) -> np.ndarray:
         return np.stack([self.observe_lane(i) for i in range(self.n_envs)])

@@ -1,0 +1,338 @@
+"""Graph state representation + encoder registry: featurization invariants,
+flat-encoder parity with the pre-refactor MLPs, mask-sentinel safety, and
+checkpoint-metadata round trips (ISSUE 2 acceptance criteria)."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    EncoderConfig,
+    FlatFeaturizer,
+    GraphFeaturizer,
+    LoopNest,
+    LoopTuneEnv,
+    LoopTuner,
+    TPUAnalyticalBackend,
+    build_network,
+    encode,
+    encode_graph,
+    get_encoder,
+    load_checkpoint,
+    make_act_from_checkpoint,
+    masked_argmax,
+    masked_logits,
+    matmul_benchmark,
+    normalize,
+    packed_dim,
+)
+from repro.core.actions import TPU_SPLITS, build_action_space
+from repro.core.graph_features import LoopGraph, unpack_graph
+from repro.core.networks import dueling_batch, dueling_init, mlp_batch, mlp_init
+from repro.core.rl_common import greedy_rollout, sample_masked
+
+ACTIONS = build_action_space(TPU_SPLITS)
+BENCH = matmul_benchmark(96, 96, 96)
+
+
+def _split_nest(n_extra: int) -> LoopNest:
+    """A matmul nest deepened by ``n_extra`` raw splits (round-robin over
+    whatever compute loops can still be halved)."""
+    nest = LoopNest(matmul_benchmark(512, 512, 512))
+    added = 0
+    i = 0
+    while added < n_extra:
+        if nest.loops[i % len(nest.loops)].count > 2 and nest.in_compute(
+                i % len(nest.loops)):
+            nest.split(i % len(nest.loops), 2)
+            added += 1
+        i += 1
+    return nest
+
+
+# ---------------------------------------------------------------------------
+# Graph featurization invariants
+# ---------------------------------------------------------------------------
+
+
+def test_graph_padding_mask_and_edges():
+    nest = LoopNest(matmul_benchmark(64, 64, 64))  # 3 compute + 2 writeback
+    g = encode_graph(nest, max_loops=8)
+    assert g.mask.tolist() == [1.0] * 5 + [0.0] * 3
+    assert (g.nodes[5:] == 0).all()  # padding rows are all-zero
+    adj = g.adjacency()
+    assert adj.shape == (3, 8, 8)
+    # no edge touches a padding node, no self loops
+    assert (adj[:, 5:, :] == 0).all() and (adj[:, :, 5:] == 0).all()
+    assert (adj[:, range(8), range(8)] == 0).all()
+    # nest-order: compute chain 0-1-2, writeback chain 3-4, no edge across
+    # the section boundary (2-3); all planes symmetric
+    assert adj[0, 0, 1] == 1 and adj[0, 1, 2] == 1 and adj[0, 3, 4] == 1
+    assert adj[0, 2, 3] == 0
+    np.testing.assert_array_equal(adj, np.swapaxes(adj, -1, -2))
+    # fresh nest has no split chains; membership is the per-section clique
+    assert adj[1].sum() == 0
+    assert adj[2].sum() == 3 * 2 + 2 * 1  # 3-clique + 2-clique, directed
+
+
+def test_graph_split_chain_edges():
+    nest = LoopNest(matmul_benchmark(64, 64, 64))
+    nest.split(0, 8)  # m -> m_outer, m_inner at positions 0, 1
+    adj = encode_graph(nest, 8).adjacency()
+    assert adj[1, 0, 1] == 1 and adj[1, 1, 0] == 1  # same-iterator chain
+    assert adj[0, 0, 1] == 1  # also adjacent in nest order
+
+
+def test_graph_overflow_raises_not_truncates():
+    nest = _split_nest(5)  # 10 loops
+    with pytest.raises(ValueError, match="max_loops"):
+        encode_graph(nest, max_loops=8)
+
+
+def test_graph_pack_unpack_roundtrip():
+    nest = LoopNest(matmul_benchmark(96, 112, 128))
+    nest.split(1, 16)
+    g = encode_graph(nest, 12)
+    packed = g.pack()
+    assert packed.shape == (packed_dim(12),) and packed.dtype == np.float32
+    g2 = LoopGraph.unpack(packed, 12)
+    for a, b in zip(
+            (g.nodes, g.mask, g.section, g.iter_id, g.pos),
+            (g2.nodes, g2.mask, g2.section, g2.iter_id, g2.pos)):
+        np.testing.assert_array_equal(a, b)
+    # batched unpack sees the same node block
+    nodes_b, mask_b, *_ = unpack_graph(np.stack([packed, packed]), 12)
+    np.testing.assert_array_equal(nodes_b[0], g.nodes)
+    np.testing.assert_array_equal(mask_b[1], g.mask)
+
+
+def test_flat_featurizer_is_prerefactor_observation():
+    env = LoopTuneEnv([BENCH], TPUAnalyticalBackend(), actions=ACTIONS, seed=0)
+    obs = env.reset(0)
+    np.testing.assert_array_equal(obs, normalize(encode(env.nest)))
+    assert isinstance(env.featurizer, FlatFeaturizer)
+    assert env.state_dim == 320
+
+
+# ---------------------------------------------------------------------------
+# Encoders: flat parity, graph permutation-robustness, depth-agnosticism
+# ---------------------------------------------------------------------------
+
+
+def test_flat_q_network_parity_with_prerefactor_mlp():
+    key = jax.random.PRNGKey(7)
+    net = build_network("q", EncoderConfig(kind="flat", hidden=(32, 16)), 10)
+    p_old = mlp_init(key, [320, 32, 16, 10])
+    p_new = net.init(key)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        p_old, p_new)
+    obs = np.random.default_rng(0).normal(size=(4, 320)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(mlp_batch(p_old, obs)), np.asarray(net.batch(p_new, obs)))
+
+
+def test_flat_dueling_network_parity():
+    key = jax.random.PRNGKey(3)
+    net = build_network("dueling", EncoderConfig(kind="flat", hidden=(16,)), 10)
+    p_old = dueling_init(key, 320, [16], 10)
+    p_new = net.init(key)
+    obs = np.random.default_rng(1).normal(size=(2, 320)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(dueling_batch(p_old, obs)), np.asarray(net.batch(p_new, obs)))
+
+
+def _permute_packed(packed: np.ndarray, max_loops: int,
+                    perm: np.ndarray) -> np.ndarray:
+    g = LoopGraph.unpack(packed, max_loops)
+    return LoopGraph(g.nodes[perm], g.mask[perm], g.section[perm],
+                     g.iter_id[perm], g.pos[perm]).pack()
+
+
+def test_graph_encoder_permutation_invariant():
+    nest = LoopNest(matmul_benchmark(128, 128, 128))
+    nest.split(0, 32)
+    nest.split(3, 16)
+    m = 12
+    packed = encode_graph(nest, m).pack()
+    cfg = EncoderConfig(kind="graph", hidden=(16,), max_loops=m,
+                        embed_dim=8, n_rounds=2)
+    net = build_network("q", cfg, len(ACTIONS))
+    params = net.init(jax.random.PRNGKey(0))
+    q = np.asarray(net.batch(params, packed[None]))
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        perm = rng.permutation(m)
+        q_p = np.asarray(net.batch(
+            params, _permute_packed(packed, m, perm)[None]))
+        np.testing.assert_allclose(q_p, q, rtol=1e-5, atol=1e-5)
+
+
+def test_graph_handles_deeper_nest_than_flat_can():
+    nest = _split_nest(13)  # 18 loops: beyond the flat MAX_LOOPS=16
+    assert len(nest.loops) > 16
+    # flat path silently truncates to the same 320-vector
+    assert encode(nest).shape == (320,)
+    feat = GraphFeaturizer(32)
+    packed = feat(nest)
+    g = encode_graph(nest, 32)
+    assert g.n_loops == len(nest.loops)  # every loop represented
+    cfg = EncoderConfig(kind="graph", hidden=(16,), max_loops=32,
+                        embed_dim=8, n_rounds=1)
+    net = build_network("q", cfg, len(ACTIONS))
+    q = np.asarray(net.batch(net.init(jax.random.PRNGKey(2)), packed[None]))
+    assert q.shape == (1, len(ACTIONS)) and np.isfinite(q).all()
+
+
+def test_encoder_registry_unknown_kind():
+    with pytest.raises(KeyError, match="unknown encoder"):
+        get_encoder("transformer9000")
+    with pytest.raises(ValueError, match="unknown head"):
+        build_network("nope", EncoderConfig(), 4)
+
+
+# ---------------------------------------------------------------------------
+# Mask sentinel: one value everywhere, no NaN on fully-masked rows
+# ---------------------------------------------------------------------------
+
+
+def test_mask_sentinel_fully_masked_row_no_nan():
+    import jax.numpy as jnp
+
+    logits = jnp.zeros((2, 6))
+    mask = jnp.asarray([[True, False, True, False, False, False],
+                        [False, False, False, False, False, False]])
+    probs = np.asarray(jax.nn.softmax(masked_logits(logits, mask), axis=-1))
+    assert np.isfinite(probs).all()  # -inf here would make row 1 all-NaN
+    np.testing.assert_allclose(probs[0, [0, 2]], 0.5, atol=1e-6)
+    assert probs[0, 1] == 0.0  # legal-row illegal mass underflows to exactly 0
+    # argmax path: no NaN/inf propagation either
+    assert masked_argmax(np.zeros(6), np.zeros(6, bool)) == 0
+    # sampling path: finite log-probs even for the degenerate row
+    a, logp = sample_masked(np.zeros((2, 6)), np.asarray(mask),
+                            np.random.default_rng(0))
+    assert np.isfinite(logp).all()
+    assert a[0] in (0, 2)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint metadata + LoopTuner round trips (both encoders)
+# ---------------------------------------------------------------------------
+
+
+def _train_dqn(encoder=None, **kw):
+    from repro.core.dqn import DQNConfig, train_dqn
+
+    env = LoopTuneEnv([BENCH], TPUAnalyticalBackend(), actions=ACTIONS, seed=0)
+    cfg = DQNConfig(hidden=(16,), warmup_steps=10, n_envs=2,
+                    **({"encoder": encoder} if encoder else {}), **kw)
+    return train_dqn(env, n_iterations=2, cfg=cfg)
+
+
+@pytest.mark.parametrize("encoder", [
+    None,
+    EncoderConfig(kind="graph", embed_dim=8, n_rounds=1, max_loops=24),
+], ids=["flat", "graph"])
+def test_checkpoint_roundtrip_bitexact_rollout(tmp_path, encoder):
+    r = _train_dqn(encoder)
+    path = os.path.join(tmp_path, "p.pkl")
+    r.save(path)
+    meta = load_checkpoint(path)["meta"]
+    assert meta["head"] == "q" and meta["n_actions"] == len(ACTIONS)
+    assert meta["splits"] == list(TPU_SPLITS)
+    assert meta["encoder"]["kind"] == (encoder.kind if encoder else "flat")
+
+    act2 = make_act_from_checkpoint(path)
+    feat = get_encoder(meta["encoder"]["kind"]).featurizer(
+        EncoderConfig.from_dict(meta["encoder"]).resolved())
+    env = LoopTuneEnv([BENCH], TPUAnalyticalBackend(), actions=ACTIONS,
+                      seed=0, featurizer=feat)
+    g1, names1, _ = greedy_rollout(env, r.act, 0)
+    g2, names2, _ = greedy_rollout(env, act2, 0)
+    assert names1 == names2 and g1 == g2  # bit-exact inference round trip
+
+    tuner = LoopTuner.from_checkpoint(path)
+    assert [a.name for a in tuner.actions] == meta["actions"]
+    assert type(tuner.featurizer).__name__.lower().startswith(
+        meta["encoder"]["kind"])
+    entry = tuner.tune(BENCH)
+    assert entry["gflops"] == g1  # the tuner reproduces the same rollout
+
+
+def test_checkpoint_restores_custom_action_space(tmp_path):
+    """A checkpoint trained on a non-default action space (here: no splits,
+    4 actions) must restore that exact space — not the backend default."""
+    from repro.core.dqn import DQNConfig, train_dqn
+
+    actions = build_action_space(())  # moves + swaps only
+    env = LoopTuneEnv([BENCH], TPUAnalyticalBackend(), actions=actions, seed=0)
+    r = train_dqn(env, n_iterations=2,
+                  cfg=DQNConfig(hidden=(16,), warmup_steps=10, n_envs=2))
+    path = os.path.join(tmp_path, "custom.pkl")
+    r.save(path)
+    tuner = LoopTuner.from_checkpoint(path)
+    assert [a.name for a in tuner.actions] == [a.name for a in actions]
+    entry = tuner.tune(BENCH)  # would broadcast-error on a 10-action default
+    assert entry["gflops"] > 0
+
+
+def test_ensure_rejects_featurizer_mismatch():
+    from repro.core import VecLoopTuneEnv
+
+    venv = VecLoopTuneEnv([BENCH], TPUAnalyticalBackend(), 2, actions=ACTIONS)
+    # compatible demand passes the same instance through
+    assert VecLoopTuneEnv.ensure(venv, 2, featurizer=FlatFeaturizer()) is venv
+    with pytest.raises(ValueError, match="featurizer"):
+        VecLoopTuneEnv.ensure(venv, 2, featurizer=GraphFeaturizer(24))
+
+
+def test_legacy_checkpoint_without_meta_loads(tmp_path):
+    """Pre-metadata checkpoints (algo + params only) keep working with the
+    per-algo default head and flat encoder."""
+    import pickle
+
+    r = _train_dqn()
+    path = os.path.join(tmp_path, "legacy.pkl")
+    with open(path, "wb") as f:
+        pickle.dump({"algo": "dqn",
+                     "params": jax.tree.map(np.asarray, r.params),
+                     "rewards": r.rewards}, f)
+    act = make_act_from_checkpoint(path)
+    env = LoopTuneEnv([BENCH], TPUAnalyticalBackend(), actions=ACTIONS, seed=0)
+    obs = env.reset(0)
+    assert act(obs, env.action_mask(), True) == r.act(obs, env.action_mask(), True)
+
+
+def test_ppo_graph_encoder_trains():
+    from repro.core.ppo import PPOConfig, train_ppo
+
+    def factory(i=0):
+        return LoopTuneEnv([BENCH], TPUAnalyticalBackend(), actions=ACTIONS,
+                           seed=i)
+
+    cfg = PPOConfig(hidden=(16,), n_envs=2, rollout_len=10, n_minibatches=2,
+                    encoder=EncoderConfig(kind="graph", embed_dim=8,
+                                          n_rounds=1, max_loops=24))
+    r = train_ppo(factory, n_iterations=2, cfg=cfg)
+    assert np.isfinite(r.rewards).all()
+    assert r.meta["head"] == "actor_critic"
+    assert r.meta["encoder"]["kind"] == "graph"
+    # acting consumes packed graph observations
+    env = LoopTuneEnv([BENCH], TPUAnalyticalBackend(), actions=ACTIONS,
+                      seed=0, featurizer=GraphFeaturizer(24))
+    g, names, _ = greedy_rollout(env, r.act, 0)
+    assert g > 0 and len(names) <= env.episode_len
+
+
+def test_search_results_report_cache_traffic():
+    from repro.core.search import greedy_search
+
+    env = LoopTuneEnv([BENCH], TPUAnalyticalBackend(), actions=ACTIONS, seed=0)
+    res1 = greedy_search(env, 0, lookahead=1, budget_s=3.0)
+    assert res1.cache_misses > 0
+    assert res1.cache_hits + res1.cache_misses >= res1.n_evals
+    # a rerun over the warm shared cache is (nearly) all hits
+    res2 = greedy_search(env, 0, lookahead=1, budget_s=3.0)
+    assert res2.cache_misses == 0 and res2.cache_hits > 0
+    assert res2.cache_hit_rate == 1.0

@@ -11,13 +11,16 @@ from repro.core import (
     build_action_space,
     conv2d_benchmark,
     encode,
+    encode_graph,
     execute,
     execute_reference,
     make_inputs,
     matmul_benchmark,
+    packed_dim,
     reduction_benchmark,
     transpose_benchmark,
 )
+from repro.core.graph_features import LoopGraph
 from repro.core.actions import apply_action, is_legal
 
 ACTIONS = build_action_space()
@@ -72,6 +75,40 @@ def test_cost_model_positive_bounded(seq):
     nest = _apply_random_actions(LoopNest(matmul_benchmark(128, 128, 128)), seq)
     g = backend.evaluate(nest)
     assert 0.0 < g <= backend.peak()
+
+
+@given(benchmarks(), st.lists(st.integers(0, 9), max_size=16))
+@settings(max_examples=40, deadline=None)
+def test_graph_featurization_invariants(bench, seq):
+    """Padding-mask correctness + pack/unpack fidelity + typed-adjacency
+    well-formedness on every reachable schedule (ISSUE 2 satellite)."""
+    nest = _apply_random_actions(LoopNest(bench), seq)
+    m = 20
+    g = encode_graph(nest, m)
+    n = len(nest.loops)
+    # mask marks exactly the real loops; padding rows/annotations are inert
+    assert g.mask.tolist() == [1.0] * n + [0.0] * (m - n)
+    assert (g.nodes[n:] == 0).all()
+    assert (g.iter_id[n:] == -1).all() and (g.pos[n:] == -1).all()
+    assert np.isfinite(g.nodes).all() and (g.nodes >= 0).all()
+    assert g.nodes[:, 0].sum() == 1.0  # exactly one cursor bit
+    # pack/unpack round trip is lossless
+    packed = g.pack()
+    assert packed.shape == (packed_dim(m),)
+    g2 = LoopGraph.unpack(packed, m)
+    np.testing.assert_array_equal(g.nodes, g2.nodes)
+    np.testing.assert_array_equal(g.pos, g2.pos)
+    # adjacency: symmetric, zero diagonal, zero against padding
+    adj = g.adjacency()
+    np.testing.assert_array_equal(adj, np.swapaxes(adj, -1, -2))
+    assert (adj[:, range(m), range(m)] == 0).all()
+    assert (adj[:, n:, :] == 0).all() and (adj[:, :, n:] == 0).all()
+    # every real loop in a section with >1 loop has a nest-order neighbour
+    row_deg = adj[0].sum(axis=1)
+    for sec in (0.0, 1.0):
+        idx = [i for i in range(n) if g.section[i] == sec]
+        if len(idx) > 1:
+            assert (row_deg[idx] >= 1).all()
 
 
 @given(st.lists(st.integers(0, 9), max_size=16))
