@@ -4,6 +4,12 @@ For each test benchmark: run all 7 searches under a wall-clock budget and
 the trained policy (pure inference); report achieved GFLOPS, speedup over
 the untuned nest, search time, and the fraction of benchmarks where the
 policy beats the best search (paper: 88%, 1.8x in <1s vs 60s searches).
+
+``run_surrogate_comparison`` measures the learned-cost-model two-stage
+ranking (``core/surrogate.py``): the same search suite with the surrogate
+off vs on, reporting backend-eval counts and best-found GFLOPS per
+benchmark.  Target: surrogate-on spends <= 50% of the backend evaluations
+at >= 95% of the best-found GFLOPS.
 """
 from __future__ import annotations
 
@@ -14,7 +20,11 @@ import numpy as np
 
 from repro.core import (
     LoopTuneEnv,
+    SurrogateScorer,
+    beam_search,
     greedy_rollout,
+    greedy_search,
+    random_search,
     run_all_searches,
     small_dataset,
 )
@@ -96,12 +106,102 @@ def run(n_benchmarks: int = 20, budget_s: float = 10.0, seed: int = 1,
     return payload
 
 
+# ---------------------------------------------------------------------------
+# Surrogate two-stage ranking: evals-saved vs quality
+# ---------------------------------------------------------------------------
+
+# the comparison suite: the lookahead search plus the beam family whose
+# frontiers the surrogate prunes (BFS scores whole layers, where keep_frac
+# bites hardest); random search spends one real eval per step either way,
+# so it is the warm-up producer, not a comparison row
+_SURROGATE_SUITE = (
+    ("greedy2", greedy_search, dict(lookahead=2)),
+    ("beam2dfs", beam_search, dict(width=2, order="dfs", depth=4)),
+    ("beam2bfs", beam_search, dict(width=2, order="bfs", depth=4)),
+    ("beam4bfs", beam_search, dict(width=4, order="bfs", depth=4)),
+)
+
+
+def run_surrogate_comparison(
+    n_benchmarks: int = 8,
+    budget_s: float = 60.0,
+    seed: int = 1,
+    warmup_evals: int = 40,
+    out_name: str = "bench_search_surrogate",
+):
+    """Backend-eval counts with the surrogate off vs on, same search suite.
+
+    The off pass is the measured-only baseline (fresh cache per search, as
+    in ``run``).  The on pass shares one :class:`SurrogateScorer` across the
+    whole suite — the cost model warm-started by a short random-search probe
+    (whose evals are charged to the on-total) and re-fit online as the
+    searches measure — mirroring how a long-lived tuner amortizes its model.
+    Quality is per-benchmark best-found GFLOPS across the suite.
+    """
+    benches = small_dataset(n_benchmarks, seed=seed + 100)  # unseen test set
+    actions = build_action_space(TPU_SPLITS)
+    env = LoopTuneEnv(benches, TPUAnalyticalBackend(), actions=actions,
+                      seed=seed)
+
+    def run_suite(scorer):
+        total_evals, best, per_search = 0, [], []
+        if scorer is not None:
+            env.clear_cache()
+            warm = random_search(env, 0, budget_s=budget_s,
+                                 max_evals=warmup_evals, surrogate=scorer)
+            total_evals += warm.n_evals
+        for bi in range(n_benchmarks):
+            row = {"benchmark": benches[bi].name}
+            gs = []
+            for name, fn, kw in _SURROGATE_SUITE:
+                env.clear_cache()
+                r = fn(env, bi, budget_s=budget_s, surrogate=scorer, **kw)
+                total_evals += r.n_evals
+                gs.append(r.best_gflops)
+                row[name] = {"gflops": r.best_gflops, "evals": r.n_evals}
+            row["best_gflops"] = max(gs)
+            best.append(max(gs))
+            per_search.append(row)
+        return total_evals, np.array(best), per_search
+
+    evals_off, best_off, rows_off = run_suite(None)
+    scorer = SurrogateScorer.for_env(
+        env, keep_frac=0.15, min_keep=2, min_fit=8, refit_every=32,
+        fit_steps=300)
+    evals_on, best_on, rows_on = run_suite(scorer)
+
+    rel = best_on / np.maximum(best_off, 1e-9)
+    summary = {
+        "evals_off": int(evals_off),
+        "evals_on": int(evals_on),
+        "eval_ratio": float(evals_on / max(evals_off, 1)),
+        "quality_geomean": float(np.exp(np.mean(np.log(np.maximum(rel, 1e-9))))),
+        "quality_worst": float(rel.min()),
+        "meets_eval_target": bool(evals_on <= 0.5 * evals_off),
+        "meets_quality_target": bool(
+            np.exp(np.mean(np.log(np.maximum(rel, 1e-9)))) >= 0.95),
+        "surrogate": scorer.stats(),
+    }
+    payload = {"budget_s": budget_s, "n_benchmarks": n_benchmarks,
+               "summary": summary,
+               "per_benchmark_off": rows_off, "per_benchmark_on": rows_on}
+    save_result(out_name, payload)
+    for k, v in summary.items():
+        print(f"[surrogate] {k}: {v}", flush=True)
+    return payload
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--benchmarks", type=int, default=20)
     ap.add_argument("--budget", type=float, default=10.0)
+    ap.add_argument("--surrogate", action="store_true",
+                    help="run the surrogate on/off eval-count comparison")
     args = ap.parse_args()
-    run(args.benchmarks, args.budget)
+    if args.surrogate:
+        run_surrogate_comparison(min(args.benchmarks, 8), args.budget)
+    else:
+        run(args.benchmarks, args.budget)
 
 
 if __name__ == "__main__":

@@ -18,8 +18,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: rl,search,tuned,kernels,roofline,"
-                         "vec_env,networks")
+                    help="comma list: rl,search,surrogate,tuned,kernels,"
+                         "roofline,vec_env,networks")
     args = ap.parse_args(argv)
 
     want = set(args.only.split(",")) if args.only else None
@@ -59,6 +59,11 @@ def main(argv=None) -> int:
         nb = 25 if args.full else 8
         section("search", lambda: bench_search.run(
             nb, budget, out_name="bench_search" + sfx))
+    if should("surrogate"):
+        from . import bench_search
+        section("surrogate", lambda: bench_search.run_surrogate_comparison(
+            8 if args.full else 4, 60.0 if args.full else 20.0,
+            out_name="bench_search_surrogate" + sfx))
     if should("tuned"):
         from . import bench_tuned_vs_baselines
         section("tuned", lambda: bench_tuned_vs_baselines.run(

@@ -73,6 +73,12 @@ from .rl_common import (
     sample_masked,
 )
 from .schedule_cache import ScheduleCache
+from .surrogate import (
+    SurrogateDataset,
+    SurrogateModel,
+    SurrogateScorer,
+    make_surrogate,
+)
 from .search import (
     SEARCHES,
     SearchResult,

@@ -38,6 +38,9 @@ class A2CConfig:
     value_coef: float = 0.5
     max_grad_norm: float = 0.5
     seed: int = 0
+    # surrogate policy the tuner should use with this checkpoint's policy
+    # ("auto" | "off") — persisted via checkpoint_meta
+    surrogate: str = "auto"
 
 
 def make_update_fn(cfg: A2CConfig, ac_apply):
@@ -130,4 +133,5 @@ def train_a2c(env_factory, n_iterations: int = 300,
                        make_masked_act(make_score_fn(net))(params_ref),
                        rewards_log, times,
                        meta=checkpoint_meta("actor_critic", enc_cfg,
-                                            venv.actions, venv.state_dim))
+                                            venv.actions, venv.state_dim,
+                                            surrogate=cfg.surrogate))

@@ -46,6 +46,9 @@ class ApexConfig:
     update_every: int = 2  # env steps per learner update
     warmup_steps: int = 300
     seed: int = 0
+    # surrogate policy the tuner should use with this checkpoint's policy
+    # ("auto" | "off") — persisted via checkpoint_meta
+    surrogate: str = "auto"
 
 
 def make_update_fn(cfg: ApexConfig, q_apply):
@@ -178,4 +181,5 @@ def train_apex(
                        make_masked_act(make_score_fn(net))(params_ref),
                        rewards, times, extra={"updates": updates},
                        meta=checkpoint_meta("dueling", enc_cfg, venv.actions,
-                                            venv.state_dim))
+                                            venv.state_dim,
+                                            surrogate=cfg.surrogate))

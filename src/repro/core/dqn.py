@@ -44,6 +44,9 @@ class DQNConfig:
     warmup_steps: int = 200
     double: bool = True
     seed: int = 0
+    # surrogate policy the tuner should use with this checkpoint's policy
+    # ("auto" | "off") — persisted via checkpoint_meta
+    surrogate: str = "auto"
 
 
 def make_update_fn(cfg: DQNConfig, q_apply):
@@ -165,4 +168,5 @@ def train_dqn(
                        make_masked_act(make_score_fn(net))(params_ref),
                        rewards, times, extra={"updates": updates},
                        meta=checkpoint_meta("q", enc_cfg, venv.actions,
-                                            venv.state_dim))
+                                            venv.state_dim,
+                                            surrogate=cfg.surrogate))

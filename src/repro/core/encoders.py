@@ -257,10 +257,12 @@ def make_policy_act(head: str, cfg: EncoderConfig, n_actions: int = 0):
 
 
 def checkpoint_meta(head: str, cfg: EncoderConfig,
-                    actions: Sequence[Action], state_dim: int) -> Dict[str, Any]:
+                    actions: Sequence[Action], state_dim: int,
+                    surrogate: str = "auto") -> Dict[str, Any]:
     """The metadata every trainer embeds in its checkpoints so acting can be
     reconstructed without assuming defaults: network head, encoder config,
-    and the exact action space (names + split factors)."""
+    the exact action space (names + split factors), and the surrogate policy
+    (``"auto"``/``"off"``) the tuner should use for search fallbacks."""
     return {
         "head": head,
         "encoder": cfg.to_dict(),
@@ -268,4 +270,5 @@ def checkpoint_meta(head: str, cfg: EncoderConfig,
         "actions": [a.name for a in actions],
         "splits": [a.param for a in actions if a.kind == "split"],
         "state_dim": int(state_dim),
+        "surrogate": surrogate,
     }

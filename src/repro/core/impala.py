@@ -38,6 +38,9 @@ class ImpalaConfig:
     actor_sync_every: int = 4  # iterations of lag between actor & learner
     max_grad_norm: float = 0.5
     seed: int = 0
+    # surrogate policy the tuner should use with this checkpoint's policy
+    # ("auto" | "off") — persisted via checkpoint_meta
+    surrogate: str = "auto"
 
 
 def vtrace(behavior_logp, target_logp, rewards, values, dones, bootstrap,
@@ -161,4 +164,5 @@ def train_impala(env_factory, n_iterations: int = 300,
                        make_masked_act(make_score_fn(net))(params_ref),
                        rewards_log, times,
                        meta=checkpoint_meta("actor_critic", enc_cfg,
-                                            venv.actions, venv.state_dim))
+                                            venv.actions, venv.state_dim,
+                                            surrogate=cfg.surrogate))

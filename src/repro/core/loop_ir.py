@@ -275,6 +275,23 @@ class LoopNest:
     def structure_key(self) -> Tuple:
         return self.key(with_cursor=False)
 
+    @classmethod
+    def from_structure_key(cls, contraction: Contraction, key: Tuple) -> "LoopNest":
+        """Rebuild a nest from ``structure_key()`` output (cursor resets to
+        0).  Keys carry the full loop body, so cached measurements can be
+        turned back into featurizable schedules — e.g. to harvest a
+        :class:`ScheduleCache` into surrogate training data."""
+        name, body, n_compute, _cursor = key
+        if name != contraction.name:
+            raise ValueError(
+                f"key is for contraction {name!r}, not {contraction.name!r}")
+        out = object.__new__(cls)
+        out.contraction = contraction
+        out.loops = [LoopLevel(it, count, step) for it, count, step in body]
+        out.n_compute = n_compute
+        out.cursor = 0
+        return out
+
     def clone(self) -> "LoopNest":
         out = object.__new__(LoopNest)
         out.contraction = self.contraction

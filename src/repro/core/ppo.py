@@ -39,6 +39,9 @@ class PPOConfig:
     n_minibatches: int = 4
     max_grad_norm: float = 0.5
     seed: int = 0
+    # surrogate policy the tuner should use with this checkpoint's policy
+    # ("auto" | "off") — persisted via checkpoint_meta
+    surrogate: str = "auto"
 
 
 def make_update_fn(cfg: PPOConfig, ac_apply):
@@ -161,4 +164,5 @@ def train_ppo(
                        make_masked_act(make_score_fn(net))(params_ref),
                        rewards_log, times,
                        meta=checkpoint_meta("actor_critic", enc_cfg,
-                                            venv.actions, venv.state_dim))
+                                            venv.actions, venv.state_dim,
+                                            surrogate=cfg.surrogate))

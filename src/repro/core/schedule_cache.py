@@ -63,6 +63,12 @@ class ScheduleCache:
     def clear(self) -> None:
         self._data.clear()
 
+    def entries(self) -> List[Tuple[Hashable, float]]:
+        """Snapshot of ``(structure_key, gflops)`` pairs, oldest first,
+        without touching recency — the harvest surface for
+        ``SurrogateDataset.from_cache``."""
+        return list(self._data.items())
+
     def stats(self) -> Dict[str, int]:
         return {
             "size": len(self._data),

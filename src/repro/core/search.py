@@ -11,18 +11,26 @@ evaluations of the same states") and a wall-clock budget.  Expansion is
 batched: all children of a frontier node are scored through one
 ``Backend.evaluate_batch`` call (cache-deduped), so measurement cost is
 amortized exactly like the vectorized RL rollouts.
+
+Every search additionally accepts ``surrogate`` ("auto" | "off" | a shared
+:class:`~repro.core.surrogate.SurrogateScorer`): two-stage frontier scoring
+where the learned cost model ranks the frontier and only the top slice of
+cache misses is charged against the budget and measured for real
+(``surrogate.py``).  Measured GFLOPS stream back into the model, which
+re-fits periodically — evaluations saved compound as the search proceeds.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .actions import apply_action, is_legal
 from .env import LoopTuneEnv
 from .loop_ir import LoopNest
+from .surrogate import SurrogateScorer, make_surrogate
 
 
 @dataclass
@@ -43,10 +51,21 @@ class SearchResult:
 
     @property
     def speedup(self) -> float:
+        if self.best_gflops == self.base_gflops:
+            # covers the zero-eval budget case (nothing measured, best is the
+            # base) without manufacturing a huge ratio from a tiny base
+            return 1.0
         return self.best_gflops / max(self.base_gflops, 1e-9)
+
+    # two-stage scoring observability (None when the search ran without a
+    # surrogate): dataset size, fit count, frontier candidates skipped
+    surrogate_stats: Optional[Dict[str, Any]] = None
 
     @property
     def cache_hit_rate(self) -> float:
+        """Fraction of this search's cache traffic served from cache.
+        Well-defined (0.0) when the search spent no evaluations at all —
+        e.g. a ``max_evals=0`` budget exhausted on the first frontier."""
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
 
@@ -73,10 +92,14 @@ class _Budget:
 def _eval(env: LoopTuneEnv, nest: LoopNest, budget: _Budget) -> float:
     key = nest.structure_key()
     cached = key in env.cache
-    g = env.gflops(nest)
     if not cached:
+        if budget.exhausted():
+            # never spend past the budget: an unmeasured state under an
+            # exhausted budget scores -inf (unusable) instead of silently
+            # pushing n_evals beyond max_evals
+            return float("-inf")
         budget.spend_eval()
-    return g
+    return env.gflops(nest)
 
 
 def _eval_batch(env: LoopTuneEnv, nests: Sequence[LoopNest],
@@ -107,6 +130,37 @@ def _eval_batch(env: LoopTuneEnv, nests: Sequence[LoopNest],
     return gs
 
 
+def _score_frontier(
+    env: LoopTuneEnv,
+    nests: Sequence[LoopNest],
+    budget: _Budget,
+    surrogate: Optional[SurrogateScorer] = None,
+    root: bool = False,
+    prune: bool = True,
+) -> Tuple[List[int], np.ndarray]:
+    """Two-stage frontier scoring.  Returns ``(indices, gflops)`` where
+    ``gflops[j]`` is the *measured* score of ``nests[indices[j]]``.
+
+    Stage 1 (cheap): the surrogate ranks the frontier and keeps cache hits
+    plus the top slice of misses.  Stage 2 (real): the survivors go through
+    one cached ``evaluate_batch`` call, charged against the budget (which may
+    truncate the tail — dropped candidates simply stay unscored, and
+    unscored candidates are never expanded).  Fresh measurements are fed
+    back to the surrogate.  With ``surrogate=None`` stage 1 keeps everything;
+    ``prune=False`` also keeps everything but still feeds the measurements
+    back (greedy's full-frontier verification pass).
+    """
+    if surrogate is None:
+        gs = _eval_batch(env, nests, budget)
+        return list(range(len(gs))), gs
+    order = (surrogate.select(env, nests, root=root) if prune
+             else list(range(len(nests))))
+    gs = _eval_batch(env, [nests[i] for i in order], budget)
+    order = order[: len(gs)]
+    surrogate.observe([nests[i] for i in order], gs)
+    return order, gs
+
+
 def _children(env: LoopTuneEnv, nest: LoopNest) -> List[Tuple[int, LoopNest]]:
     out = []
     for ai, act in enumerate(env.actions):
@@ -124,7 +178,7 @@ def _cache_counters(env: LoopTuneEnv) -> Tuple[int, int]:
 
 
 def _mk_result(name, env, base, best_g, best_seq, best_nest, budget, trace,
-               cache0=(0, 0)):
+               cache0=(0, 0), surrogate=None):
     h0, m0 = cache0
     return SearchResult(
         name=name,
@@ -137,6 +191,7 @@ def _mk_result(name, env, base, best_g, best_seq, best_nest, budget, trace,
         trace=trace,
         cache_hits=env.cache.hits - h0,
         cache_misses=env.cache.misses - m0,
+        surrogate_stats=surrogate.stats() if surrogate is not None else None,
     )
 
 
@@ -152,10 +207,14 @@ def greedy_search(
     steps: int = 10,
     budget_s: float = 60.0,
     max_evals: Optional[int] = None,
+    surrogate=None,
 ) -> SearchResult:
     cache0 = _cache_counters(env)
     env.reset(benchmark_idx)
     base = env.current_gflops
+    # scorer construction (JAX network init) happens before the budget clock
+    # starts: building the cost model is setup, not search time
+    scorer = make_surrogate(surrogate, env)
     budget = _Budget(budget_s, max_evals)
     nest = env.nest.clone()
     cur_g = base
@@ -163,18 +222,27 @@ def greedy_search(
     seq: List[int] = []
     trace = [(0.0, base)]
 
-    def expand(n: LoopNest, depth: int) -> Tuple[float, List[int]]:
+    def expand(n: LoopNest, depth: int, sc,
+               prune: bool = True) -> Tuple[float, List[int]]:
         """Best achievable gflops within `depth` more actions (dfs)."""
         g_here = _eval(env, n, budget)
         if depth == 0 or budget.exhausted():
             return g_here, []
         kids = _children(env, n)
-        # score the whole frontier in one batched backend call; the recursion
-        # below then hits the cache for each child's own evaluation
-        _eval_batch(env, [child for _, child in kids], budget)
+        # two-stage frontier scoring: one batched backend call for the kept
+        # slice; only scored children are expanded (unscored ones were either
+        # surrogate-pruned or out of budget), and the recursion below then
+        # hits the cache for each scored child's own evaluation.  The ROOT
+        # frontier (depth == lookahead) is greedy's per-step commitment, so
+        # it gets the scorer's gentler ``root_keep_frac`` prune; the
+        # exponentially larger lookahead levels take the full prune.
+        kept, _ = _score_frontier(env, [child for _, child in kids],
+                                  budget, sc, root=depth == lookahead,
+                                  prune=prune)
         best, bseq = g_here, []
-        for ai, child in kids:
-            g_c, s_c = expand(child, depth - 1)
+        for j in kept:
+            ai, child = kids[j]
+            g_c, s_c = expand(child, depth - 1, sc, prune)
             if g_c > best:
                 best, bseq = g_c, [ai] + s_c
             if budget.exhausted():
@@ -184,7 +252,18 @@ def greedy_search(
     for _ in range(steps):
         if budget.exhausted():
             break
-        g_best, sub = expand(nest, lookahead)
+        g_best, sub = expand(nest, lookahead, scorer)
+        if ((not sub or g_best <= cur_g + 1e-12)
+                and scorer is not None and scorer.active
+                and not budget.exhausted()):
+            # the surrogate claims a local optimum — greedy would terminate,
+            # so verify against the FULL frontier before stopping (children
+            # the surrogate kept are cache hits now; only the pruned
+            # remainder is paid for, and its measurements feed the model the
+            # exact frontier it just mis-ranked).  Trust, but verify: the
+            # surrogate can never end a greedy search earlier than measured
+            # search would.
+            g_best, sub = expand(nest, lookahead, scorer, prune=False)
         if not sub or g_best <= cur_g + 1e-12:
             break  # greedy terminates when no better state within lookahead
         ai = sub[0]
@@ -195,7 +274,7 @@ def greedy_search(
             best_g, best_nest, best_seq = cur_g, nest.clone(), list(seq)
         trace.append((budget.elapsed(), best_g))
     return _mk_result(f"greedy{lookahead}", env, base, best_g, best_seq,
-                      best_nest, budget, trace, cache0)
+                      best_nest, budget, trace, cache0, scorer)
 
 
 # ---------------------------------------------------------------------------
@@ -211,10 +290,14 @@ def beam_search(
     order: str = "dfs",
     budget_s: float = 60.0,
     max_evals: Optional[int] = None,
+    surrogate=None,
 ) -> SearchResult:
     cache0 = _cache_counters(env)
     env.reset(benchmark_idx)
     base = env.current_gflops
+    # scorer construction (JAX network init) happens before the budget clock
+    # starts: building the cost model is setup, not search time
+    scorer = make_surrogate(surrogate, env)
     budget = _Budget(budget_s, max_evals)
     root = env.nest.clone()
     best_g, best_nest, best_seq = base, root.clone(), []
@@ -231,12 +314,14 @@ def beam_search(
             fresh.append((ai, child, k))
         if not fresh:
             return []
-        # score all children of the frontier node in one batched call
-        # (may be truncated when max_evals runs out; zip drops the rest,
-        # leaving them unvisited — exactly like the old per-child break)
-        gs = _eval_batch(env, [child for _, child, _ in fresh], budget)
+        # two-stage scoring of the node's frontier in one batched call
+        # (surrogate-pruned or out-of-budget children stay unvisited —
+        # exactly like the old per-child break when max_evals ran out)
+        kept, gs = _score_frontier(env, [child for _, child, _ in fresh],
+                                   budget, scorer)
         scored = []
-        for (ai, child, k), g in zip(fresh, gs):
+        for j, g in zip(kept, gs):
+            ai, child, k = fresh[j]
             g = float(g)
             visited[k] = g
             scored.append((g, ai, child))
@@ -266,18 +351,41 @@ def beam_search(
         for _ in range(depth):
             if budget.exhausted() or not frontier:
                 break
+            # gather the ENTIRE layer's fresh children and score them through
+            # one two-stage call: the surrogate ranks the full layer frontier
+            # (not per-node slices), so keep_frac bites even when each node
+            # contributes only a few children
+            cand: List[Tuple[int, LoopNest, Tuple, List[int], int]] = []
+            seen_layer = set()
+            for pi, (n, seq) in enumerate(frontier):
+                for ai, child in _children(env, n):
+                    k = child.key()  # cursor-aware: moves reach distinct states
+                    if k in visited or k in seen_layer:
+                        continue  # already expanded: costs no budget at all
+                    seen_layer.add(k)
+                    cand.append((ai, child, k, seq, pi))
+            if not cand:
+                break
+            kept, gs = _score_frontier(env, [c[1] for c in cand],
+                                       budget, scorer)
+            # beam semantics as before layer-batching: each parent node
+            # contributes at most its top `width` children, then the global
+            # top width^2 bounds the next frontier
+            per_parent: Dict[int, List[Tuple[float, LoopNest, List[int]]]] = {}
+            for j, g in zip(kept, gs):
+                ai, child, k, seq, pi = cand[j]
+                g = float(g)
+                visited[k] = g
+                note(g, child, seq + [ai])
+                per_parent.setdefault(pi, []).append((g, child, seq + [ai]))
             nxt: List[Tuple[float, LoopNest, List[int]]] = []
-            for n, seq in frontier:
-                for g, ai, child in ranked_children(n):
-                    note(g, child, seq + [ai])
-                    nxt.append((g, child, seq + [ai]))
-                if budget.exhausted():
-                    break
+            for kids in per_parent.values():
+                kids.sort(key=lambda t: -t[0])
+                nxt.extend(kids[:width])
             nxt.sort(key=lambda t: -t[0])
-            # keep the global top width^2 states to bound the frontier
             frontier = [(n, s) for _, n, s in nxt[: width * width]]
     return _mk_result(f"beam{width}{order}", env, base, best_g, best_seq,
-                      best_nest, budget, trace, cache0)
+                      best_nest, budget, trace, cache0, scorer)
 
 
 # ---------------------------------------------------------------------------
@@ -292,10 +400,21 @@ def random_search(
     budget_s: float = 60.0,
     max_evals: Optional[int] = None,
     seed: int = 0,
+    surrogate=None,
+    n_probe: int = 4,
 ) -> SearchResult:
+    """Uniform random action sequences.  With a surrogate, each step becomes
+    two-stage: ``n_probe`` random candidate actions are drawn, the surrogate
+    ranks their children, and only the best-predicted one is measured — the
+    same one-real-eval-per-step cost, spent on a better-directed step.
+    Without a surrogate the action draw is single-sample and bit-identical
+    to the pre-surrogate behavior for a fixed ``seed``."""
     cache0 = _cache_counters(env)
     env.reset(benchmark_idx)
     base = env.current_gflops
+    # scorer construction (JAX network init) happens before the budget clock
+    # starts: building the cost model is setup, not search time
+    scorer = make_surrogate(surrogate, env)
     budget = _Budget(budget_s, max_evals)
     rng = np.random.default_rng(seed)
     root = env.nest.clone()
@@ -308,17 +427,29 @@ def random_search(
             legal = [ai for ai, a in enumerate(env.actions) if is_legal(nest, a)]
             if not legal:
                 break
-            ai = int(rng.choice(legal))
+            if scorer is not None and scorer.active and len(legal) > 1:
+                cand = rng.choice(legal, size=min(n_probe, len(legal)),
+                                  replace=False)
+                kids = []
+                for ci in cand:
+                    child = nest.clone()
+                    apply_action(child, env.actions[int(ci)])
+                    kids.append(child)
+                ai = int(cand[int(np.argmax(scorer.model.predict(kids)))])
+            else:
+                ai = int(rng.choice(legal))
             apply_action(nest, env.actions[ai])
             seq.append(ai)
             g = _eval(env, nest, budget)
+            if scorer is not None and np.isfinite(g):
+                scorer.observe([nest], [g])
             if g > best_g:
                 best_g, best_nest, best_seq = g, nest.clone(), list(seq)
             if budget.exhausted():
                 break
         trace.append((budget.elapsed(), best_g))
     return _mk_result("random", env, base, best_g, best_seq, best_nest,
-                      budget, trace, cache0)
+                      budget, trace, cache0, scorer)
 
 
 # ---------------------------------------------------------------------------
@@ -342,11 +473,16 @@ def run_all_searches(
     budget_s: float = 60.0,
     max_evals: Optional[int] = None,
     fresh_cache: bool = True,
+    surrogate=None,
 ) -> Dict[str, SearchResult]:
+    """Run the full paper suite.  ``surrogate``: None/"off" (measured-only,
+    the default), "auto" (each search trains its own cost model from
+    scratch — fair per-search eval counts, like ``fresh_cache``), or a
+    shared :class:`SurrogateScorer` (learning accumulates across searches)."""
     out = {}
     for name, fn in SEARCHES.items():
         if fresh_cache:
             env.clear_cache()  # fair per-search eval counts / times
         out[name] = fn(env, benchmark_idx, budget_s=budget_s,
-                       max_evals=max_evals)
+                       max_evals=max_evals, surrogate=surrogate)
     return out

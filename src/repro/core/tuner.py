@@ -28,6 +28,7 @@ from .registry import ScheduleRegistry
 from .rl_common import ActFn, greedy_rollout, greedy_rollout_vec, load_checkpoint
 from .schedule_cache import ScheduleCache
 from .search import beam_search, greedy_search
+from .surrogate import SurrogateScorer
 from .vec_env import VecLoopTuneEnv
 
 
@@ -89,6 +90,7 @@ class LoopTuner:
         policy: str = "policy",  # "policy" | "search" | "default"
         search_budget_s: float = 10.0,
         featurizer=None,  # None -> env default (flat); set to match the act
+        surrogate: str = "auto",  # "auto" | "off": cost-model-guided search
     ):
         self.act = act
         self.backend_kind = backend
@@ -98,11 +100,18 @@ class LoopTuner:
         self.policy = policy if act is not None or policy != "policy" else "search"
         self.search_budget_s = search_budget_s
         self.featurizer = featurizer
+        if surrogate not in ("auto", "off"):
+            raise ValueError(f"surrogate must be 'auto' or 'off', got {surrogate!r}")
+        self.surrogate = surrogate
         splits = TPU_SPLITS if backend == "tpu" else CPU_SPLITS
         self.actions = build_action_space(splits)
         # one evaluation cache for every env this tuner creates, so repeated
         # tune() calls and tune_many() lanes amortize each other
         self.cache = ScheduleCache()
+        # one learned cost model shared by every search-mode tune() call —
+        # built lazily against the first env's featurizer, then warmed by
+        # each tuned benchmark's measurements (see _scorer_for)
+        self._scorer: Optional[SurrogateScorer] = None
 
     @classmethod
     def from_checkpoint(cls, path: str, backend: str = "tpu", **kw) -> "LoopTuner":
@@ -111,6 +120,7 @@ class LoopTuner:
         the trained action space (its split ladder), all from the embedded
         metadata — no defaults assumed."""
         act, meta, enc_cfg = load_policy(path)
+        kw.setdefault("surrogate", meta.get("surrogate", "auto"))
         tuner = cls(act=act, backend=backend, **kw)
         tuner.featurizer = get_encoder(enc_cfg.kind).featurizer(enc_cfg)
         if meta.get("actions") is not None:
@@ -126,6 +136,16 @@ class LoopTuner:
                            episode_len=self.episode_len, cache=self.cache,
                            featurizer=self.featurizer)
 
+    def _scorer_for(self, env: LoopTuneEnv) -> Optional[SurrogateScorer]:
+        """The tuner-lifetime surrogate scorer (None when disabled).  Shared
+        across tune() calls so the cost model learned on one contraction
+        pre-ranks the next one's frontiers."""
+        if self.surrogate == "off":
+            return None
+        if self._scorer is None:
+            self._scorer = SurrogateScorer.for_env(env)
+        return self._scorer
+
     def tune(self, bench: Contraction, kernel: str = "mm") -> Dict[str, Any]:
         """Tune one contraction; returns the registry entry."""
         t0 = time.perf_counter()
@@ -133,10 +153,13 @@ class LoopTuner:
         if self.policy == "policy":
             best_g, actions, nest = greedy_rollout(env, self.act, 0)
         elif self.policy == "search":
+            scorer = self._scorer_for(env)
             res = greedy_search(env, 0, lookahead=1,
-                                budget_s=self.search_budget_s)
+                                budget_s=self.search_budget_s,
+                                surrogate=scorer)
             res2 = beam_search(env, 0, width=4, order="dfs",
-                               budget_s=self.search_budget_s)
+                               budget_s=self.search_budget_s,
+                               surrogate=scorer)
             res = res2 if res2.best_gflops > res.best_gflops else res
             best_g, actions, nest = res.best_gflops, res.actions, res.best_nest
         else:  # default / untuned
@@ -195,6 +218,10 @@ class LoopTuner:
             "backend": self.backend_kind,
             "registry_size": len(self.registry),
             "cache": self.cache.stats(),
+            # stable shape regardless of whether a scorer exists yet
+            "surrogate": {"mode": self.surrogate,
+                          **(self._scorer.stats()
+                             if self._scorer is not None else {})},
         }
 
     def save(self, path: str) -> None:

@@ -93,6 +93,71 @@ def test_run_all_searches_complete(env):
         assert r.best_gflops >= r.base_gflops
 
 
+# ---------------------------------------------------------------------------
+# Determinism + budget regressions (ISSUE 3 satellites): fixed seed and
+# max_evals must give identical action sequences, and n_evals may never
+# exceed the cap — locking in the _eval_batch truncation semantics.
+# ---------------------------------------------------------------------------
+
+
+def _fresh_env():
+    return LoopTuneEnv([matmul_benchmark(128, 128, 256)],
+                       TPUAnalyticalBackend(),
+                       actions=build_action_space(TPU_SPLITS), seed=0)
+
+
+@pytest.mark.parametrize("max_evals", [0, 1, 7, 40])
+@pytest.mark.parametrize("search,kw", [
+    ("greedy", {"lookahead": 1}),
+    ("greedy", {"lookahead": 2}),
+    ("beam", {"width": 2, "order": "dfs"}),
+    ("beam", {"width": 2, "order": "bfs"}),
+    ("random", {"seed": 3}),
+], ids=["greedy1", "greedy2", "beam2dfs", "beam2bfs", "random"])
+def test_search_deterministic_and_respects_max_evals(search, kw, max_evals):
+    fns = {"greedy": greedy_search, "beam": beam_search,
+           "random": random_search}
+    results = []
+    for _ in range(2):  # two runs on fresh env+cache must agree exactly
+        env = _fresh_env()
+        results.append(fns[search](env, 0, budget_s=60.0,
+                                   max_evals=max_evals, **kw))
+    a, b = results
+    assert a.actions == b.actions
+    assert a.best_gflops == b.best_gflops
+    assert a.n_evals == b.n_evals
+    assert a.n_evals <= max_evals  # never exceeded, not even by one frontier
+
+
+def test_zero_eval_budget_is_well_defined():
+    """Budget exhausted on the first frontier: every SearchResult field and
+    derived property must still be well-defined (regression for the old
+    behavior where greedy's recursion charged evals past the cap)."""
+    for fn, kw in ((greedy_search, {"lookahead": 2}),
+                   (beam_search, {"width": 4, "order": "dfs"}),
+                   (beam_search, {"width": 2, "order": "bfs"}),
+                   (random_search, {})):
+        env = _fresh_env()
+        r = fn(env, 0, budget_s=60.0, max_evals=0, **kw)
+        assert r.n_evals == 0
+        assert r.actions == []
+        assert r.best_gflops == r.base_gflops
+        assert r.speedup == 1.0
+        assert 0.0 <= r.cache_hit_rate <= 1.0
+        assert np.isfinite(r.best_gflops) and np.isfinite(r.time_s)
+        assert r.trace and np.isfinite(r.trace[0][1])
+
+
+def test_searchresult_zero_counters_properties():
+    from repro.core import SearchResult
+
+    r = SearchResult(name="x", best_gflops=0.0, base_gflops=0.0, actions=[],
+                     n_evals=0, time_s=0.0)
+    assert r.speedup == 1.0  # not 0.0 or a 1e9 blow-up
+    assert r.cache_hit_rate == 0.0
+    assert r.surrogate_stats is None
+
+
 def test_cpu_measured_backend_smoke():
     backend = CPUMeasuredBackend(repeats=1)
     env = LoopTuneEnv([matmul_benchmark(64, 64, 64)], backend, seed=0)

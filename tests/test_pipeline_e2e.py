@@ -1,0 +1,89 @@
+"""End-to-end pipeline (ISSUE 3 satellite): train -> checkpoint ->
+``LoopTuner.from_checkpoint`` -> tune, for both policy encoders.
+
+The contract under test is the paper's deployment story: a (briefly)
+trained policy checkpoint is everything a fresh process needs to tune a
+kernel — the tuner must rebuild network, featurizer and action space from
+the embedded metadata, return a non-regressing schedule, and report an
+action list that *replays* to the reported GFLOPS.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EncoderConfig,
+    LoopTuneEnv,
+    LoopTuner,
+    TPUAnalyticalBackend,
+    matmul_benchmark,
+)
+from repro.core.actions import TPU_SPLITS, build_action_space
+from repro.core.dqn import DQNConfig, train_dqn
+
+ACTIONS = build_action_space(TPU_SPLITS)
+BENCH = matmul_benchmark(96, 96, 96)
+
+ENCODERS = {
+    "flat": None,
+    "graph": EncoderConfig(kind="graph", embed_dim=8, n_rounds=1,
+                           max_loops=24),
+}
+
+
+def _replay_best(entry, tuner):
+    """Best GFLOPS seen while replaying the entry's action names."""
+    env = LoopTuneEnv([BENCH], TPUAnalyticalBackend(), actions=tuner.actions,
+                      seed=0, featurizer=tuner.featurizer)
+    env.reset(0)
+    names = {a.name: i for i, a in enumerate(env.actions)}
+    best = env.current_gflops
+    for nm in entry["actions"]:
+        _, _, _, info = env.step(names[nm])
+        best = max(best, info["gflops"])
+    return best
+
+
+@pytest.mark.parametrize("encoder", list(ENCODERS), ids=list(ENCODERS))
+def test_train_checkpoint_tune_replay(tmp_path, encoder):
+    enc = ENCODERS[encoder]
+    env = LoopTuneEnv([BENCH], TPUAnalyticalBackend(), actions=ACTIONS, seed=0)
+    cfg = DQNConfig(hidden=(16,), warmup_steps=10, n_envs=2,
+                    **({"encoder": enc} if enc else {}))
+    res = train_dqn(env, n_iterations=3, cfg=cfg)
+    assert np.isfinite(res.rewards).all()
+    path = os.path.join(tmp_path, f"{encoder}.pkl")
+    res.save(path)
+
+    tuner = LoopTuner.from_checkpoint(path, backend="tpu")
+    assert tuner.surrogate == "auto"  # persisted alongside the encoder meta
+    entry = tuner.tune(BENCH)
+
+    # the tuned schedule never regresses the untuned nest
+    assert entry["gflops"] >= entry["base_gflops"]
+    assert entry["gflops"] / max(entry["base_gflops"], 1e-9) >= 1.0
+    # inference-phase speed: pure rollout, no search in the loop
+    assert entry["tune_time_s"] < 30
+    # the action list replays to exactly the reported GFLOPS
+    assert isinstance(entry["actions"], list)
+    assert all(isinstance(a, str) for a in entry["actions"])
+    assert _replay_best(entry, tuner) == pytest.approx(entry["gflops"],
+                                                       rel=1e-9)
+
+
+def test_checkpoint_surrogate_off_roundtrips(tmp_path):
+    """A trainer config's surrogate="off" persists through the checkpoint
+    and builds an off tuner."""
+    env = LoopTuneEnv([BENCH], TPUAnalyticalBackend(), actions=ACTIONS, seed=0)
+    res = train_dqn(env, n_iterations=2,
+                    cfg=DQNConfig(hidden=(16,), warmup_steps=10, n_envs=2,
+                                  surrogate="off"))
+    assert res.meta["surrogate"] == "off"
+    path = os.path.join(tmp_path, "off.pkl")
+    res.save(path)
+    tuner = LoopTuner.from_checkpoint(path)
+    assert tuner.surrogate == "off"
+    # explicit kwarg still wins over the checkpoint value
+    tuner2 = LoopTuner.from_checkpoint(path, surrogate="auto")
+    assert tuner2.surrogate == "auto"

@@ -1,0 +1,343 @@
+"""Learned cost-model surrogate (ISSUE 3): dataset harvest, regressor
+sanity, two-stage frontier scoring, and search/tuner integration."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    LoopNest,
+    LoopTuneEnv,
+    LoopTuner,
+    ScheduleCache,
+    SurrogateDataset,
+    SurrogateModel,
+    SurrogateScorer,
+    TPUAnalyticalBackend,
+    beam_search,
+    greedy_search,
+    make_surrogate,
+    matmul_benchmark,
+    random_search,
+)
+from repro.core.actions import TPU_SPLITS, build_action_space
+from repro.core.encoders import EncoderConfig
+from repro.core.graph_features import GraphFeaturizer
+
+ACTIONS = build_action_space(TPU_SPLITS)
+BENCH = matmul_benchmark(128, 128, 256)
+
+
+def _env(benches=None, **kw):
+    return LoopTuneEnv(benches or [BENCH], TPUAnalyticalBackend(),
+                       actions=ACTIONS, seed=0, **kw)
+
+
+def _measured_env(budget_s: float = 5.0):
+    """An env whose cache holds a beam search's worth of measurements."""
+    env = _env()
+    beam_search(env, 0, width=2, order="dfs", depth=3, budget_s=budget_s)
+    return env
+
+
+# ---------------------------------------------------------------------------
+# Dataset: dedup, harvest from cache, key reconstruction
+# ---------------------------------------------------------------------------
+
+
+def test_dataset_dedups_by_structure_and_rejects_nonfinite():
+    env = _env()
+    env.reset(0)
+    ds = SurrogateDataset(env.featurizer)
+    nest = env.nest.clone()
+    assert ds.add(nest, 100.0) is True
+    assert ds.add(nest.clone(), 123.0) is False  # same structure: dup
+    moved = nest.clone()
+    moved.cursor = 2  # cursor is not structure
+    assert ds.add(moved, 50.0) is False
+    assert ds.add(nest, float("nan")) is False
+    assert len(ds) == 1
+    X, y = ds.arrays()
+    assert X.shape == (1, env.state_dim) and y.tolist() == [100.0]
+
+
+def test_from_structure_key_roundtrip():
+    nest = LoopNest(BENCH)
+    nest.split(0, 32)
+    nest.split(2, 8)
+    rebuilt = LoopNest.from_structure_key(BENCH, nest.structure_key())
+    assert rebuilt.structure_key() == nest.structure_key()
+    assert rebuilt.n_compute == nest.n_compute
+    with pytest.raises(ValueError, match="contraction"):
+        LoopNest.from_structure_key(matmul_benchmark(64, 64, 64),
+                                    nest.structure_key())
+
+
+def test_from_cache_harvests_measurements():
+    env = _measured_env()
+    assert len(env.cache) > 4
+    ds = SurrogateDataset.from_cache(env.cache, env.benchmarks, env.featurizer)
+    assert len(ds) == len(env.cache)
+    # values are the cached measurements, features match re-featurization
+    X, y = ds.arrays()
+    cached = dict(env.cache.entries())
+    assert sorted(y.tolist()) == sorted(float(v) for v in cached.values())
+    # unknown contractions are skipped, not fatal
+    ds2 = SurrogateDataset.from_cache(
+        env.cache, [matmul_benchmark(999, 999, 999)], env.featurizer)
+    assert len(ds2) == 0
+
+
+def test_cache_entries_does_not_touch_recency():
+    cache = ScheduleCache(capacity=2)
+    cache.put("a", 1.0)
+    cache.put("b", 2.0)
+    assert cache.entries() == [("a", 1.0), ("b", 2.0)]
+    cache.put("c", 3.0)  # evicts the true LRU ("a"), not a refreshed one
+    assert [k for k, _ in cache.entries()] == ["b", "c"]
+
+
+# ---------------------------------------------------------------------------
+# Model: fit/predict sanity, empty/singleton safety, both encoders
+# ---------------------------------------------------------------------------
+
+
+def test_model_fit_ranks_measurements():
+    env = _measured_env()
+    ds = SurrogateDataset.from_cache(env.cache, env.benchmarks, env.featurizer)
+    model = SurrogateModel(seed=0).fit(ds, steps=200)
+    X, y = ds.arrays()
+    preds = model.predict_obs(X)
+    assert np.isfinite(preds).all()
+    corr = np.corrcoef(np.log1p(np.maximum(preds, 0)), np.log1p(y))[0, 1]
+    assert corr > 0.5  # learned ranking signal, not noise
+
+
+def test_model_fit_empty_and_singleton_never_raise():
+    model = SurrogateModel(seed=1)
+    assert model.fit(SurrogateDataset(model.featurizer)).fitted is False
+    ds = SurrogateDataset(model.featurizer)
+    ds.add(LoopNest(BENCH), 123.0)
+    model.fit(ds, steps=3)  # zero-spread targets: unit-sigma fallback
+    assert model.fitted
+    assert np.isfinite(model.predict([LoopNest(BENCH)])).all()
+
+
+def test_model_graph_encoder_predicts_finite():
+    feat = GraphFeaturizer(24)
+    model = SurrogateModel.for_featurizer(feat, seed=0)
+    assert model.featurizer.kind == "graph"
+    nest = LoopNest(BENCH)
+    nest.split(0, 32)
+    preds = model.predict([LoopNest(BENCH), nest])
+    assert preds.shape == (2,) and np.isfinite(preds).all()
+    # a nest beyond the featurizer's capacity predicts +inf (= must measure)
+    tiny = SurrogateModel(encoder=EncoderConfig(kind="graph", max_loops=5))
+    assert tiny.predict([nest])[0] == np.inf
+
+
+# ---------------------------------------------------------------------------
+# Scorer: two-stage selection, cold start, refit cadence
+# ---------------------------------------------------------------------------
+
+
+def test_scorer_inactive_keeps_everything():
+    env = _env()
+    env.reset(0)
+    sc = SurrogateScorer.for_env(env)
+    nests = [env.nest.clone() for _ in range(5)]
+    assert sc.active is False
+    assert sc.select(env, nests) == [0, 1, 2, 3, 4]
+
+
+def test_scorer_active_keeps_hits_and_top_misses():
+    env = _measured_env()
+    sc = SurrogateScorer.for_env(env, keep_frac=0.25, min_keep=1, min_fit=4)
+    sc.harvest(env.cache, env.benchmarks)
+    assert sc.active
+    # candidate frontier: some cached structures + fresh splits
+    cached = [LoopNest.from_structure_key(BENCH, k)
+              for k, _ in env.cache.entries()[:2]]
+    fresh = []
+    for factor in (2, 4, 8, 16, 32, 64):
+        n = LoopNest(BENCH)
+        n.split(1, factor)
+        n.split(0, factor)
+        fresh.append(n)
+    fresh = [n for n in fresh if n.structure_key() not in env.cache]
+    nests = cached + fresh
+    kept = sc.select(env, nests)
+    # every cache hit survives; misses are thinned to ceil(0.25 * n)
+    assert set(range(len(cached))).issubset(kept)
+    n_miss_kept = len(kept) - len(cached)
+    assert n_miss_kept == max(1, int(np.ceil(0.25 * len(fresh))))
+    assert sc.n_skipped == len(fresh) - n_miss_kept
+
+
+def test_scorer_observe_refits_on_schedule():
+    env = _env()
+    sc = SurrogateScorer.for_env(env, min_fit=4, refit_every=4, fit_steps=2)
+    nests, gs = [], []
+    for factor in (2, 4, 8, 16):
+        n = LoopNest(BENCH)
+        n.split(1, factor)
+        nests.append(n)
+        gs.append(100.0 * factor)
+    sc.observe(nests, gs)
+    assert sc.model.n_fits == 1 and sc.active
+    n2 = LoopNest(BENCH)
+    n2.split(0, 2)
+    sc.observe([n2], [50.0])  # below refit_every: no refit yet
+    assert sc.model.n_fits == 1
+
+
+def test_make_surrogate_spec_resolution():
+    env = _env()
+    assert make_surrogate(None, env) is None
+    assert make_surrogate("off", env) is None
+    sc = make_surrogate("auto", env)
+    assert isinstance(sc, SurrogateScorer)
+    assert make_surrogate(sc, env) is sc
+    with pytest.raises(ValueError, match="surrogate"):
+        make_surrogate("banana", env)
+    with pytest.raises(ValueError, match="keep_frac"):
+        SurrogateScorer(sc.model, keep_frac=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Search integration: all three strategies, evals saved, quality kept
+# ---------------------------------------------------------------------------
+
+
+def test_searches_accept_surrogate_and_report_stats():
+    env = _env()
+    for fn, kw in ((greedy_search, dict(lookahead=1)),
+                   (beam_search, dict(width=2, order="dfs", depth=3)),
+                   (beam_search, dict(width=2, order="bfs", depth=3)),
+                   (random_search, dict(max_evals=30))):
+        env.clear_cache()
+        r = fn(env, 0, budget_s=10.0, surrogate="auto", **kw)
+        assert r.best_gflops >= r.base_gflops
+        assert r.surrogate_stats is not None
+        assert r.surrogate_stats["dataset_size"] >= 0
+        env.clear_cache()
+        r_off = fn(env, 0, budget_s=10.0, **kw)
+        assert r_off.surrogate_stats is None
+
+
+def test_warmed_surrogate_saves_beam_evals():
+    env = _env()
+    env.clear_cache()
+    off = beam_search(env, 0, width=2, order="bfs", depth=4, budget_s=30.0)
+    sc = SurrogateScorer.for_env(env, keep_frac=0.2, min_keep=2, min_fit=8,
+                                 refit_every=32, fit_steps=100)
+    env.clear_cache()
+    random_search(env, 0, budget_s=10.0, max_evals=40, surrogate=sc)
+    assert sc.active
+    env.clear_cache()
+    on = beam_search(env, 0, width=2, order="bfs", depth=4, budget_s=30.0,
+                     surrogate=sc)
+    assert on.n_evals < off.n_evals  # the whole point
+    assert on.best_gflops >= on.base_gflops
+    assert on.surrogate_stats["skipped"] > 0
+
+
+def test_tuner_surrogate_modes(tmp_path):
+    with pytest.raises(ValueError, match="surrogate"):
+        LoopTuner(policy="search", surrogate="banana")
+    t_off = LoopTuner(policy="search", search_budget_s=1.0, surrogate="off")
+    e = t_off.tune_matmul(96, 96, 96)
+    assert e["gflops"] >= e["base_gflops"]
+    assert t_off.stats()["surrogate"] == {"mode": "off"}
+    t_on = LoopTuner(policy="search", search_budget_s=1.0, surrogate="auto")
+    assert t_on.stats()["surrogate"] == {"mode": "auto"}  # pre-scorer: stable
+    e = t_on.tune_matmul(96, 96, 96)
+    assert e["gflops"] >= e["base_gflops"]
+    st = t_on.stats()["surrogate"]
+    assert st["mode"] == "auto"
+    assert st["dataset_size"] > 0  # the tuner's model fed from its searches
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def hyp():
+    return pytest.importorskip("hypothesis")
+
+
+def test_predictions_finite_for_any_valid_nest(hyp):
+    from hypothesis import given, settings, strategies as st
+
+    model = SurrogateModel(seed=0)
+    ds = SurrogateDataset(model.featurizer)
+    ds.add(LoopNest(BENCH), 100.0)
+    n2 = LoopNest(BENCH)
+    n2.split(0, 8)
+    ds.add(n2, 500.0)
+    model.fit(ds, steps=5)
+
+    @given(st.lists(st.integers(0, len(ACTIONS) - 1), max_size=10),
+           st.sampled_from([(64, 64, 64), (96, 128, 256), (17, 3, 250)]))
+    @settings(max_examples=25, deadline=None)
+    def check(seq, dims):
+        from repro.core.actions import apply_action, is_legal
+
+        nest = LoopNest(matmul_benchmark(*dims))
+        for a_idx in seq:
+            if len(nest.loops) >= 14:
+                break
+            a = ACTIONS[a_idx]
+            if is_legal(nest, a):
+                apply_action(nest, a)
+        preds = model.predict([nest])
+        assert np.isfinite(preds).all()
+
+    check()
+
+
+def test_graph_surrogate_invariant_to_node_slot_permutation(hyp):
+    from hypothesis import given, settings, strategies as st
+
+    from repro.core.graph_features import LoopGraph, encode_graph
+
+    m = 12
+    model = SurrogateModel(
+        encoder=EncoderConfig(kind="graph", max_loops=m, embed_dim=8,
+                              n_rounds=2), seed=3)
+    nest = LoopNest(BENCH)
+    nest.split(0, 32)
+    nest.split(2, 16)
+    packed = encode_graph(nest, m).pack()
+    base = model.predict_obs(packed)[0]
+
+    @given(st.permutations(list(range(m))))
+    @settings(max_examples=20, deadline=None)
+    def check(perm):
+        g = LoopGraph.unpack(packed, m)
+        p = np.asarray(perm)
+        shuffled = LoopGraph(g.nodes[p], g.mask[p], g.section[p],
+                             g.iter_id[p], g.pos[p]).pack()
+        assert model.predict_obs(shuffled)[0] == pytest.approx(
+            base, rel=1e-4, abs=1e-4)
+
+    check()
+
+
+def test_refit_never_raises_on_tiny_datasets(hyp):
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.lists(st.floats(min_value=0.0, max_value=1e6,
+                              allow_nan=False), max_size=1),
+           st.integers(0, 3))
+    @settings(max_examples=15, deadline=None)
+    def check(gflops_list, extra_steps):
+        model = SurrogateModel(seed=0)
+        ds = SurrogateDataset(model.featurizer)
+        for g in gflops_list:
+            ds.add(LoopNest(BENCH), g)
+        model.fit(ds, steps=1 + extra_steps)  # empty or singleton: no raise
+        model.fit(ds, steps=1)  # re-fit is also safe
+        assert np.isfinite(model.predict([LoopNest(BENCH)])).all()
+
+    check()
