@@ -1,0 +1,122 @@
+"""Evaluation-backend throughput: compiled JAX executor vs NumPy interpreter.
+
+The reward loop's dominant wall-clock cost is executing schedules; this
+harness measures single-schedule evaluation throughput (evals/sec) of the
+``jax`` backend against the ``numpy`` interpreter over schedules drawn from
+the paper's matmul dataset — steady-state, i.e. after the structure-cached
+compile — and verifies that every measured schedule still computes the
+reference einsum (max |err| <= 1e-3).
+
+Acceptance (ISSUE 4): jax >= 5x numpy eval throughput post-compile.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import (
+    LoopNest,
+    execute_reference,
+    make_backend,
+    make_inputs,
+    small_dataset,
+)
+from repro.core.actions import CPU_SPLITS, apply_action, build_action_space
+
+from .common import save_result
+
+
+def _schedules(n_benchmarks: int, per_bench: int, seed: int) -> List[LoopNest]:
+    """Tuned-looking schedules: each benchmark contributes its naive nest
+    plus ``per_bench - 1`` random-action variants (the states the RL loop
+    actually measures)."""
+    rng = np.random.default_rng(seed)
+    actions = build_action_space(CPU_SPLITS)
+    nests: List[LoopNest] = []
+    for bench in small_dataset(n_benchmarks, seed=seed):
+        nests.append(LoopNest(bench))
+        for _ in range(per_bench - 1):
+            nest = LoopNest(bench)
+            for a in rng.integers(0, len(actions), size=8):
+                if len(nest.loops) >= 14:
+                    break
+                apply_action(nest, actions[int(a)])
+            nests.append(nest)
+    return nests
+
+
+def _throughput(backend, nests: List[LoopNest], repeats: int) -> float:
+    """Steady-state evals/sec: one untimed pass (warms compile caches and
+    operand sets), then ``repeats`` timed passes."""
+    backend.evaluate_batch(nests)  # warm-up: compiles once per structure
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        backend.evaluate_batch(nests)
+    return repeats * len(nests) / (time.perf_counter() - t0)
+
+
+def _max_abs_error(backend, nests: List[LoopNest]) -> float:
+    """Max output |err| vs the reference einsum over every measured
+    schedule, through the backend's own executable."""
+    worst = 0.0
+    for nest in nests:
+        c = nest.contraction
+        ref = execute_reference(c, make_inputs(c, seed=backend.seed))
+        if hasattr(backend, "execute"):
+            out = np.asarray(backend.execute(nest))
+        else:
+            from repro.core.cpu_backend import execute
+
+            out = execute(nest, make_inputs(c, seed=backend.seed),
+                          backend.vec_cap)
+        worst = max(worst, float(np.abs(out - ref).max()))
+    return worst
+
+
+def run(n_benchmarks: int = 4, per_bench: int = 3, repeats: int = 2,
+        eval_repeats: int = 1, seed: int = 0,
+        out_name: str = "bench_backend") -> dict:
+    nests = _schedules(n_benchmarks, per_bench, seed)
+    print(f"benchmarking {len(nests)} schedules over {n_benchmarks} "
+          f"contractions (eval repeats={eval_repeats})")
+
+    result = {"n_schedules": len(nests), "n_benchmarks": n_benchmarks,
+              "backends": {}}
+    rates = {}
+    for kind in ("numpy", "jax"):
+        backend = make_backend(kind, repeats=eval_repeats, seed=seed)
+        t0 = time.perf_counter()
+        rate = _throughput(backend, nests, repeats)
+        err = _max_abs_error(backend, nests)
+        rates[kind] = rate
+        entry = {
+            "evals_per_sec": rate,
+            "max_abs_error": err,
+            "wall_s": time.perf_counter() - t0,
+        }
+        if hasattr(backend, "stats"):
+            entry["stats"] = backend.stats()
+        result["backends"][kind] = entry
+        print(f"  {kind:>5}: {rate:8.2f} evals/s  max|err| {err:.2e}")
+        assert err <= 1e-3, f"{kind} backend error {err} vs reference"
+
+    result["speedup_jax_over_numpy"] = rates["jax"] / rates["numpy"]
+    print(f"  jax/numpy speedup: {result['speedup_jax_over_numpy']:.1f}x "
+          f"(acceptance: >= 5x)")
+    path = save_result(out_name, result)
+    print(f"wrote {path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="bench_backend")
+    args = ap.parse_args()
+    if args.full:
+        run(n_benchmarks=8, per_bench=4, repeats=3, out_name=args.out)
+    else:
+        run(out_name=args.out + "_quick")

@@ -27,18 +27,20 @@ def load_result(name: str):
 
 def build_env(backend_kind: str = "tpu", n_benchmarks: int = 64, seed: int = 0,
               episode_len: int = 10, dims=None):
-    """The standard experiment environment: sampled MM dataset + backend."""
-    from repro.core import LoopTuneEnv, small_dataset
+    """The standard experiment environment: sampled MM dataset + backend.
+
+    ``backend_kind`` is any registry name ("tpu" | "numpy" | "jax" |
+    "auto" | "cpu" — see ``repro.core.make_backend``); the measured
+    executors run with ``repeats=2`` to keep harness passes short."""
+    from repro.core import LoopTuneEnv, make_backend, small_dataset
     from repro.core.actions import TPU_SPLITS, CPU_SPLITS, build_action_space
-    from repro.core.cost_model import TPUAnalyticalBackend
-    from repro.core.cpu_backend import CPUMeasuredBackend
 
     benches = small_dataset(n_benchmarks, seed=seed)
     if backend_kind == "tpu":
-        backend = TPUAnalyticalBackend()
+        backend = make_backend("tpu")
         actions = build_action_space(TPU_SPLITS)
     else:
-        backend = CPUMeasuredBackend(repeats=2)
+        backend = make_backend(backend_kind, repeats=2)
         actions = build_action_space(CPU_SPLITS)
     return LoopTuneEnv(benches, backend, actions=actions,
                        episode_len=episode_len, seed=seed)

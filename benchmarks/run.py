@@ -19,7 +19,7 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: rl,search,surrogate,tuned,kernels,"
-                         "roofline,vec_env,networks")
+                         "roofline,vec_env,networks,backend")
     args = ap.parse_args(argv)
 
     want = set(args.only.split(",")) if args.only else None
@@ -69,6 +69,15 @@ def main(argv=None) -> int:
         section("tuned", lambda: bench_tuned_vs_baselines.run(
             budget_s=10.0 if args.full else 2.0,
             out_name="bench_tuned_vs_baselines" + sfx))
+    if should("backend"):
+        from . import bench_backend
+        if args.full:
+            section("backend", lambda: bench_backend.run(
+                n_benchmarks=8, per_bench=4, repeats=3,
+                out_name="bench_backend"))
+        else:
+            section("backend", lambda: bench_backend.run(
+                out_name="bench_backend_quick"))
     if should("vec_env"):
         from . import bench_vec_env
         section("vec_env", lambda: bench_vec_env.run(

@@ -1,10 +1,11 @@
 """LoopTune core — the paper's primary contribution.
 
 Loop-nest IR + cursor action space + graph-derived features + normalized
-GFLOPS reward (paper §III), two reward backends (measured CPU / analytical
-TPU-v5e), five RL trainers (§III-D), traditional searches (§V), and the
-framework-facing :class:`LoopTuner` that persists tuned schedules for the
-Pallas kernel layer.
+GFLOPS reward (paper §III), a backend registry with three reward executors
+(measured NumPy interpreter / compiled JAX / analytical TPU-v5e), five RL
+trainers (§III-D), traditional searches (§V), and the framework-facing
+:class:`LoopTuner` that persists tuned schedules for the Pallas kernel
+layer.
 """
 from .actions import (
     Action,
@@ -15,9 +16,22 @@ from .actions import (
     is_legal,
     legal_mask,
 )
-from .backend import Backend
+from .backend import (
+    Backend,
+    backend_name,
+    make_backend,
+    register_backend,
+    registered_backends,
+)
 from .cost_model import TPUAnalyticalBackend
 from .cpu_backend import CPUMeasuredBackend, execute, execute_reference, make_inputs
+from .jax_backend import (
+    CompiledKernelCache,
+    JaxJitBackend,
+    execute_jax,
+    match_kernel_route,
+    register_kernel_route,
+)
 from .dataset import (
     DIMS,
     matmul_dataset,
@@ -72,7 +86,7 @@ from .rl_common import (
     make_masked_act,
     sample_masked,
 )
-from .schedule_cache import ScheduleCache
+from .schedule_cache import LRUCache, ScheduleCache
 from .surrogate import (
     SurrogateDataset,
     SurrogateModel,

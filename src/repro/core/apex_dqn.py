@@ -49,6 +49,12 @@ class ApexConfig:
     # surrogate policy the tuner should use with this checkpoint's policy
     # ("auto" | "off") — persisted via checkpoint_meta
     surrogate: str = "auto"
+    # reward-source executor for the rollout fleet, by registry name
+    # ("numpy" | "jax" | "tpu" | "auto"; see core.backend.make_backend).
+    # None = keep the executor of the env the factory provides.  The
+    # resolved name is persisted via checkpoint_meta so the tuner can
+    # rebuild the same reward source.
+    backend: Optional[str] = None
 
 
 def make_update_fn(cfg: ApexConfig, q_apply):
@@ -120,7 +126,8 @@ def train_apex(
     key = jax.random.PRNGKey(cfg.seed)
     venv = VecLoopTuneEnv.ensure(
         env_factory(0), cfg.n_actors, seed=cfg.seed,
-        featurizer=get_encoder(enc_cfg.kind).featurizer(enc_cfg))
+        featurizer=get_encoder(enc_cfg.kind).featurizer(enc_cfg),
+        backend=cfg.backend)
     net = build_network("dueling", enc_cfg, venv.n_actions)
     n = venv.n_envs
     params = net.init(key)
@@ -182,4 +189,5 @@ def train_apex(
                        rewards, times, extra={"updates": updates},
                        meta=checkpoint_meta("dueling", enc_cfg, venv.actions,
                                             venv.state_dim,
-                                            surrogate=cfg.surrogate))
+                                            surrogate=cfg.surrogate,
+                                            backend=venv.backend_name))

@@ -1,8 +1,8 @@
-"""Evaluation-backend protocol for LoopTune reward sources.
+"""Evaluation-backend protocol + registry for LoopTune reward sources.
 
-Every reward source — the analytical TPU cost model and the measured CPU
-executor today, real-hardware measurement services tomorrow — implements
-:class:`Backend`:
+Every reward source — the analytical TPU cost model, the measured NumPy
+interpreter, the compiled JAX executor, real-hardware measurement services
+tomorrow — implements :class:`Backend`:
 
 * ``evaluate(nest) -> float``          — GFLOPS of one schedule
 * ``evaluate_batch(nests) -> ndarray`` — GFLOPS of many schedules at once
@@ -14,12 +14,29 @@ nests as a batch and re-evaluates only the structurally-changed lanes in a
 single call, and the traditional searches score a whole expansion frontier
 at once.  The default implementation loops ``evaluate`` so the batched and
 scalar paths are numerically identical; backends with a cheaper amortized
-path (vectorized analytics, RPC measurement services) override it.
+path (vectorized analytics, compiled replay, RPC measurement services)
+override it.
+
+Backends are selected *by name* through :func:`make_backend` — the registry
+every consumer (envs, trainers, tuner, searches, benchmarks) threads its
+``backend`` string through, and whose resolved name rides in checkpoints so
+a policy records which reward signal trained it:
+
+* ``"numpy"`` (alias ``"cpu"``) — the blocked NumPy interpreter
+  (:class:`~repro.core.cpu_backend.CPUMeasuredBackend`)
+* ``"jax"`` — structure-cached JIT execution
+  (:class:`~repro.core.jax_backend.JaxJitBackend`)
+* ``"tpu"`` — the analytical TPU cost model
+  (:class:`~repro.core.cost_model.TPUAnalyticalBackend`)
+* ``"auto"`` — the fastest measured executor available: ``"jax"`` when JAX
+  imports, else ``"numpy"``
+
+Register additional executors with :func:`register_backend`.
 """
 from __future__ import annotations
 
 import abc
-from typing import Sequence
+from typing import Callable, Dict, Sequence, Union
 
 import numpy as np
 
@@ -28,6 +45,13 @@ from .loop_ir import LoopNest
 
 class Backend(abc.ABC):
     """Schedule -> GFLOPS evaluation protocol."""
+
+    #: registry name of the executor — rides in checkpoint metadata (see
+    #: ``encoders.checkpoint_meta``) so ``LoopTuner.from_checkpoint`` can
+    #: rebuild the reward source.  Deliberately no default: an unnamed
+    #: subclass falls back to its class name in ``backend_name`` (visible
+    #: in stats/meta) instead of a bogus resolvable-looking string.
+    name: str
 
     @abc.abstractmethod
     def evaluate(self, nest: LoopNest) -> float:
@@ -44,3 +68,86 @@ class Backend(abc.ABC):
     @abc.abstractmethod
     def peak(self) -> float:
         """Peak GFLOPS of the target — the paper's reward normalizer."""
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_BACKENDS: Dict[str, Callable[..., Backend]] = {}
+
+
+def register_backend(name: str, factory: Callable[..., Backend]) -> None:
+    """Register ``factory(**kw) -> Backend`` under ``name`` (overwrites).
+
+    For checkpoint round-tripping (config -> meta -> tuner), the backends a
+    factory builds should set ``.name`` to a *registered* name — that is
+    the string ``checkpoint_meta`` records and ``make_backend`` later
+    resolves."""
+    _BACKENDS[name] = factory
+
+
+def registered_backends() -> list:
+    return sorted(_BACKENDS)
+
+
+def backend_name(backend: Backend) -> str:
+    """The registry name a backend instance answers to."""
+    return getattr(backend, "name", type(backend).__name__)
+
+
+def _numpy_backend(**kw) -> Backend:
+    from .cpu_backend import CPUMeasuredBackend
+
+    return CPUMeasuredBackend(**kw)
+
+
+def _jax_backend(**kw) -> Backend:
+    from .jax_backend import JaxJitBackend
+
+    return JaxJitBackend(**kw)
+
+
+def _tpu_backend(**kw) -> Backend:
+    from .cost_model import TPUAnalyticalBackend
+
+    return TPUAnalyticalBackend(**kw)
+
+
+def _auto_backend(**kw) -> Backend:
+    try:
+        return _jax_backend(**kw)
+    except ImportError:
+        return _numpy_backend(**kw)
+
+
+register_backend("numpy", _numpy_backend)
+register_backend("cpu", _numpy_backend)  # historical alias
+register_backend("jax", _jax_backend)
+register_backend("tpu", _tpu_backend)
+register_backend("auto", _auto_backend)
+
+
+def make_backend(spec: Union[str, Backend, None] = "auto", **kw) -> Backend:
+    """Resolve a backend *spec* to an instance.
+
+    ``spec`` may be a registry name (``"numpy" | "jax" | "tpu" | "auto"``
+    plus anything registered via :func:`register_backend`), an existing
+    :class:`Backend` instance (passed through, ``kw`` must be empty), or
+    ``None`` (same as ``"auto"``).
+    """
+    if spec is None:
+        spec = "auto"
+    if isinstance(spec, Backend):
+        if kw:
+            raise ValueError(
+                f"backend kwargs {sorted(kw)} cannot apply to an "
+                f"already-built {backend_name(spec)!r} backend instance")
+        return spec
+    try:
+        factory = _BACKENDS[spec]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown backend {spec!r}; registered: {registered_backends()}"
+        ) from None
+    return factory(**kw)

@@ -99,6 +99,8 @@ def _util(e: int, t: int) -> float:
 class TPUAnalyticalBackend(Backend):
     """Schedule -> modelled GFLOPS for a single TPU v5e core."""
 
+    name = "tpu"
+
     def __init__(self, dtype_bytes: int = 2, vmem_budget: int = VMEM_BUDGET,
                  reg_budget: int = REG_BUDGET):
         self.dtype_bytes = dtype_bytes

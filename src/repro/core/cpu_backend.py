@@ -21,8 +21,10 @@ import numpy as np
 
 from .backend import Backend
 from .loop_ir import Contraction, LoopLevel, LoopNest
+from .schedule_cache import LRUCache
 
 VEC_CAP_DEFAULT = 4096  # max elements enumerated by the vectorized suffix
+INPUTS_CACHE_CAPACITY = 64  # per-contraction operand arrays kept hot
 
 
 # ---------------------------------------------------------------------------
@@ -166,6 +168,8 @@ class CPUMeasuredBackend(Backend):
     "exclude warm-up, take the fastest measurement" protocol.
     """
 
+    name = "numpy"
+
     def __init__(
         self,
         vec_cap: int = VEC_CAP_DEFAULT,
@@ -176,14 +180,14 @@ class CPUMeasuredBackend(Backend):
         self.repeats = repeats
         self.seed = seed
         self._peak: Optional[float] = None
-        self._inputs_cache: Dict[str, Dict[str, np.ndarray]] = {}
+        # LRU, not clear-all-on-overflow: evaluating a 65th contraction must
+        # not throw away the 64 hot operand sets (the same eviction
+        # discipline as ScheduleCache / CompiledKernelCache)
+        self._inputs_cache: LRUCache = LRUCache(INPUTS_CACHE_CAPACITY)
 
     def _inputs(self, c: Contraction) -> Dict[str, np.ndarray]:
-        if c.name not in self._inputs_cache:
-            if len(self._inputs_cache) > 64:
-                self._inputs_cache.clear()
-            self._inputs_cache[c.name] = make_inputs(c, self.seed)
-        return self._inputs_cache[c.name]
+        return self._inputs_cache.get_or_create(
+            c.name, lambda: make_inputs(c, self.seed))
 
     def evaluate(self, nest: LoopNest) -> float:
         """GFLOPS of the schedule (higher is better)."""

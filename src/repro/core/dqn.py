@@ -47,6 +47,12 @@ class DQNConfig:
     # surrogate policy the tuner should use with this checkpoint's policy
     # ("auto" | "off") — persisted via checkpoint_meta
     surrogate: str = "auto"
+    # reward-source executor for the rollout fleet, by registry name
+    # ("numpy" | "jax" | "tpu" | "auto"; see core.backend.make_backend).
+    # None = keep the executor of the env the factory provides.  The
+    # resolved name is persisted via checkpoint_meta so the tuner can
+    # rebuild the same reward source.
+    backend: Optional[str] = None
 
 
 def make_update_fn(cfg: DQNConfig, q_apply):
@@ -108,7 +114,8 @@ def train_dqn(
     enc_cfg = cfg.encoder.resolved(cfg.hidden)
     venv = VecLoopTuneEnv.ensure(
         env, cfg.n_envs, seed=cfg.seed,
-        featurizer=get_encoder(enc_cfg.kind).featurizer(enc_cfg))
+        featurizer=get_encoder(enc_cfg.kind).featurizer(enc_cfg),
+        backend=cfg.backend)
     net = build_network("q", enc_cfg, venv.n_actions)
     n = venv.n_envs
     rng = np.random.default_rng(cfg.seed)
@@ -169,4 +176,5 @@ def train_dqn(
                        rewards, times, extra={"updates": updates},
                        meta=checkpoint_meta("q", enc_cfg, venv.actions,
                                             venv.state_dim,
-                                            surrogate=cfg.surrogate))
+                                            surrogate=cfg.surrogate,
+                                            backend=venv.backend_name))

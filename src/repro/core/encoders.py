@@ -258,11 +258,14 @@ def make_policy_act(head: str, cfg: EncoderConfig, n_actions: int = 0):
 
 def checkpoint_meta(head: str, cfg: EncoderConfig,
                     actions: Sequence[Action], state_dim: int,
-                    surrogate: str = "auto") -> Dict[str, Any]:
+                    surrogate: str = "auto",
+                    backend: Optional[str] = None) -> Dict[str, Any]:
     """The metadata every trainer embeds in its checkpoints so acting can be
     reconstructed without assuming defaults: network head, encoder config,
-    the exact action space (names + split factors), and the surrogate policy
-    (``"auto"``/``"off"``) the tuner should use for search fallbacks."""
+    the exact action space (names + split factors), the surrogate policy
+    (``"auto"``/``"off"``) the tuner should use for search fallbacks, and
+    the registry name of the backend that produced the reward signal
+    (``LoopTuner.from_checkpoint`` defaults to tuning on the same one)."""
     return {
         "head": head,
         "encoder": cfg.to_dict(),
@@ -271,4 +274,5 @@ def checkpoint_meta(head: str, cfg: EncoderConfig,
         "splits": [a.param for a in actions if a.kind == "split"],
         "state_dim": int(state_dim),
         "surrogate": surrogate,
+        "backend": backend,
     }

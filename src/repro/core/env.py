@@ -18,6 +18,7 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 from .actions import Action, apply_action, build_action_space, legal_mask
+from .backend import Backend, backend_name, make_backend
 from .graph_features import FlatFeaturizer
 from .loop_ir import Contraction, LoopNest
 from .schedule_cache import DEFAULT_CAPACITY, ScheduleCache
@@ -29,7 +30,7 @@ class LoopTuneEnv:
     def __init__(
         self,
         benchmarks: Sequence[Contraction],
-        backend,
+        backend="auto",
         actions: Optional[Sequence[Action]] = None,
         episode_len: int = DEFAULT_EPISODE_LEN,
         seed: int = 0,
@@ -38,9 +39,12 @@ class LoopTuneEnv:
         featurizer=None,
     ):
         self.benchmarks = list(benchmarks)
-        self.backend = backend
+        # backend may be a Backend instance or a registry name
+        # ("numpy" | "jax" | "tpu" | "auto" | ...) — see core.backend
+        self.backend = make_backend(backend)
         self.actions = list(actions) if actions is not None else build_action_space()
         self.episode_len = episode_len
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         # how the nest becomes the observation vector: FlatFeaturizer (the
         # paper's MAX_LOOPS x 20 flattening, the default) or GraphFeaturizer
@@ -48,7 +52,7 @@ class LoopTuneEnv:
         # graph_features.py; the policy's EncoderConfig dictates the choice
         self.featurizer = featurizer if featurizer is not None else FlatFeaturizer()
         self.cache = cache if cache is not None else ScheduleCache(cache_size)
-        self.peak = backend.peak()
+        self.peak = self.backend.peak()
         self.nest: Optional[LoopNest] = None
         self.t = 0
         self._gflops = 0.0
@@ -66,6 +70,32 @@ class LoopTuneEnv:
 
     def clear_cache(self) -> None:
         self.cache.clear()
+
+    # -- backend selection ------------------------------------------------------
+
+    @property
+    def backend_name(self) -> str:
+        return backend_name(self.backend)
+
+    def with_backend(self, backend) -> "LoopTuneEnv":
+        """A sibling env on the named executor.  Same benchmarks, actions,
+        episode length and featurizer; the evaluation cache is shared only
+        when the executor is unchanged — GFLOPS measured by one backend
+        would poison another's rewards.  A *name* matching the current
+        executor reuses it (and the cache); an explicit Backend *instance*
+        is always honored as given (it may carry different repeats/seed, so
+        its measurements get a fresh cache unless it is this very
+        instance)."""
+        be = backend if isinstance(backend, Backend) else make_backend(backend)
+        if not isinstance(backend, Backend) and (
+                backend_name(be) == self.backend_name):
+            be = self.backend
+        same = be is self.backend
+        return LoopTuneEnv(
+            self.benchmarks, be,
+            actions=self.actions, episode_len=self.episode_len,
+            seed=self.seed, cache=self.cache if same else None,
+            featurizer=self.featurizer)
 
     # -- gym API ----------------------------------------------------------------
 

@@ -41,6 +41,12 @@ class ImpalaConfig:
     # surrogate policy the tuner should use with this checkpoint's policy
     # ("auto" | "off") — persisted via checkpoint_meta
     surrogate: str = "auto"
+    # reward-source executor for the rollout fleet, by registry name
+    # ("numpy" | "jax" | "tpu" | "auto"; see core.backend.make_backend).
+    # None = keep the executor of the env the factory provides.  The
+    # resolved name is persisted via checkpoint_meta so the tuner can
+    # rebuild the same reward source.
+    backend: Optional[str] = None
 
 
 def vtrace(behavior_logp, target_logp, rewards, values, dones, bootstrap,
@@ -110,7 +116,8 @@ def train_impala(env_factory, n_iterations: int = 300,
     rng = np.random.default_rng(cfg.seed)
     venv = VecLoopTuneEnv.ensure(
         env_factory(0), cfg.n_envs, seed=cfg.seed,
-        featurizer=get_encoder(enc_cfg.kind).featurizer(enc_cfg))
+        featurizer=get_encoder(enc_cfg.kind).featurizer(enc_cfg),
+        backend=cfg.backend)
     net = build_network("actor_critic", enc_cfg, venv.n_actions)
     n_envs = venv.n_envs
     params = net.init(jax.random.PRNGKey(cfg.seed))
@@ -165,4 +172,5 @@ def train_impala(env_factory, n_iterations: int = 300,
                        rewards_log, times,
                        meta=checkpoint_meta("actor_critic", enc_cfg,
                                             venv.actions, venv.state_dim,
-                                            surrogate=cfg.surrogate))
+                                            surrogate=cfg.surrogate,
+                                            backend=venv.backend_name))

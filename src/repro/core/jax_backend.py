@@ -1,0 +1,419 @@
+"""Compiled JAX executor — structure-cached JIT lowering of LoopNest schedules.
+
+The measured reward path used to be interpreter-bound: ``cpu_backend.execute``
+walks the blocked iteration space in Python, issuing one tiny ``np.einsum``
+per slab — thousands of interpreter round-trips per measurement.  This module
+lowers a :class:`LoopNest` to a *single jitted callable* instead:
+
+1. The python-side loop levels are enumerated **once** into a static slab
+   plan (offset/extent per slab) — by driving the exact same
+   ``cpu_backend._run_section`` recursion the NumPy executor uses, so the
+   plan is identical by construction.
+2. Slabs are grouped by extent shape (tails form their own groups; JAX
+   slices need static sizes).  Small groups unroll straight into the trace;
+   large ones roll into a ``lax.fori_loop`` over the stacked slab offsets.
+   Either way each slab's body is one fused ``jnp.einsum`` over its operand
+   slices plus an in-place f32 accumulator window update, and the
+   write-back section replays the same way (accumulator -> output in
+   scheduled traversal order) — the compiled program performs the same
+   traversal work as the interpreter, minus the interpreter.
+3. Nests whose contraction matches a registered kernel shape route through
+   the real Pallas kernel instead (``kernels/matmul.py``, block shape and
+   grid order lowered from the schedule via
+   :func:`~repro.core.registry.schedule_to_blockspec`; interpret mode on
+   CPU).  See :func:`register_kernel_route`.
+
+Executables are cached by ``structure_key`` in :class:`CompiledKernelCache`
+(LRU — the same eviction discipline as :class:`ScheduleCache`), so
+``evaluate_batch`` compiles each distinct structure once and every later
+measurement only re-times.  Semantics parity with the NumPy executor
+(`execute` == reference einsum for every reachable schedule) is
+property-tested in ``tests/test_jax_backend.py``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .backend import Backend
+from .cpu_backend import (INPUTS_CACHE_CAPACITY, VEC_CAP_DEFAULT,
+                          _einsum_expr, _run_section, make_inputs)
+from .loop_ir import Contraction, LoopNest
+from .schedule_cache import LRUCache
+
+# compiled executables are heavyweight (traced + lowered programs); keep a
+# bounded working set rather than ScheduleCache's 200k float entries
+COMPILED_CACHE_CAPACITY = 1024
+
+
+# ---------------------------------------------------------------------------
+# Static slab plan
+# ---------------------------------------------------------------------------
+
+
+def _slab_plan(
+    levels, c: Contraction, vec_cap: int
+) -> List[Tuple[Dict[str, int], Dict[str, int]]]:
+    """All ``(offsets, extents)`` slabs the blocked interpreter would visit,
+    in traversal order — computed once per structure."""
+    plan: List[Tuple[Dict[str, int], Dict[str, int]]] = []
+    _run_section(levels, c,
+                 lambda off, ext: plan.append((dict(off), dict(ext))),
+                 vec_cap)
+    return plan
+
+
+def _group_slabs(
+    plan: Sequence[Tuple[Dict[str, int], Dict[str, int]]],
+    iters: Sequence[str],
+) -> List[Tuple[Dict[str, int], List[Dict[str, int]]]]:
+    """Group slabs by extent shape (insertion-ordered).  Returns
+    ``[(extents, [offsets, ...]), ...]`` — every slab in a group shares its
+    static shape, so the whole group runs as one batched op."""
+    groups: Dict[Tuple[int, ...], List[Dict[str, int]]] = {}
+    exts: Dict[Tuple[int, ...], Dict[str, int]] = {}
+    for off, ext in plan:
+        key = tuple(ext[it] for it in iters)
+        groups.setdefault(key, []).append(off)
+        exts[key] = ext
+    return [(exts[k], offs) for k, offs in groups.items()]
+
+
+def _tensor_slabs(offs: Sequence[Dict[str, int]], ext: Dict[str, int],
+                  iterators: Sequence[str]) -> Tuple[np.ndarray, Tuple[int, ...]]:
+    """Per-tensor slab addressing: ``(starts (K, d) int32, sizes (d,))``."""
+    starts = np.array([[off[it] for it in iterators] for off in offs],
+                      dtype=np.int32).reshape(len(offs), len(iterators))
+    return starts, tuple(ext[it] for it in iterators)
+
+
+# ---------------------------------------------------------------------------
+# Lowering: LoopNest -> jitted callable
+# ---------------------------------------------------------------------------
+
+
+# groups at or below this slab count are unrolled straight into the trace
+# (XLA fuses the static slices); larger groups roll into a fori_loop whose
+# dynamic_update_slice accumulator XLA keeps in place
+UNROLL_MAX = 64
+
+
+def _build_slab_fn(nest: LoopNest, vec_cap: int,
+                   unroll_max: int = UNROLL_MAX) -> Callable:
+    """Lower the schedule's compute + write-back sections to one function
+    ``fn(*operands) -> out`` of pure JAX ops (jit it to compile).
+
+    Each slab group becomes either statically-unrolled slices (small groups)
+    or a ``lax.fori_loop`` over the stacked slab offsets; every slab's body
+    is one fused ``jnp.einsum`` over its operand slices plus an in-place
+    accumulator window update — the compiled replacement for the
+    interpreter's per-slab ``np.einsum`` round-trips.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    c = nest.contraction
+    iters = list(c.iter_sizes)
+    expr = _einsum_expr(c)
+
+    compute_groups = []
+    for ext, offs in _group_slabs(
+            _slab_plan(nest.compute_loops, c, vec_cap), iters):
+        in_slabs = [_tensor_slabs(offs, ext, t.iterators) for t in c.inputs()]
+        out_slabs = _tensor_slabs(offs, ext, c.out.iterators)
+        compute_groups.append((in_slabs, out_slabs, len(offs)))
+
+    wb_groups = [
+        (_tensor_slabs(offs, ext, c.out.iterators), len(offs))
+        for ext, offs in _group_slabs(
+            _slab_plan(nest.writeback_loops, c, vec_cap), iters)
+    ]
+
+    def fn(*operands):
+        acc = jnp.zeros(c.out.dims, jnp.float32)
+        for in_slabs, (out_starts, out_sizes), k in compute_groups:
+            in_starts = [jnp.asarray(s) for s, _ in in_slabs]
+            out_starts_j = jnp.asarray(out_starts)
+
+            def body(i, acc, in_starts=in_starts, in_slabs=in_slabs,
+                     out_starts=out_starts_j, out_sizes=out_sizes):
+                slabs = [
+                    lax.dynamic_slice(op, tuple(st[i]), sizes)
+                    for op, st, (_, sizes) in zip(operands, in_starts, in_slabs)
+                ]
+                part = jnp.einsum(expr, *slabs)
+                cur = lax.dynamic_slice(acc, tuple(out_starts[i]), out_sizes)
+                return lax.dynamic_update_slice(acc, cur + part,
+                                                tuple(out_starts[i]))
+
+            if k <= unroll_max:
+                for i in range(k):
+                    acc = body(i, acc)
+            else:
+                acc = lax.fori_loop(0, k, body, acc)
+
+        # write-back nest: copy the accumulator into the output buffer in
+        # the scheduled traversal order (slabs partition the output exactly)
+        out = jnp.zeros(c.out.dims, jnp.float32)
+        for (wb_starts, wb_sizes), k in wb_groups:
+            wb_starts_j = jnp.asarray(wb_starts)
+
+            def wb_body(i, out, starts=wb_starts_j, sizes=wb_sizes):
+                slab = lax.dynamic_slice(acc, tuple(starts[i]), sizes)
+                return lax.dynamic_update_slice(out, slab, tuple(starts[i]))
+
+            if k <= unroll_max:
+                for i in range(k):
+                    out = wb_body(i, out)
+            else:
+                out = lax.fori_loop(0, k, wb_body, out)
+        return out
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Kernel-shape routes (Pallas fast path)
+# ---------------------------------------------------------------------------
+
+_KERNEL_ROUTES: Dict[str, Tuple[Callable[[Contraction], bool],
+                                Callable[[LoopNest, bool], Callable]]] = {}
+
+
+def register_kernel_route(name: str,
+                          match: Callable[[Contraction], bool],
+                          lower: Callable[[LoopNest, bool], Callable]) -> None:
+    """Register a hand-written kernel route: nests whose contraction
+    satisfies ``match`` lower through ``lower(nest, interpret) -> fn`` (the
+    returned ``fn(*operands)`` must be jit-compatible) instead of the
+    generic slab path."""
+    _KERNEL_ROUTES[name] = (match, lower)
+
+
+def match_kernel_route(c: Contraction) -> Optional[str]:
+    for name, (match, _) in _KERNEL_ROUTES.items():
+        if match(c):
+            return name
+    return None
+
+
+def _is_matmul(c: Contraction) -> bool:
+    return (c.rhs is not None
+            and len(c.iter_sizes) == 3
+            and len(c.out.iterators) == 2
+            and len(c.lhs.iterators) == 2
+            and len(c.rhs.iterators) == 2
+            and c.lhs.iterators[0] == c.out.iterators[0]
+            and c.rhs.iterators[1] == c.out.iterators[1]
+            and c.lhs.iterators[1] == c.rhs.iterators[0])
+
+
+def _lower_matmul(nest: LoopNest, interpret: bool) -> Callable:
+    """Schedule -> Pallas tiled matmul: the VMEM-resident suffix becomes the
+    BlockSpec block shape and the outer levels the grid order (exactly how
+    tuned schedules ship to the kernel layer via the registry)."""
+    import jax.numpy as jnp
+
+    from ..kernels.matmul import matmul
+    from .registry import schedule_to_blockspec
+
+    c = nest.contraction
+    m_it, n_it = c.out.iterators
+    k_it = c.lhs.iterators[1]
+    block, grid_order = schedule_to_blockspec(nest)
+    order = "nm" if grid_order.index(n_it) < grid_order.index(m_it) else "mn"
+
+    def fn(a, b):
+        return matmul(a, b, bm=int(block[m_it]), bk=int(block[k_it]),
+                      bn=int(block[n_it]), grid_order=order,
+                      interpret=interpret, out_dtype=jnp.float32)
+
+    return fn
+
+
+register_kernel_route("matmul", _is_matmul, _lower_matmul)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-executable cache
+# ---------------------------------------------------------------------------
+
+
+class CompiledKernelCache(LRUCache):
+    """LRU map from ``(structure_key, vec_cap, route)`` to a jitted
+    executable — shares the eviction discipline of :class:`ScheduleCache`
+    (bounded, evict-coldest, never clear-all).  ``misses`` counts compiles:
+    repeated ``evaluate_batch`` calls over the same structures trace once."""
+
+    def __init__(self, capacity: int = COMPILED_CACHE_CAPACITY):
+        super().__init__(capacity)
+
+
+# ---------------------------------------------------------------------------
+# Reference-parity execution surface (used by the property tests)
+# ---------------------------------------------------------------------------
+
+
+def execute_jax(
+    nest: LoopNest,
+    arrays: Dict[str, np.ndarray],
+    vec_cap: int = VEC_CAP_DEFAULT,
+    route: Optional[str] = None,
+    interpret: bool = True,
+) -> np.ndarray:
+    """Execute the schedule through a freshly-built jitted callable; returns
+    the output tensor as NumPy.  ``route`` forces a registered kernel route
+    (e.g. ``"matmul"`` for the Pallas path); None uses the generic slab
+    lowering."""
+    import jax
+
+    c = nest.contraction
+    if route is not None:
+        if not _KERNEL_ROUTES[route][0](c):
+            raise ValueError(f"nest {c.name!r} does not match route {route!r}")
+        fn = _KERNEL_ROUTES[route][1](nest, interpret)
+    else:
+        fn = jax.jit(_build_slab_fn(nest, vec_cap))
+    ops = [np.asarray(arrays[t.name], np.float32) for t in c.inputs()]
+    return np.asarray(fn(*ops))
+
+
+# ---------------------------------------------------------------------------
+# Timing backend
+# ---------------------------------------------------------------------------
+
+
+class JaxJitBackend(Backend):
+    """Measured-GFLOPS reward backend over compiled executables.
+
+    Same protocol as :class:`~repro.core.cpu_backend.CPUMeasuredBackend`
+    (one warm-up, best-of-``repeats`` wall time) but the schedule runs as a
+    single XLA program: the warm-up triggers (cached) compilation, every
+    later evaluation of the same structure only re-times.
+
+    ``pallas`` controls the kernel-route fast path: ``"auto"`` routes
+    matching nests through Pallas only when compiled execution is available
+    (i.e. on real TPU — interpret-mode timings are not meaningful),
+    ``"on"`` forces it (interpret mode on CPU: correct results, trustworthy
+    only for correctness), ``"off"`` always uses the generic slab lowering.
+    """
+
+    name = "jax"
+
+    def __init__(
+        self,
+        vec_cap: int = VEC_CAP_DEFAULT,
+        repeats: int = 3,
+        seed: int = 0,
+        pallas: str = "auto",
+        kernel_cache: Optional[CompiledKernelCache] = None,
+    ):
+        import jax  # noqa: F401 — ImportError here drives make_backend("auto") fallback
+
+        if pallas not in ("auto", "on", "off"):
+            raise ValueError(f"pallas must be auto|on|off, got {pallas!r}")
+        self.vec_cap = vec_cap
+        self.repeats = repeats
+        self.seed = seed
+        self.pallas = pallas
+        self.interpret = jax.default_backend() != "tpu"
+        self.kernels = (kernel_cache if kernel_cache is not None
+                        else CompiledKernelCache())
+        self._inputs_cache = LRUCache(INPUTS_CACHE_CAPACITY)
+        self._peak: Optional[float] = None
+        self.compiles = 0  # executables built (== kernel-cache misses here)
+
+    # -- compilation ----------------------------------------------------------
+
+    def _route(self, c: Contraction) -> Optional[str]:
+        if self.pallas == "off":
+            return None
+        if self.pallas == "auto" and self.interpret:
+            return None
+        return match_kernel_route(c)
+
+    def executable(self, nest: LoopNest) -> Callable:
+        """The jitted callable for this structure (cached; compiles once)."""
+        import jax
+
+        route = self._route(nest.contraction)
+
+        def build():
+            self.compiles += 1
+            if route is not None:
+                return _KERNEL_ROUTES[route][1](nest, self.interpret)
+            return jax.jit(_build_slab_fn(nest, self.vec_cap))
+
+        return self.kernels.get_or_create(
+            (nest.structure_key(), self.vec_cap, route), build)
+
+    def _inputs(self, c: Contraction) -> Tuple:
+        def build():
+            import jax.numpy as jnp
+
+            arrays = make_inputs(c, self.seed)
+            return tuple(jnp.asarray(arrays[t.name]) for t in c.inputs())
+
+        return self._inputs_cache.get_or_create(c.name, build)
+
+    def execute(self, nest: LoopNest) -> np.ndarray:
+        """Run the (cached) executable on the backend's operand set."""
+        return np.asarray(self.executable(nest)(*self._inputs(nest.contraction)))
+
+    # -- Backend protocol -----------------------------------------------------
+
+    def evaluate(self, nest: LoopNest) -> float:
+        """GFLOPS of the schedule: compile once (structure-cached), then
+        best-of-``repeats`` wall time of the compiled program."""
+        c = nest.contraction
+        fn = self.executable(nest)
+        ops = self._inputs(c)
+        fn(*ops).block_until_ready()  # warm-up (compiles on first call)
+        best = float("inf")
+        for _ in range(self.repeats):
+            t0 = time.perf_counter()
+            fn(*ops).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        return c.flops() / best / 1e9
+
+    def evaluate_batch(self, nests: Sequence[LoopNest]) -> np.ndarray:
+        """Compile each distinct structure once up front, then re-time —
+        first-call compile latency never pollutes a later nest's timing."""
+        seen = set()
+        for nest in nests:
+            key = nest.structure_key()
+            if key not in seen:
+                seen.add(key)
+                self.executable(nest)
+        return np.array([self.evaluate(n) for n in nests], dtype=np.float64)
+
+    def peak(self) -> float:
+        """Empirical peak GFLOPS of the XLA target: best-of-5 timing of a
+        high-arithmetic-intensity jitted matmul."""
+        if self._peak is None:
+            import jax
+            import jax.numpy as jnp
+
+            n = 512
+            a = jnp.asarray(np.random.default_rng(0).standard_normal(
+                (n, n), dtype=np.float32))
+            b = jnp.asarray(np.random.default_rng(1).standard_normal(
+                (n, n), dtype=np.float32))
+            mm = jax.jit(jnp.matmul)
+            mm(a, b).block_until_ready()  # warm-up / compile
+            best = float("inf")
+            for _ in range(5):
+                t0 = time.perf_counter()
+                mm(a, b).block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            self._peak = 2 * n**3 / best / 1e9
+        return self._peak
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "compiles": self.compiles,
+            "kernel_cache": self.kernels.stats(),
+            "inputs_cache": self._inputs_cache.stats(),
+        }

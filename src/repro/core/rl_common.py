@@ -181,15 +181,28 @@ def epsilon_greedy_batch(
     """Masked argmax over ``q`` (N, A) with per-lane ε-exploration.
 
     ``eps`` is a scalar or per-lane array; ``rng`` is one shared Generator or
-    a per-lane sequence (APEX ladder).  Returns (N,) int32 actions."""
+    a per-lane sequence (APEX ladder).  Returns (N,) int32 actions.
+
+    The shared-generator case is fully vectorized (one ε draw and one
+    uniform tie-break matrix for the whole fleet); the per-lane-rng path
+    keeps the original draw order exactly, so APEX ladder actors stay
+    bit-compatible with their per-lane seeds."""
     q = np.asarray(q)
     n = len(q)
     a = np.argmax(masked_fill(q, mask), axis=1).astype(np.int32)
     eps_arr = np.broadcast_to(np.asarray(eps, np.float64), (n,))
-    rngs = rng if isinstance(rng, (list, tuple)) else [rng] * n
-    for i in range(n):
-        if rngs[i].random() < eps_arr[i]:
-            a[i] = int(rngs[i].choice(np.flatnonzero(mask[i])))
+    if isinstance(rng, (list, tuple)):
+        # APEX ε-ladder: one Generator per actor lane, original draw order
+        for i in range(n):
+            if rng[i].random() < eps_arr[i]:
+                a[i] = int(rng[i].choice(np.flatnonzero(mask[i])))
+        return a
+    explore = rng.random(n) < eps_arr
+    if explore.any():
+        # uniform over each lane's legal actions: argmax of iid U(0,1)
+        # restricted to the mask (illegal entries can never win)
+        u = np.where(mask, rng.random(mask.shape), -1.0)
+        a[explore] = np.argmax(u, axis=1).astype(np.int32)[explore]
     return a
 
 
@@ -199,21 +212,21 @@ def sample_masked(
     """Sample one action per row from the masked softmax of ``logits``
     (N, A); returns ``(actions (N,) int32, log_probs (N,) float32)``.
 
-    Masked entries get the shared finite ``MASK_SENTINEL`` (not -inf): with
-    any legal action present their probability underflows to exactly 0, and
-    a fully-masked row degrades to a uniform draw instead of NaN."""
+    Vectorized as a batched Gumbel-max draw: ``argmax(logp + G)`` with iid
+    Gumbel noise samples the softmax exactly, with no per-row Python loop
+    and no per-row ``rng.choice``.  Masked entries get the shared finite
+    ``MASK_SENTINEL`` (not -inf): with any legal action present their
+    probability underflows to exactly 0 (sentinel rows lose every Gumbel
+    race against a legal entry), and a fully-masked row degrades to a
+    uniform draw instead of NaN."""
     logits = np.asarray(logits, np.float64)
-    n = logits.shape[0]
-    a = np.zeros(n, np.int32)
-    logp = np.zeros(n, np.float32)
-    for i in range(n):
-        row = masked_fill(logits[i], mask[i])
-        z = row - row.max()
-        p = np.exp(z)
-        p /= p.sum()
-        ai = int(rng.choice(len(p), p=p))
-        a[i] = ai
-        logp[i] = np.log(max(p[ai], 1e-12))
+    z = masked_fill(logits, mask)
+    z = z - z.max(axis=1, keepdims=True)
+    logp_all = z - np.log(np.exp(z).sum(axis=1, keepdims=True))
+    a = np.argmax(logp_all + rng.gumbel(size=logp_all.shape), axis=1)
+    a = a.astype(np.int32)
+    logp = logp_all[np.arange(len(a)), a]
+    logp = np.maximum(logp, np.log(1e-12)).astype(np.float32)
     return a, logp
 
 

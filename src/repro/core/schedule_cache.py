@@ -1,4 +1,5 @@
-"""Shared structure-keyed LRU cache for schedule evaluations.
+"""Shared LRU caching: a generic :class:`LRUCache` plus the structure-keyed
+:class:`ScheduleCache` for schedule evaluations.
 
 The paper caches every state evaluation ("we implemented each search with
 caching to avoid repeating evaluations of the same states"); previously that
@@ -9,6 +10,12 @@ shareable component: true LRU eviction, hit/miss/eviction counters, and
 batched lookup-or-evaluate that dedups within the batch and sends only the
 misses to :meth:`Backend.evaluate_batch`.
 
+:class:`LRUCache` is the shared eviction discipline — the same
+bounded-recency policy also backs the measured backend's per-contraction
+input arrays and the JIT backend's compiled executables
+(:class:`~repro.core.jax_backend.CompiledKernelCache`), so no cache in the
+evaluation path ever clears wholesale on overflow.
+
 One cache instance can back many environments (scalar and vectorized lanes
 alike), so a policy rollout, a search, and a tuner all amortize each other's
 measurements.
@@ -16,7 +23,7 @@ measurements.
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -25,14 +32,19 @@ from .loop_ir import LoopNest
 DEFAULT_CAPACITY = 200_000
 
 
-class ScheduleCache:
-    """LRU map from ``nest.structure_key()`` to evaluated GFLOPS."""
+class LRUCache:
+    """Bounded map with least-recently-used eviction and traffic counters.
+
+    ``get`` refreshes recency; ``put`` evicts the coldest entries (one at a
+    time, never clear-all) once ``capacity`` is exceeded.  Subclasses may
+    override :meth:`on_evict` to release per-entry resources.
+    """
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
-        self._data: "OrderedDict[Hashable, float]" = OrderedDict()
+        self._data: "OrderedDict[Hashable, Any]" = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -45,28 +57,44 @@ class ScheduleCache:
     def __contains__(self, key: Hashable) -> bool:
         return key in self._data
 
-    def get(self, key: Hashable) -> Optional[float]:
+    def get(self, key: Hashable) -> Optional[Any]:
         """Value for ``key`` (refreshing recency), or None."""
         val = self._data.get(key)
         if val is not None:
             self._data.move_to_end(key)
         return val
 
-    def put(self, key: Hashable, value: float) -> None:
+    def put(self, key: Hashable, value: Any) -> None:
         if key in self._data:
             self._data.move_to_end(key)
         self._data[key] = value
         while len(self._data) > self.capacity:
-            self._data.popitem(last=False)
+            old_key, old_val = self._data.popitem(last=False)
             self.evictions += 1
+            self.on_evict(old_key, old_val)
+
+    def on_evict(self, key: Hashable, value: Any) -> None:
+        """Eviction hook (default: nothing)."""
+
+    def get_or_create(self, key: Hashable, factory: Callable[[], Any]) -> Any:
+        """Cached value for ``key`` (counted as a hit), else ``factory()``
+        stored and counted as a miss — the one place lookup bookkeeping
+        lives, so every cache's ``stats()`` stays honest."""
+        val = self.get(key)
+        if val is not None:
+            self.hits += 1
+            return val
+        self.misses += 1
+        val = factory()
+        self.put(key, val)
+        return val
 
     def clear(self) -> None:
         self._data.clear()
 
-    def entries(self) -> List[Tuple[Hashable, float]]:
-        """Snapshot of ``(structure_key, gflops)`` pairs, oldest first,
-        without touching recency — the harvest surface for
-        ``SurrogateDataset.from_cache``."""
+    def entries(self) -> List[Tuple[Hashable, Any]]:
+        """Snapshot of ``(key, value)`` pairs, oldest first, without touching
+        recency."""
         return list(self._data.items())
 
     def stats(self) -> Dict[str, int]:
@@ -77,6 +105,10 @@ class ScheduleCache:
             "misses": self.misses,
             "evictions": self.evictions,
         }
+
+
+class ScheduleCache(LRUCache):
+    """LRU map from ``nest.structure_key()`` to evaluated GFLOPS."""
 
     # -- lookup-or-evaluate ---------------------------------------------------
 

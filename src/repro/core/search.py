@@ -474,11 +474,18 @@ def run_all_searches(
     max_evals: Optional[int] = None,
     fresh_cache: bool = True,
     surrogate=None,
+    backend=None,
 ) -> Dict[str, SearchResult]:
     """Run the full paper suite.  ``surrogate``: None/"off" (measured-only,
     the default), "auto" (each search trains its own cost model from
     scratch — fair per-search eval counts, like ``fresh_cache``), or a
-    shared :class:`SurrogateScorer` (learning accumulates across searches)."""
+    shared :class:`SurrogateScorer` (learning accumulates across searches).
+    ``backend`` selects the reward executor by registry name
+    ("numpy" | "jax" | "tpu" | "auto"; see ``core.backend.make_backend``) —
+    the suite then runs on a sibling of ``env`` wired to that executor
+    (fresh evaluation cache unless the executor is unchanged)."""
+    if backend is not None:
+        env = env.with_backend(backend)
     out = {}
     for name, fn in SEARCHES.items():
         if fresh_cache:

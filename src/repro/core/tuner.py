@@ -19,8 +19,7 @@ import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .actions import CPU_SPLITS, TPU_SPLITS, actions_from_names, build_action_space
-from .cost_model import TPUAnalyticalBackend
-from .cpu_backend import CPUMeasuredBackend
+from .backend import backend_name, make_backend
 from .encoders import EncoderConfig, get_encoder, make_policy_act
 from .env import LoopTuneEnv
 from .loop_ir import Contraction, matmul_benchmark
@@ -30,14 +29,6 @@ from .schedule_cache import ScheduleCache
 from .search import beam_search, greedy_search
 from .surrogate import SurrogateScorer
 from .vec_env import VecLoopTuneEnv
-
-
-def make_backend(kind: str):
-    if kind == "tpu":
-        return TPUAnalyticalBackend()
-    if kind == "cpu":
-        return CPUMeasuredBackend()
-    raise ValueError(f"backend {kind!r} (want 'tpu' or 'cpu')")
 
 
 # legacy checkpoints (no meta) carry only the algo name; map it to the
@@ -93,8 +84,10 @@ class LoopTuner:
         surrogate: str = "auto",  # "auto" | "off": cost-model-guided search
     ):
         self.act = act
-        self.backend_kind = backend
+        # any registered backend name ("tpu" | "numpy" | "jax" | "auto" |
+        # "cpu") or a ready Backend instance — see core.backend.make_backend
         self.backend = make_backend(backend)
+        self.backend_kind = backend_name(self.backend)
         self.registry = registry if registry is not None else ScheduleRegistry()
         self.episode_len = episode_len
         self.policy = policy if act is not None or policy != "policy" else "search"
@@ -103,7 +96,7 @@ class LoopTuner:
         if surrogate not in ("auto", "off"):
             raise ValueError(f"surrogate must be 'auto' or 'off', got {surrogate!r}")
         self.surrogate = surrogate
-        splits = TPU_SPLITS if backend == "tpu" else CPU_SPLITS
+        splits = TPU_SPLITS if self.backend_kind == "tpu" else CPU_SPLITS
         self.actions = build_action_space(splits)
         # one evaluation cache for every env this tuner creates, so repeated
         # tune() calls and tune_many() lanes amortize each other
@@ -114,13 +107,19 @@ class LoopTuner:
         self._scorer: Optional[SurrogateScorer] = None
 
     @classmethod
-    def from_checkpoint(cls, path: str, backend: str = "tpu", **kw) -> "LoopTuner":
+    def from_checkpoint(cls, path: str, backend: Optional[str] = None,
+                        **kw) -> "LoopTuner":
         """Rebuild the exact tuning setup a checkpoint was trained with: the
-        network (head + encoder), the matching observation featurizer, and
-        the trained action space (its split ladder), all from the embedded
-        metadata — no defaults assumed."""
+        network (head + encoder), the matching observation featurizer, the
+        trained action space (its split ladder), and — unless overridden —
+        the backend that produced the training reward signal, all from the
+        embedded metadata — no defaults assumed."""
         act, meta, enc_cfg = load_policy(path)
         kw.setdefault("surrogate", meta.get("surrogate", "auto"))
+        if backend is None:
+            # pre-backend-metadata checkpoints were all trained on the
+            # analytical model, which is also the historical default
+            backend = meta.get("backend") or "tpu"
         tuner = cls(act=act, backend=backend, **kw)
         tuner.featurizer = get_encoder(enc_cfg.kind).featurizer(enc_cfg)
         if meta.get("actions") is not None:

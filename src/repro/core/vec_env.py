@@ -20,6 +20,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .actions import Action, apply_action, build_action_space, legal_mask
+from .backend import Backend, backend_name, make_backend
 from .env import DEFAULT_EPISODE_LEN, LoopTuneEnv
 from .graph_features import FlatFeaturizer
 from .loop_ir import Contraction, LoopNest
@@ -42,7 +43,9 @@ class VecLoopTuneEnv:
         if n_envs < 1:
             raise ValueError(f"n_envs must be >= 1, got {n_envs}")
         self.benchmarks = list(benchmarks)
-        self.backend = backend
+        # backend may be a Backend instance or a registry name — see
+        # core.backend.make_backend
+        self.backend = make_backend(backend)
         self.actions = list(actions) if actions is not None else build_action_space()
         self.n_envs = n_envs
         self.episode_len = episode_len
@@ -51,7 +54,7 @@ class VecLoopTuneEnv:
         # same pluggable observation function as LoopTuneEnv (all lanes share)
         self.featurizer = featurizer if featurizer is not None else FlatFeaturizer()
         self.cache = cache if cache is not None else ScheduleCache(cache_size)
-        self.peak = backend.peak()
+        self.peak = self.backend.peak()
         self.nests: List[Optional[LoopNest]] = [None] * n_envs
         self.t = np.zeros(n_envs, dtype=np.int64)
         self._gflops = np.zeros(n_envs, dtype=np.float64)
@@ -59,19 +62,34 @@ class VecLoopTuneEnv:
 
     @classmethod
     def from_env(cls, env: LoopTuneEnv, n_envs: int, seed: int = 0,
-                 featurizer=None) -> "VecLoopTuneEnv":
+                 featurizer=None, backend=None) -> "VecLoopTuneEnv":
         """Vectorize an existing scalar env: share its benchmarks, backend,
         action space, episode length and evaluation cache.  ``featurizer``
         overrides the scalar env's observation function (the trainers pass
-        the one their EncoderConfig demands)."""
-        return cls(env.benchmarks, env.backend, n_envs, actions=env.actions,
-                   episode_len=env.episode_len, seed=seed, cache=env.cache,
+        the one their EncoderConfig demands).  ``backend`` (a registry name
+        or instance) overrides the scalar env's executor — the evaluation
+        cache is then shared only if the executor is actually unchanged,
+        since one backend's measurements would poison another's rewards."""
+        be, cache = env.backend, env.cache
+        if backend is not None:
+            if isinstance(backend, Backend):
+                # an explicit instance is honored as given (it may carry
+                # different repeats/seed): fresh cache unless it IS the
+                # env's own backend
+                if backend is not env.backend:
+                    be, cache = backend, None
+            else:
+                cand = make_backend(backend)
+                if backend_name(cand) != backend_name(be):
+                    be, cache = cand, None
+        return cls(env.benchmarks, be, n_envs, actions=env.actions,
+                   episode_len=env.episode_len, seed=seed, cache=cache,
                    featurizer=featurizer if featurizer is not None
                    else env.featurizer)
 
     @classmethod
     def ensure(cls, env, n_envs: int, seed: int = 0,
-               featurizer=None) -> "VecLoopTuneEnv":
+               featurizer=None, backend=None) -> "VecLoopTuneEnv":
         """Pass a VecLoopTuneEnv through unchanged; vectorize a scalar env.
 
         A demanded ``featurizer`` (what the trainer's EncoderConfig needs)
@@ -79,7 +97,10 @@ class VecLoopTuneEnv:
         format — mutating the caller's env in place would silently break any
         policy already acting on its old observations, so mismatch is an
         error: construct the VecLoopTuneEnv with the right ``featurizer=``
-        (or pass a scalar env / factory and let the trainer wrap it)."""
+        (or pass a scalar env / factory and let the trainer wrap it).  The
+        same holds for a demanded ``backend`` (a trainer config's explicit
+        executor choice): an already-vectorized env keeps its backend, so a
+        name mismatch is an error rather than a silent reward-source swap."""
         if isinstance(env, cls):
             if featurizer is not None and (
                     featurizer.kind != env.featurizer.kind
@@ -89,10 +110,23 @@ class VecLoopTuneEnv:
                     f"encoder's required {featurizer!r}; build the "
                     f"VecLoopTuneEnv with featurizer={featurizer!r} or pass "
                     f"a scalar env")
+            if backend is not None and (
+                    backend_name(make_backend(backend))
+                    != backend_name(env.backend)):
+                raise ValueError(
+                    f"env backend {backend_name(env.backend)!r} does not "
+                    f"match the config's required {backend!r}; build the "
+                    f"VecLoopTuneEnv with backend={backend!r} or pass a "
+                    f"scalar env")
             return env
-        return cls.from_env(env, n_envs, seed=seed, featurizer=featurizer)
+        return cls.from_env(env, n_envs, seed=seed, featurizer=featurizer,
+                            backend=backend)
 
     # -- evaluation -----------------------------------------------------------
+
+    @property
+    def backend_name(self) -> str:
+        return backend_name(self.backend)
 
     def gflops_batch(self, nests: Sequence[LoopNest]) -> np.ndarray:
         return self.cache.evaluate_batch(self.backend, nests)
