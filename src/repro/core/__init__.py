@@ -61,6 +61,15 @@ from .graph_features import (
     packed_dim,
     unpack_graph,
 )
+from .measure import (
+    MeasuredBackend,
+    Measurement,
+    MeasurementPolicy,
+    WorkerPool,
+    measure_local,
+    measure_settings,
+    measurement_of,
+)
 from .networks import MASK_SENTINEL, masked_argmax, masked_fill, masked_logits
 from .loop_ir import (
     Contraction,

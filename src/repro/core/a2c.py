@@ -21,6 +21,7 @@ import numpy as np
 from .encoders import (EncoderConfig, build_network, checkpoint_meta,
                        get_encoder, make_score_fn)
 from .networks import masked_logits
+from .measure import measure_settings
 from .rl_common import (TrainResult, collect_vec_rollout, make_masked_act,
                         sample_masked)
 from .vec_env import VecLoopTuneEnv
@@ -117,6 +118,7 @@ def train_a2c(env_factory, n_iterations: int = 300,
     ep_rewards = np.zeros(n_envs, np.float32)
     finished: list = []
     rewards_log, times = [], []
+    noisy_steps = total_steps = 0  # measurement-guardrail observability
     t_start = time.perf_counter()
     t_len, n = cfg.rollout_len, n_envs
 
@@ -124,6 +126,8 @@ def train_a2c(env_factory, n_iterations: int = 300,
         batch = collect_vec_rollout(venv, policy, t_len, obs, ep_rewards,
                                     finished)
         obs = batch.final_obs
+        noisy_steps += int(batch.noisy.sum())
+        total_steps += batch.noisy.size
         # n-step returns bootstrapped from the last value
         ret = np.zeros((t_len, n), np.float32)
         nxt = np.asarray(
@@ -139,7 +143,12 @@ def train_a2c(env_factory, n_iterations: int = 300,
     return TrainResult("a2c", params_ref[0],
                        make_masked_act(make_score_fn(net))(params_ref),
                        rewards_log, times,
+                       extra={"noisy_frac": (noisy_steps / total_steps
+                                             if total_steps else 0.0)},
                        meta=checkpoint_meta("actor_critic", enc_cfg,
                                             venv.actions, venv.state_dim,
                                             surrogate=cfg.surrogate,
-                                            backend=venv.backend_name))
+                                            backend=venv.backend_name,
+                                            peak=venv.peak,
+                                            measure=measure_settings(
+                                                venv.backend)))

@@ -21,6 +21,7 @@ import numpy as np
 
 from .encoders import (EncoderConfig, build_network, checkpoint_meta,
                        get_encoder, make_score_fn)
+from .measure import measure_settings
 from .networks import masked_logits
 from .replay import PrioritizedReplay
 from .rl_common import (TrainResult, collect_vec_rollout, epsilon_greedy_batch,
@@ -55,6 +56,10 @@ class ApexConfig:
     # resolved name is persisted via checkpoint_meta so the tuner can
     # rebuild the same reward source.
     backend: Optional[str] = None
+    # learner weight multiplier for transitions whose (n-step) reward
+    # includes a measurement flagged noisy by the guardrails — composes
+    # with the importance-sampling weights
+    noisy_weight: float = 0.5
 
 
 def make_update_fn(cfg: ApexConfig, q_apply):
@@ -94,17 +99,22 @@ class _NStepLane:
     def __init__(self, gamma: float, n_step: int):
         self.gamma = gamma
         self.n_step = n_step
-        self.pending: List[Tuple] = []  # (s, a, r)
+        self.pending: List[Tuple] = []  # (s, a, r, noisy)
 
-    def push(self, buf: PrioritizedReplay, s, a, r, s2, done, mask2) -> None:
-        self.pending.append((s, a, r))
+    def push(self, buf: PrioritizedReplay, s, a, r, s2, done, mask2,
+             noisy: bool = False) -> None:
+        self.pending.append((s, a, r, noisy))
         while self.pending and (len(self.pending) >= self.n_step or done):
             ret, disc = 0.0, 1.0
-            for (_, _, r_i) in self.pending[: self.n_step]:
+            any_noisy = False
+            for (_, _, r_i, nz_i) in self.pending[: self.n_step]:
                 ret += disc * r_i
                 disc *= self.gamma
-            s0, a0, _ = self.pending[0]
-            buf.add(s0, a0, ret, s2, done, mask2=mask2, discount=disc)
+                any_noisy = any_noisy or nz_i
+            s0, a0 = self.pending[0][0], self.pending[0][1]
+            # an n-step return is only as trustworthy as its noisiest term
+            buf.add(s0, a0, ret, s2, done, mask2=mask2, discount=disc,
+                    noisy=any_noisy)
             self.pending.pop(0)
             if not done:
                 break
@@ -165,7 +175,8 @@ def train_apex(
             for i in range(n):
                 lanes[i].push(buf, batch.obs[t, i], int(batch.actions[t, i]),
                               float(batch.rewards[t, i]), batch.next_obs[t, i],
-                              bool(done_t[i]), batch.next_masks[t, i])
+                              bool(done_t[i]), batch.next_masks[t, i],
+                              noisy=bool(batch.noisy[t, i]))
         if buf.size >= cfg.warmup_steps:
             # one update per post-warmup update_every env steps, remainder
             # carried over (pre-warmup steps never accrue update debt)
@@ -174,9 +185,12 @@ def train_apex(
             for _ in range(n_updates):
                 (s, a, r, s2, d, m2, disc, idx), w = buf.sample(
                     cfg.batch_size, rng)
+                # noisy-marked transitions learn at reduced weight, on top
+                # of the importance-sampling correction
+                w = w * np.where(buf.noisy[idx], cfg.noisy_weight, 1.0)
                 params_ref[0], opt, loss, td = update(
                     params_ref[0], target, opt,
-                    (s, a, r, s2, d, m2, disc), jnp.asarray(w))
+                    (s, a, r, s2, d, m2, disc), jnp.asarray(w, jnp.float32))
                 buf.update_priorities(idx, np.asarray(td))
                 updates += 1
                 if updates % cfg.target_sync_every == 0:
@@ -190,4 +204,7 @@ def train_apex(
                        meta=checkpoint_meta("dueling", enc_cfg, venv.actions,
                                             venv.state_dim,
                                             surrogate=cfg.surrogate,
-                                            backend=venv.backend_name))
+                                            backend=venv.backend_name,
+                                            peak=venv.peak,
+                                            measure=measure_settings(
+                                                venv.backend)))

@@ -32,6 +32,13 @@ a policy records which reward signal trained it:
   imports, else ``"numpy"``
 
 Register additional executors with :func:`register_backend`.
+
+Backends are *pure executors*; wall-clock timing lives in the measurement
+subsystem (:mod:`repro.core.measure`).  The factories accept measurement
+kwargs and pass them through — ``make_backend("numpy", measure="pool",
+pool_workers=4, policy=MeasurementPolicy(repeats=5))`` builds an executor
+whose ``evaluate_batch`` measures in parallel across a warm pinned worker
+pool with 5-repeat variance-guarded timing.
 """
 from __future__ import annotations
 
@@ -134,7 +141,9 @@ def make_backend(spec: Union[str, Backend, None] = "auto", **kw) -> Backend:
     ``spec`` may be a registry name (``"numpy" | "jax" | "tpu" | "auto"``
     plus anything registered via :func:`register_backend`), an existing
     :class:`Backend` instance (passed through, ``kw`` must be empty), or
-    ``None`` (same as ``"auto"``).
+    ``None`` (same as ``"auto"``).  ``kw`` reaches the factory — notably
+    the measurement settings ``measure="inproc"|"pool"``, ``pool_workers``
+    and ``policy`` (a :class:`~repro.core.measure.MeasurementPolicy`).
     """
     if spec is None:
         spec = "auto"

@@ -37,8 +37,8 @@ from __future__ import annotations
 import math
 from typing import Dict, List, Tuple
 
-from .backend import Backend
 from .loop_ir import Contraction, LoopLevel, LoopNest
+from .measure import PoolHostBackend
 
 PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s
@@ -96,16 +96,38 @@ def _util(e: int, t: int) -> float:
     return e / (math.ceil(e / t) * t) if e > 0 else 1.0
 
 
-class TPUAnalyticalBackend(Backend):
-    """Schedule -> modelled GFLOPS for a single TPU v5e core."""
+class TPUAnalyticalBackend(PoolHostBackend):
+    """Schedule -> modelled GFLOPS for a single TPU v5e core.
+
+    Deterministic (no wall clock), so measurement settings only change
+    *where* evaluation runs: ``measure="pool"`` routes batches through the
+    shared worker pool — the reference configuration for pool-vs-in-process
+    reward parity (identical code + inputs in the workers means bit-equal
+    GFLOPS), and a load-spreader for very wide analytical sweeps.
+    """
 
     name = "tpu"
 
     def __init__(self, dtype_bytes: int = 2, vmem_budget: int = VMEM_BUDGET,
-                 reg_budget: int = REG_BUDGET):
+                 reg_budget: int = REG_BUDGET,
+                 measure: str = "inproc", pool_workers=None, policy=None):
+        self._init_pool_host(measure, pool_workers, policy)
         self.dtype_bytes = dtype_bytes
         self.vmem_budget = vmem_budget
         self.reg_budget = reg_budget
+
+    def pool_spec(self):
+        return ("tpu", {"dtype_bytes": self.dtype_bytes,
+                        "vmem_budget": self.vmem_budget,
+                        "reg_budget": self.reg_budget}, None)
+
+    def evaluate_batch(self, nests) -> "np.ndarray":
+        import numpy as np
+
+        if self.measure_mode == "pool" and nests:
+            ms = self._ensure_pool().measure_batch(list(nests))
+            return np.array([m.gflops for m in ms], dtype=np.float64)
+        return super().evaluate_batch(nests)
 
     def _boundary(self, nest: LoopNest, budget: int, lo: int = 0) -> int:
         """Smallest b >= lo whose suffix tile footprint fits ``budget``."""

@@ -20,6 +20,7 @@ import numpy as np
 from .encoders import (EncoderConfig, build_network, checkpoint_meta,
                        get_encoder, make_score_fn)
 from .env import LoopTuneEnv
+from .measure import measure_settings
 from .networks import masked_logits
 from .replay import ReplayBuffer
 from .rl_common import (TrainResult, collect_vec_rollout, epsilon_greedy_batch,
@@ -53,6 +54,11 @@ class DQNConfig:
     # resolved name is persisted via checkpoint_meta so the tuner can
     # rebuild the same reward source.
     backend: Optional[str] = None
+    # learner weight for transitions whose reward the measurement
+    # guardrails flagged noisy (spread above threshold even after repeat
+    # escalation + one re-measurement) — they train at reduced weight
+    # instead of polluting the Q-targets at full strength
+    noisy_weight: float = 0.5
 
 
 def make_update_fn(cfg: DQNConfig, q_apply):
@@ -153,18 +159,20 @@ def train_dqn(
                 buf.add(batch.obs[t, i], int(batch.actions[t, i]),
                         float(batch.rewards[t, i]), batch.next_obs[t, i],
                         bool(batch.dones[t, i]), mask2=batch.next_masks[t, i],
-                        discount=cfg.gamma)
+                        discount=cfg.gamma, noisy=bool(batch.noisy[t, i]))
         if buf.size >= cfg.warmup_steps:
             # one update per post-warmup update_every env steps, remainder
             # carried over (pre-warmup steps never accrue update debt)
             step_debt += batch.n_steps
             n_updates, step_debt = divmod(step_debt, cfg.update_every)
             for _ in range(n_updates):
-                s, a_, r_, s2, d_, m2, disc, _ = buf.sample(cfg.batch_size, rng)
+                s, a_, r_, s2, d_, m2, disc, idx = buf.sample(cfg.batch_size, rng)
+                # noisy-marked transitions learn at reduced weight
+                w = np.where(buf.noisy[idx], cfg.noisy_weight, 1.0)
                 params_ref[0], opt, loss, _ = update(
                     params_ref[0], target, opt,
                     (s, a_, r_, s2, d_, m2, disc),
-                    jnp.ones((cfg.batch_size,), jnp.float32))
+                    jnp.asarray(w, jnp.float32))
                 updates += 1
                 if updates % cfg.target_sync_every == 0:
                     target = jax.tree.map(jnp.copy, params_ref[0])
@@ -177,4 +185,7 @@ def train_dqn(
                        meta=checkpoint_meta("q", enc_cfg, venv.actions,
                                             venv.state_dim,
                                             surrogate=cfg.surrogate,
-                                            backend=venv.backend_name))
+                                            backend=venv.backend_name,
+                                            peak=venv.peak,
+                                            measure=measure_settings(
+                                                venv.backend)))

@@ -259,13 +259,20 @@ def make_policy_act(head: str, cfg: EncoderConfig, n_actions: int = 0):
 def checkpoint_meta(head: str, cfg: EncoderConfig,
                     actions: Sequence[Action], state_dim: int,
                     surrogate: str = "auto",
-                    backend: Optional[str] = None) -> Dict[str, Any]:
+                    backend: Optional[str] = None,
+                    peak: Optional[float] = None,
+                    measure: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """The metadata every trainer embeds in its checkpoints so acting can be
     reconstructed without assuming defaults: network head, encoder config,
     the exact action space (names + split factors), the surrogate policy
-    (``"auto"``/``"off"``) the tuner should use for search fallbacks, and
-    the registry name of the backend that produced the reward signal
-    (``LoopTuner.from_checkpoint`` defaults to tuning on the same one)."""
+    (``"auto"``/``"off"``) the tuner should use for search fallbacks, the
+    registry name of the backend that produced the reward signal
+    (``LoopTuner.from_checkpoint`` defaults to tuning on the same one),
+    the ``peak`` GFLOPS that normalized the training rewards (the tuner
+    reuses it at load so the reward scale stays exactly what the policy
+    was trained on — cross-backend reward calibration, see
+    ``core.measure``), and the measurement settings (mode + policy knobs)
+    the reward signal was produced under."""
     return {
         "head": head,
         "encoder": cfg.to_dict(),
@@ -275,4 +282,6 @@ def checkpoint_meta(head: str, cfg: EncoderConfig,
         "state_dim": int(state_dim),
         "surrogate": surrogate,
         "backend": backend,
+        "peak": float(peak) if peak is not None else None,
+        "measure": measure,
     }

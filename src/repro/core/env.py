@@ -21,9 +21,47 @@ from .actions import Action, apply_action, build_action_space, legal_mask
 from .backend import Backend, backend_name, make_backend
 from .graph_features import FlatFeaturizer
 from .loop_ir import Contraction, LoopNest
+from .measure import Measurement, measurement_of
 from .schedule_cache import DEFAULT_CAPACITY, ScheduleCache
 
 DEFAULT_EPISODE_LEN = 10
+
+
+def _settle_one(backend, cache, nest: LoopNest, gflops: float,
+                remeasure: bool) -> Tuple[float, Optional[Measurement]]:
+    """Reward-quality guardrail: if the measurement behind ``gflops`` is
+    flagged noisy and has not already spent its one re-measurement, drop
+    the cached value and measure again.  Returns the (possibly refreshed)
+    gflops and the record (None on record-less backends)."""
+    m = measurement_of(backend, nest)
+    if m is not None and m.noisy and not m.remeasured and remeasure:
+        cache.invalidate(nest.structure_key())
+        gflops = cache.evaluate(backend, nest)
+        m = measurement_of(backend, nest) or m
+        m.remeasured = True
+    return gflops, m
+
+
+def _settle_batch(backend, cache, nests: Sequence[LoopNest],
+                  gflops: np.ndarray, remeasure: bool
+                  ) -> Tuple[np.ndarray, list]:
+    """Batched :func:`_settle_one`: the noisy subset re-measures through
+    one extra (deduped) ``evaluate_batch`` call."""
+    ms = [measurement_of(backend, n) for n in nests]
+    if remeasure:
+        redo = [j for j, m in enumerate(ms)
+                if m is not None and m.noisy and not m.remeasured]
+        if redo:
+            for j in redo:
+                cache.invalidate(nests[j].structure_key())
+            re_g = cache.evaluate_batch(backend, [nests[j] for j in redo])
+            gflops = np.array(gflops, dtype=np.float64, copy=True)
+            for k, j in enumerate(redo):
+                gflops[j] = re_g[k]
+                m = measurement_of(backend, nests[j])
+                ms[j] = m if m is not None else ms[j]
+                ms[j].remeasured = True
+    return gflops, ms
 
 
 class LoopTuneEnv:
@@ -37,6 +75,8 @@ class LoopTuneEnv:
         cache_size: int = DEFAULT_CAPACITY,
         cache: Optional[ScheduleCache] = None,
         featurizer=None,
+        peak: Optional[float] = None,
+        remeasure_noisy: bool = True,
     ):
         self.benchmarks = list(benchmarks)
         # backend may be a Backend instance or a registry name
@@ -52,21 +92,48 @@ class LoopTuneEnv:
         # graph_features.py; the policy's EncoderConfig dictates the choice
         self.featurizer = featurizer if featurizer is not None else FlatFeaturizer()
         self.cache = cache if cache is not None else ScheduleCache(cache_size)
-        self.peak = self.backend.peak()
+        # reward normalizer: the backend's live peak() unless the caller
+        # supplies a calibrated one (LoopTuner.from_checkpoint passes the
+        # train-time peak recorded in checkpoint meta, so rewards keep the
+        # exact scale the policy was trained on — see core.measure)
+        self._peak_override = peak
+        self.peak = float(peak) if peak is not None else self.backend.peak()
+        # a measurement the backend flags as noisy (spread above the policy
+        # threshold even after repeat escalation) is re-measured once before
+        # its reward is trusted; still-noisy rewards are marked in info
+        self.remeasure_noisy = remeasure_noisy
         self.nest: Optional[LoopNest] = None
         self.t = 0
         self._gflops = 0.0
+        # whether the measurement behind the current baseline _gflops was
+        # still noisy after re-measurement: a delta reward is only as clean
+        # as BOTH of its endpoints, so this propagates into the next
+        # step's noisy mark
+        self._g_noisy = False
         self.initial_gflops = 0.0
 
     # -- evaluation with caching ----------------------------------------------
 
     def gflops(self, nest: LoopNest) -> float:
-        return self.cache.evaluate(self.backend, nest)
+        """Cached evaluation, with the reward-quality guardrail applied:
+        a measurement the backend flags noisy is re-measured once (cache
+        entry dropped) before its value is served — to RL steps, searches
+        and surrogate harvesting alike."""
+        g = self.cache.evaluate(self.backend, nest)
+        return _settle_one(self.backend, self.cache, nest, g,
+                           self.remeasure_noisy)[0]
 
     def gflops_batch(self, nests: Sequence[LoopNest]) -> np.ndarray:
         """Cached batched evaluation (one ``Backend.evaluate_batch`` call for
-        the deduped misses)."""
-        return self.cache.evaluate_batch(self.backend, nests)
+        the deduped misses), noisy measurements re-measured in one extra
+        batched call."""
+        g = self.cache.evaluate_batch(self.backend, nests)
+        return _settle_batch(self.backend, self.cache, nests, g,
+                             self.remeasure_noisy)[0]
+
+    def _noisy_of(self, nest: LoopNest) -> bool:
+        m = measurement_of(self.backend, nest)
+        return bool(m is not None and m.noisy)
 
     def clear_cache(self) -> None:
         self.cache.clear()
@@ -95,7 +162,11 @@ class LoopTuneEnv:
             self.benchmarks, be,
             actions=self.actions, episode_len=self.episode_len,
             seed=self.seed, cache=self.cache if same else None,
-            featurizer=self.featurizer)
+            featurizer=self.featurizer,
+            # a calibrated reward normalizer is only meaningful against the
+            # executor it was recorded for
+            peak=self._peak_override if same else None,
+            remeasure_noisy=self.remeasure_noisy)
 
     # -- gym API ----------------------------------------------------------------
 
@@ -113,6 +184,7 @@ class LoopTuneEnv:
         self.nest = LoopNest(self.benchmarks[benchmark_idx])
         self.t = 0
         self._gflops = self.gflops(self.nest)
+        self._g_noisy = self._noisy_of(self.nest)
         self.initial_gflops = self._gflops
         return self.observe()
 
@@ -127,13 +199,28 @@ class LoopTuneEnv:
         action = self.actions[a_idx]
         changed = apply_action(self.nest, action)
         reward = 0.0
+        reward_noisy = False
+        measurement: Optional[Measurement] = None
         if changed:
-            new_gflops = self.gflops(self.nest)
+            new_gflops = self.gflops(self.nest)  # settled by the guardrail
+            measurement = measurement_of(self.backend, self.nest)
+            new_noisy = bool(measurement is not None and measurement.noisy)
             reward = (new_gflops - self._gflops) / self.peak
+            # a delta reward embeds the noise of EITHER endpoint: the mark
+            # carries the baseline's noisiness forward so the correction
+            # step after a noisy measurement is not trusted at full weight
+            reward_noisy = new_noisy or self._g_noisy
             self._gflops = new_gflops
+            self._g_noisy = new_noisy
         self.t += 1
         done = self.t >= self.episode_len
-        info = {"gflops": self._gflops, "action": action.name}
+        info = {"gflops": self._gflops, "action": action.name,
+                # reward quality: False for unchanged structures, cached
+                # clean measurements and deterministic backends; True when
+                # either endpoint of the delta was a still-noisy measurement
+                "noisy": reward_noisy}
+        if measurement is not None:
+            info["measurement"] = measurement.to_info()
         return self.observe(), reward, done, info
 
     # -- snapshots for tree search -----------------------------------------------
@@ -146,6 +233,7 @@ class LoopTuneEnv:
         self.nest = nest.clone()
         self.t = t
         self._gflops = g
+        self._g_noisy = self._noisy_of(self.nest)
 
     @property
     def current_gflops(self) -> float:

@@ -33,14 +33,14 @@ property-tested in ``tests/test_jax_backend.py``.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .backend import Backend
 from .cpu_backend import (INPUTS_CACHE_CAPACITY, VEC_CAP_DEFAULT,
                           _einsum_expr, _run_section, make_inputs)
 from .loop_ir import Contraction, LoopNest
+from .measure import MeasuredBackend, MeasurementPolicy
 from .schedule_cache import LRUCache
 
 # compiled executables are heavyweight (traced + lowered programs); keep a
@@ -285,13 +285,21 @@ def execute_jax(
 # ---------------------------------------------------------------------------
 
 
-class JaxJitBackend(Backend):
-    """Measured-GFLOPS reward backend over compiled executables.
+# peak GFLOPS of the XLA target is constant within a process: memoized per
+# (device kind, process) so backend construction never re-times it
+_PEAK_CACHE: Dict[str, float] = {}
 
-    Same protocol as :class:`~repro.core.cpu_backend.CPUMeasuredBackend`
-    (one warm-up, best-of-``repeats`` wall time) but the schedule runs as a
-    single XLA program: the warm-up triggers (cached) compilation, every
-    later evaluation of the same structure only re-times.
+
+class JaxJitBackend(MeasuredBackend):
+    """Measured-GFLOPS reward backend over compiled executables — a *pure
+    executor*.
+
+    Execution lives here (:meth:`run_once` runs the cached jitted program,
+    synchronized); warm-up, best-of-``repeats`` selection, variance
+    guardrails and optional out-of-process pooling live in
+    :class:`~repro.core.measure.MeasuredBackend` — the untimed warm-up run
+    triggers (cached) compilation, every later evaluation of the same
+    structure only re-times.
 
     ``pallas`` controls the kernel-route fast path: ``"auto"`` routes
     matching nests through Pallas only when compiled execution is available
@@ -305,24 +313,28 @@ class JaxJitBackend(Backend):
     def __init__(
         self,
         vec_cap: int = VEC_CAP_DEFAULT,
-        repeats: int = 3,
+        repeats: Optional[int] = None,
         seed: int = 0,
         pallas: str = "auto",
         kernel_cache: Optional[CompiledKernelCache] = None,
+        policy: Optional[MeasurementPolicy] = None,
+        measure: str = "inproc",
+        pool_workers: Optional[int] = None,
+        isolated: bool = False,
     ):
         import jax  # noqa: F401 — ImportError here drives make_backend("auto") fallback
 
         if pallas not in ("auto", "on", "off"):
             raise ValueError(f"pallas must be auto|on|off, got {pallas!r}")
+        super().__init__(policy=policy, repeats=repeats, measure=measure,
+                         pool_workers=pool_workers, isolated=isolated)
         self.vec_cap = vec_cap
-        self.repeats = repeats
         self.seed = seed
         self.pallas = pallas
         self.interpret = jax.default_backend() != "tpu"
         self.kernels = (kernel_cache if kernel_cache is not None
                         else CompiledKernelCache())
         self._inputs_cache = LRUCache(INPUTS_CACHE_CAPACITY)
-        self._peak: Optional[float] = None
         self.compiles = 0  # executables built (== kernel-cache misses here)
 
     # -- compilation ----------------------------------------------------------
@@ -362,38 +374,45 @@ class JaxJitBackend(Backend):
         """Run the (cached) executable on the backend's operand set."""
         return np.asarray(self.executable(nest)(*self._inputs(nest.contraction)))
 
-    # -- Backend protocol -----------------------------------------------------
+    # -- executor surface (timing lives in MeasuredBackend) ------------------
 
-    def evaluate(self, nest: LoopNest) -> float:
-        """GFLOPS of the schedule: compile once (structure-cached), then
-        best-of-``repeats`` wall time of the compiled program."""
-        c = nest.contraction
+    def run_once(self, nest: LoopNest) -> None:
+        """One synchronized run of the compiled program (the untimed policy
+        warm-up run pays any compilation)."""
         fn = self.executable(nest)
-        ops = self._inputs(c)
-        fn(*ops).block_until_ready()  # warm-up (compiles on first call)
-        best = float("inf")
-        for _ in range(self.repeats):
-            t0 = time.perf_counter()
-            fn(*ops).block_until_ready()
-            best = min(best, time.perf_counter() - t0)
-        return c.flops() / best / 1e9
+        fn(*self._inputs(nest.contraction)).block_until_ready()
 
-    def evaluate_batch(self, nests: Sequence[LoopNest]) -> np.ndarray:
-        """Compile each distinct structure once up front, then re-time —
-        first-call compile latency never pollutes a later nest's timing."""
-        seen = set()
-        for nest in nests:
-            key = nest.structure_key()
-            if key not in seen:
-                seen.add(key)
-                self.executable(nest)
-        return np.array([self.evaluate(n) for n in nests], dtype=np.float64)
+    def is_warm(self, nest: LoopNest) -> bool:
+        """Warm-up is elidable only once *this structure's* executable is
+        compiled — a hot contraction does not make a fresh structure warm
+        (its first call would pay tracing + XLA compilation)."""
+        key = (nest.structure_key(), self.vec_cap, self._route(nest.contraction))
+        return super().is_warm(nest) and key in self.kernels
+
+    def pool_spec(self) -> Tuple[str, Dict[str, Any], Optional[str]]:
+        # spawn, not fork: the parent's XLA runtime holds locks and threads
+        # a forked child would inherit mid-flight
+        return ("jax", {"vec_cap": self.vec_cap, "seed": self.seed,
+                        "pallas": self.pallas}, "spawn")
+
+    def cost_hint(self, nest: LoopNest) -> float:
+        """Slab count, like the interpreter's hint: compiled programs still
+        spend their time iterating slabs, and every schedule of one
+        contraction shares its FLOPs (the default hint would make the
+        pool's longest-first ordering a no-op on same-contraction batches)."""
+        from .cpu_backend import estimated_slab_count
+
+        return estimated_slab_count(nest, self.vec_cap)
 
     def peak(self) -> float:
         """Empirical peak GFLOPS of the XLA target: best-of-5 timing of a
-        high-arithmetic-intensity jitted matmul."""
-        if self._peak is None:
-            import jax
+        high-arithmetic-intensity jitted matmul.  Memoized per (device
+        kind, process)."""
+        import jax
+
+        device = jax.default_backend()
+        peak = _PEAK_CACHE.get(device)
+        if peak is None:
             import jax.numpy as jnp
 
             n = 512
@@ -408,12 +427,14 @@ class JaxJitBackend(Backend):
                 t0 = time.perf_counter()
                 mm(a, b).block_until_ready()
                 best = min(best, time.perf_counter() - t0)
-            self._peak = 2 * n**3 / best / 1e9
-        return self._peak
+            peak = 2 * n**3 / best / 1e9
+            _PEAK_CACHE[device] = peak
+        return peak
 
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> Dict[str, Any]:
         return {
             "compiles": self.compiles,
             "kernel_cache": self.kernels.stats(),
             "inputs_cache": self._inputs_cache.stats(),
+            "measure": self.measure_stats(),
         }

@@ -17,6 +17,11 @@ class ReplayBuffer:
         self.done = np.zeros((capacity,), np.float32)
         self.mask2 = None  # legal-action mask of s2, set lazily
         self.discount = np.ones((capacity,), np.float32)
+        # reward-quality mark from the measurement guardrails: a transition
+        # whose reward came from a still-noisy measurement never sits in
+        # the buffer unmarked — learners read ``noisy[idx]`` (sample()
+        # returns idx) and down-weight
+        self.noisy = np.zeros((capacity,), bool)
         self.size = 0
         self.pos = 0
 
@@ -24,7 +29,8 @@ class ReplayBuffer:
         if self.mask2 is None:
             self.mask2 = np.ones((self.capacity, n_actions), bool)
 
-    def add(self, s, a, r, s2, done, mask2=None, discount: float = 1.0) -> int:
+    def add(self, s, a, r, s2, done, mask2=None, discount: float = 1.0,
+            noisy: bool = False) -> int:
         i = self.pos
         self.s[i] = s
         self.a[i] = a
@@ -32,6 +38,7 @@ class ReplayBuffer:
         self.s2[i] = s2
         self.done[i] = float(done)
         self.discount[i] = discount
+        self.noisy[i] = bool(noisy)
         if mask2 is not None:
             self._ensure_mask(len(mask2))
             self.mask2[i] = mask2
@@ -109,8 +116,9 @@ class PrioritizedReplay(ReplayBuffer):
         self.max_priority = 1.0
         self.samples_drawn = 0
 
-    def add(self, s, a, r, s2, done, mask2=None, discount: float = 1.0) -> int:
-        i = super().add(s, a, r, s2, done, mask2, discount)
+    def add(self, s, a, r, s2, done, mask2=None, discount: float = 1.0,
+            noisy: bool = False) -> int:
+        i = super().add(s, a, r, s2, done, mask2, discount, noisy)
         self.tree.set(i, self.max_priority**self.alpha)
         return i
 

@@ -85,6 +85,11 @@ class RolloutBatch:
     actions: np.ndarray     # (T, N) int32
     rewards: np.ndarray     # (T, N) float32
     dones: np.ndarray       # (T, N) float32
+    # reward-quality flags from the measurement guardrails: True where the
+    # step's reward came from a measurement still flagged noisy after
+    # escalation + re-measurement (see core.measure) — trainers must not
+    # let such rewards into a replay buffer unmarked
+    noisy: np.ndarray       # (T, N) bool
     next_obs: np.ndarray    # (T, N, D) float32
     next_masks: np.ndarray  # (T, N, A) bool
     aux: Dict[str, np.ndarray]  # per-step policy aux, stacked (T, N, ...)
@@ -119,16 +124,18 @@ def collect_vec_rollout(
     A = np.zeros((t_len, n), np.int32)
     R = np.zeros((t_len, n), np.float32)
     D = np.zeros((t_len, n), np.float32)
+    NZ = np.zeros((t_len, n), bool)
     S2 = np.zeros((t_len, n, venv.state_dim), np.float32)
     M2 = np.zeros((t_len, n, venv.n_actions), bool)
     aux_steps: List[Dict[str, np.ndarray]] = []
     mask = venv.action_mask()
     for t in range(t_len):
         a, aux = policy(obs, mask)
-        obs2, r, done, _ = venv.step(a)
+        obs2, r, done, infos = venv.step(a)
         next_mask = venv.action_mask()
         S[t], M[t], A[t] = obs, mask, a
         R[t], D[t] = r, done.astype(np.float32)
+        NZ[t] = [bool(info.get("noisy", False)) for info in infos]
         S2[t], M2[t] = obs2, next_mask
         aux_steps.append(aux)
         ep_rewards += r
@@ -148,7 +155,7 @@ def collect_vec_rollout(
         k: np.stack([step[k] for step in aux_steps])
         for k in (aux_steps[0] if aux_steps else {})
     }
-    return RolloutBatch(S, M, A, R, D, S2, M2, aux_stacked, obs)
+    return RolloutBatch(S, M, A, R, D, NZ, S2, M2, aux_stacked, obs)
 
 
 def make_masked_act(score_fn) -> Callable[[list], ActFn]:

@@ -48,6 +48,7 @@ class LRUCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.invalidations = 0
 
     # -- plain mapping surface ------------------------------------------------
 
@@ -92,6 +93,16 @@ class LRUCache:
     def clear(self) -> None:
         self._data.clear()
 
+    def invalidate(self, key: Hashable) -> bool:
+        """Drop ``key`` so the next lookup re-creates it (used by the envs
+        to force re-measurement of a noisy reward).  Returns whether the
+        key was present."""
+        if key in self._data:
+            del self._data[key]
+            self.invalidations += 1
+            return True
+        return False
+
     def entries(self) -> List[Tuple[Hashable, Any]]:
         """Snapshot of ``(key, value)`` pairs, oldest first, without touching
         recency."""
@@ -104,6 +115,7 @@ class LRUCache:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "invalidations": self.invalidations,
         }
 
 

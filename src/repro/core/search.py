@@ -48,6 +48,11 @@ class SearchResult:
     # cache's counters): how much of the frontier was amortized vs measured
     cache_hits: int = 0
     cache_misses: int = 0
+    # measurement-guardrail traffic attributable to this search (delta of
+    # the backend's counters; zero on deterministic backends): how many
+    # measurements escalated repeats, and how many stayed noisy anyway
+    n_escalated: int = 0
+    n_noisy: int = 0
 
     @property
     def speedup(self) -> float:
@@ -172,14 +177,18 @@ def _children(env: LoopTuneEnv, nest: LoopNest) -> List[Tuple[int, LoopNest]]:
     return out
 
 
-def _cache_counters(env: LoopTuneEnv) -> Tuple[int, int]:
-    """Snapshot (hits, misses) of the env's shared ScheduleCache."""
-    return env.cache.hits, env.cache.misses
+def _cache_counters(env: LoopTuneEnv) -> Tuple[int, int, int, int]:
+    """Snapshot (hits, misses, escalations, noisy) of the env's shared
+    ScheduleCache and the backend's measurement-guardrail counters (zero
+    for deterministic backends, which have no guardrail traffic)."""
+    return (env.cache.hits, env.cache.misses,
+            getattr(env.backend, "n_escalations", 0),
+            getattr(env.backend, "n_noisy", 0))
 
 
 def _mk_result(name, env, base, best_g, best_seq, best_nest, budget, trace,
-               cache0=(0, 0), surrogate=None):
-    h0, m0 = cache0
+               cache0=(0, 0, 0, 0), surrogate=None):
+    h0, m0, e0, z0 = cache0
     return SearchResult(
         name=name,
         best_gflops=best_g,
@@ -191,6 +200,8 @@ def _mk_result(name, env, base, best_g, best_seq, best_nest, budget, trace,
         trace=trace,
         cache_hits=env.cache.hits - h0,
         cache_misses=env.cache.misses - m0,
+        n_escalated=getattr(env.backend, "n_escalations", 0) - e0,
+        n_noisy=getattr(env.backend, "n_noisy", 0) - z0,
         surrogate_stats=surrogate.stats() if surrogate is not None else None,
     )
 

@@ -16,6 +16,7 @@ records the untuned nest.
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .actions import CPU_SPLITS, TPU_SPLITS, actions_from_names, build_action_space
@@ -23,12 +24,17 @@ from .backend import backend_name, make_backend
 from .encoders import EncoderConfig, get_encoder, make_policy_act
 from .env import LoopTuneEnv
 from .loop_ir import Contraction, matmul_benchmark
+from .measure import measure_settings
 from .registry import ScheduleRegistry
 from .rl_common import ActFn, greedy_rollout, greedy_rollout_vec, load_checkpoint
 from .schedule_cache import ScheduleCache
 from .search import beam_search, greedy_search
 from .surrogate import SurrogateScorer
 from .vec_env import VecLoopTuneEnv
+
+# "warn once": legacy checkpoints without a recorded peak trip this on the
+# first load in a process, not on every tune() call
+_WARNED_NO_PEAK = False
 
 
 # legacy checkpoints (no meta) carry only the algo name; map it to the
@@ -101,6 +107,11 @@ class LoopTuner:
         # one evaluation cache for every env this tuner creates, so repeated
         # tune() calls and tune_many() lanes amortize each other
         self.cache = ScheduleCache()
+        # reward calibration (set by from_checkpoint): when not None, every
+        # env this tuner builds normalizes rewards by this peak instead of
+        # re-timing the live backend's — see _calibrate / core.measure
+        self.peak_override: Optional[float] = None
+        self.calibration: Dict[str, Any] = {"mode": "live"}
         # one learned cost model shared by every search-mode tune() call —
         # built lazily against the first env's featurizer, then warmed by
         # each tuned benchmark's measurements (see _scorer_for)
@@ -126,14 +137,63 @@ class LoopTuner:
             # the full recorded list, not just the split ladder: index i must
             # mean exactly what the policy's output unit i was trained on
             tuner.actions = actions_from_names(meta["actions"])
+        tuner._calibrate(meta)
         return tuner
+
+    def _calibrate(self, meta: Dict[str, Any]) -> None:
+        """Cross-backend reward calibration (see ``core.measure``).
+
+        Rewards are normalized GFLOPS deltas, ``(g' - g) / peak``.  The
+        policy's value scale is therefore tied to the ``peak`` its trainer
+        recorded:
+
+        * same executor as training — reuse the *recorded* peak, so the
+          reward scale is bit-identical to training (re-timing the
+          calibration kernel at load would shift every reward by the
+          re-timing jitter);
+        * different executor — normalize by the live executor's own peak
+          (each backend's fraction-of-its-own-peak is the scale-stable
+          cross-executor mapping) and surface the recorded/live ratio;
+        * legacy checkpoint with no recorded peak — warn once and fall
+          back to the live backend's ``peak()`` explicitly, instead of
+          silently mixing scales.
+        """
+        global _WARNED_NO_PEAK
+        recorded = meta.get("peak")
+        trained_on = meta.get("backend")
+        if recorded is None:
+            if not _WARNED_NO_PEAK:
+                _WARNED_NO_PEAK = True
+                warnings.warn(
+                    "checkpoint metadata records no training-time peak(); "
+                    "rewards will be normalized by the live backend's peak "
+                    "— the reward scale may differ from training "
+                    "(re-train or re-save to embed `peak` in meta)",
+                    stacklevel=3)
+            self.peak_override = None
+            self.calibration = {"mode": "legacy-live-peak",
+                                "trained_on": trained_on}
+        elif trained_on == self.backend_kind:
+            self.peak_override = float(recorded)
+            self.calibration = {"mode": "recorded",
+                                "trained_on": trained_on,
+                                "peak": float(recorded)}
+        else:
+            live = self.backend.peak()
+            self.peak_override = None
+            self.calibration = {"mode": "cross-backend",
+                                "trained_on": trained_on,
+                                "recorded_peak": float(recorded),
+                                "live_peak": float(live),
+                                "scale_ratio": float(recorded) / float(live)}
 
     # ------------------------------------------------------------------
 
     def _env_for(self, bench: Contraction) -> LoopTuneEnv:
         return LoopTuneEnv([bench], self.backend, actions=self.actions,
                            episode_len=self.episode_len, cache=self.cache,
-                           featurizer=self.featurizer)
+                           featurizer=self.featurizer,
+                           peak=self.peak_override)
 
     def _scorer_for(self, env: LoopTuneEnv) -> Optional[SurrogateScorer]:
         """The tuner-lifetime surrogate scorer (None when disabled).  Shared
@@ -194,7 +254,8 @@ class LoopTuner:
                                   actions=self.actions,
                                   episode_len=self.episode_len,
                                   cache=self.cache,
-                                  featurizer=self.featurizer)
+                                  featurizer=self.featurizer,
+                                  peak=self.peak_override)
             best_g, names, nests = greedy_rollout_vec(
                 venv, self.act, benchmark_indices=list(range(len(chunk))))
             per_bench_s = (time.perf_counter() - t0) / len(chunk)
@@ -209,9 +270,12 @@ class LoopTuner:
         return entries
 
     def stats(self) -> Dict[str, Any]:
-        """Observability: tuned-schedule count plus the shared evaluation
+        """Observability: tuned-schedule count, the shared evaluation
         cache's hit/miss/eviction counters (how much the batched-eval
-        substrate is actually amortizing)."""
+        substrate is actually amortizing), the backend's measurement
+        counters (variance escalations, noisy flags, pool health) and the
+        active reward calibration."""
+        ms = getattr(self.backend, "measure_stats", None)
         return {
             "policy": self.policy,
             "backend": self.backend_kind,
@@ -221,6 +285,9 @@ class LoopTuner:
             "surrogate": {"mode": self.surrogate,
                           **(self._scorer.stats()
                              if self._scorer is not None else {})},
+            "measurement": {"settings": measure_settings(self.backend),
+                            **(ms() if ms is not None else {})},
+            "calibration": dict(self.calibration),
         }
 
     def save(self, path: str) -> None:

@@ -21,9 +21,10 @@ import numpy as np
 
 from .actions import Action, apply_action, build_action_space, legal_mask
 from .backend import Backend, backend_name, make_backend
-from .env import DEFAULT_EPISODE_LEN, LoopTuneEnv
+from .env import DEFAULT_EPISODE_LEN, LoopTuneEnv, _settle_batch
 from .graph_features import FlatFeaturizer
 from .loop_ir import Contraction, LoopNest
+from .measure import Measurement, measurement_of
 from .schedule_cache import DEFAULT_CAPACITY, ScheduleCache
 
 
@@ -39,6 +40,8 @@ class VecLoopTuneEnv:
         cache_size: int = DEFAULT_CAPACITY,
         cache: Optional[ScheduleCache] = None,
         featurizer=None,
+        peak: Optional[float] = None,
+        remeasure_noisy: bool = True,
     ):
         if n_envs < 1:
             raise ValueError(f"n_envs must be >= 1, got {n_envs}")
@@ -54,10 +57,16 @@ class VecLoopTuneEnv:
         # same pluggable observation function as LoopTuneEnv (all lanes share)
         self.featurizer = featurizer if featurizer is not None else FlatFeaturizer()
         self.cache = cache if cache is not None else ScheduleCache(cache_size)
-        self.peak = self.backend.peak()
+        # calibrated reward normalizer override — same semantics as
+        # LoopTuneEnv(peak=...)
+        self._peak_override = peak
+        self.peak = float(peak) if peak is not None else self.backend.peak()
+        self.remeasure_noisy = remeasure_noisy
         self.nests: List[Optional[LoopNest]] = [None] * n_envs
         self.t = np.zeros(n_envs, dtype=np.int64)
         self._gflops = np.zeros(n_envs, dtype=np.float64)
+        # per-lane baseline reward quality — see LoopTuneEnv._g_noisy
+        self._g_noisy = np.zeros(n_envs, dtype=bool)
         self.initial_gflops = np.zeros(n_envs, dtype=np.float64)
 
     @classmethod
@@ -85,7 +94,11 @@ class VecLoopTuneEnv:
         return cls(env.benchmarks, be, n_envs, actions=env.actions,
                    episode_len=env.episode_len, seed=seed, cache=cache,
                    featurizer=featurizer if featurizer is not None
-                   else env.featurizer)
+                   else env.featurizer,
+                   # a calibrated normalizer only carries over to the same
+                   # executor (cache is None exactly when it changed)
+                   peak=env._peak_override if cache is env.cache else None,
+                   remeasure_noisy=env.remeasure_noisy)
 
     @classmethod
     def ensure(cls, env, n_envs: int, seed: int = 0,
@@ -129,7 +142,16 @@ class VecLoopTuneEnv:
         return backend_name(self.backend)
 
     def gflops_batch(self, nests: Sequence[LoopNest]) -> np.ndarray:
-        return self.cache.evaluate_batch(self.backend, nests)
+        """Cached batched evaluation with the reward-quality guardrail:
+        noisy measurements re-measure once through one extra batched call
+        (same semantics as ``LoopTuneEnv.gflops``)."""
+        g = self.cache.evaluate_batch(self.backend, nests)
+        return _settle_batch(self.backend, self.cache, nests, g,
+                             self.remeasure_noisy)[0]
+
+    def _noisy_of(self, nest: LoopNest) -> bool:
+        m = measurement_of(self.backend, nest)
+        return bool(m is not None and m.noisy)
 
     def clear_cache(self) -> None:
         self.cache.clear()
@@ -165,6 +187,7 @@ class VecLoopTuneEnv:
             self.t[i] = 0
         g = self.gflops_batch(self.nests)
         self._gflops[:] = g
+        self._g_noisy[:] = [self._noisy_of(n) for n in self.nests]
         self.initial_gflops[:] = g
         return self.observe()
 
@@ -190,6 +213,7 @@ class VecLoopTuneEnv:
         g = self.gflops_batch([self.nests[i] for i in lanes])
         for j, i in enumerate(lanes):
             self._gflops[i] = g[j]
+            self._g_noisy[i] = self._noisy_of(self.nests[i])
             self.initial_gflops[i] = g[j]
 
     def observe_lane(self, i: int) -> np.ndarray:
@@ -225,18 +249,31 @@ class VecLoopTuneEnv:
             if apply_action(self.nests[i], action):
                 changed.append(i)
         rewards = np.zeros(n, dtype=np.float64)
+        noisy = [False] * n
+        measurements: List[Optional[Measurement]] = [None] * n
         if changed:
+            # gflops_batch applies the reward-quality guardrail (noisy
+            # measurements re-measured once, batched)
             new_g = self.gflops_batch([self.nests[i] for i in changed])
             for j, i in enumerate(changed):
-                # same float64 arithmetic as the scalar env's step()
+                m = measurement_of(self.backend, self.nests[i])
+                new_noisy = bool(m is not None and m.noisy)
+                # same float64 arithmetic as the scalar env's step(); a
+                # delta reward embeds the noise of EITHER endpoint
                 rewards[i] = (float(new_g[j]) - float(self._gflops[i])) / self.peak
+                noisy[i] = new_noisy or bool(self._g_noisy[i])
                 self._gflops[i] = new_g[j]
+                self._g_noisy[i] = new_noisy
+                measurements[i] = m
         self.t += 1
         dones = self.t >= self.episode_len
-        infos = [
-            {"gflops": float(self._gflops[i]), "action": names[i]}
-            for i in range(n)
-        ]
+        infos = []
+        for i in range(n):
+            info = {"gflops": float(self._gflops[i]), "action": names[i],
+                    "noisy": noisy[i]}
+            if measurements[i] is not None:
+                info["measurement"] = measurements[i].to_info()
+            infos.append(info)
         return self.observe(), rewards, dones, infos
 
     # -- snapshots (per-lane, mirroring LoopTuneEnv) ---------------------------
@@ -249,3 +286,4 @@ class VecLoopTuneEnv:
         self.nests[i] = nest.clone()
         self.t[i] = t
         self._gflops[i] = g
+        self._g_noisy[i] = self._noisy_of(self.nests[i])

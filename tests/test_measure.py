@@ -1,0 +1,718 @@
+"""Measurement subsystem tests: variance guardrails (fake clock — no real
+sleeps), the pure-executor split, reward-quality plumbing through the envs
+and trainers' replay path, cross-backend reward calibration, and the worker
+pool (parity, fan-out merge, fault injection) — pool tests fork processes
+and are marked ``slow``."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    LoopTuneEnv,
+    Measurement,
+    MeasurementPolicy,
+    TPUAnalyticalBackend,
+    VecLoopTuneEnv,
+    WorkerPool,
+    make_backend,
+    matmul_benchmark,
+    measure_local,
+    measure_settings,
+    register_backend,
+)
+from repro.core.actions import apply_action, build_action_space, is_legal
+from repro.core.cpu_backend import CPUMeasuredBackend
+from repro.core.loop_ir import LoopNest
+from repro.core.measure import MeasuredBackend, degenerate_measurement
+from repro.core.replay import PrioritizedReplay, ReplayBuffer
+
+BENCH = matmul_benchmark(16, 16, 16)
+ACTIONS = build_action_space()
+
+
+class FakeClock:
+    """Scripted perf_counter: each timed run consumes one duration."""
+
+    def __init__(self, durations):
+        self.durations = list(durations)
+        self.i = 0
+        self.now = 0.0
+        self.pending = None
+
+    def __call__(self):
+        if self.pending is None:
+            self.pending = self.now
+            return self.now
+        d = self.durations[min(self.i, len(self.durations) - 1)]
+        self.i += 1
+        self.now = self.pending + d
+        self.pending = None
+        return self.now
+
+
+def _walk(n_nests, steps=4, seed=0, bench=BENCH):
+    """Distinct random schedules of ``bench``."""
+    rng = np.random.default_rng(seed)
+    out, seen = [], set()
+    root = LoopNest(bench)
+    while len(out) < n_nests:
+        cur = root.clone()
+        for _ in range(steps):
+            legal = [a for a in ACTIONS if is_legal(cur, a)]
+            apply_action(cur, legal[int(rng.integers(len(legal)))])
+        if cur.structure_key() not in seen:
+            seen.add(cur.structure_key())
+            out.append(cur)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MeasurementPolicy: the variance guardrail, under a fake clock
+# ---------------------------------------------------------------------------
+
+
+def test_clean_timings_no_escalation():
+    runs = []
+    pol = MeasurementPolicy(repeats=3, clock=FakeClock([0.010] * 20))
+    m = pol.measure(lambda: runs.append(1), flops=2e6)
+    assert m.repeats == 3 and m.escalations == 0 and not m.noisy
+    assert len(runs) == 3 + pol.warmup
+    assert m.best_s == pytest.approx(0.010)
+    assert m.gflops == pytest.approx(2e6 / 0.010 / 1e9)
+    assert m.spread == pytest.approx(0.0)
+
+
+def test_transient_jitter_escalates_then_settles():
+    # one GC-pause outlier in the base window: spread blows past the
+    # threshold, the guardrail buys more samples, and the best-3 window of
+    # the escalated set is clean again
+    pol = MeasurementPolicy(repeats=3, max_repeats=12, spread_threshold=0.25,
+                            clock=FakeClock([0.010, 0.010, 0.030] + [0.010] * 20))
+    m = pol.measure(lambda: None, flops=1e6)
+    assert m.escalations >= 1
+    assert m.repeats > 3
+    assert not m.noisy
+    assert m.best_s == pytest.approx(0.010)
+
+
+def test_persistent_jitter_flags_noisy_at_max_repeats():
+    # every sample is worse than the last: even the best-3 window never
+    # tightens, escalation stops exactly at max_repeats and the
+    # measurement is flagged
+    durations = [0.010 * (1 + 0.2 * i) for i in range(50)]
+    pol = MeasurementPolicy(repeats=3, max_repeats=12, spread_threshold=0.25,
+                            clock=FakeClock(durations))
+    m = pol.measure(lambda: None, flops=1e6)
+    assert m.noisy
+    assert m.repeats == 12  # never exceeds max_repeats
+    assert m.spread > pol.spread_threshold
+
+
+def test_window_spread_ignores_out_of_window_outliers():
+    # the 4th (slowest) sample is outside the best-3 window, so a single
+    # tail outlier costs nothing once enough clean samples exist
+    pol = MeasurementPolicy(repeats=3)
+    assert pol.window_spread([0.010, 0.010, 0.010, 0.050]) == pytest.approx(0.0)
+    assert pol.window_spread([0.012, 0.010, 0.011]) == pytest.approx(0.2)
+
+
+def test_warm_elide_skips_warmup_only_when_warm():
+    for warm, expect in ((False, 2 + 3), (True, 3)):
+        runs = []
+        pol = MeasurementPolicy(repeats=3, warmup=2,
+                                clock=FakeClock([0.01] * 10))
+        pol.measure(lambda: runs.append(1), flops=1e6, warm=warm)
+        assert len(runs) == expect
+    # warm_elide=False keeps the warmup even for warm sites
+    runs = []
+    pol = MeasurementPolicy(repeats=3, warmup=2, warm_elide=False,
+                            clock=FakeClock([0.01] * 10))
+    pol.measure(lambda: runs.append(1), flops=1e6, warm=True)
+    assert len(runs) == 5
+
+
+def test_policy_validation_and_roundtrip():
+    with pytest.raises(ValueError):
+        MeasurementPolicy(repeats=0)
+    with pytest.raises(ValueError):
+        MeasurementPolicy(repeats=5, max_repeats=3)
+    with pytest.raises(ValueError):
+        MeasurementPolicy(escalate_factor=1)
+    pol = MeasurementPolicy(repeats=5, max_repeats=20, spread_threshold=0.1)
+    assert MeasurementPolicy.from_dict(pol.to_dict()) == pol
+    # a custom clock never ships to workers
+    assert MeasurementPolicy(clock=FakeClock([1])).shippable().clock is None
+
+
+def test_merge_is_best_of_across_processes():
+    pol = MeasurementPolicy(repeats=3)
+    a = Measurement(gflops=1.0, best_s=0.020, spread=0.0, repeats=3,
+                    escalations=1, noisy=False, worker=0,
+                    times=(0.020, 0.021, 0.022))
+    b = Measurement(gflops=2.0, best_s=0.010, spread=0.0, repeats=3,
+                    escalations=0, noisy=False, worker=1,
+                    times=(0.010, 0.010, 0.011))
+    m = Measurement.merge([a, b], 1e6, pol)
+    assert m.best_s == pytest.approx(0.010)
+    assert m.worker == 1  # the worker that produced the best time
+    assert m.repeats == 6
+    assert m.escalations == 1
+    assert m.gflops == pytest.approx(1e6 / 0.010 / 1e9)
+
+
+def test_measure_local_on_analytical_backend_is_degenerate():
+    be = TPUAnalyticalBackend()
+    nest = LoopNest(BENCH)
+    m = measure_local(be, nest, worker=7)
+    assert m.gflops == pytest.approx(be.evaluate(nest))
+    assert m.spread == 0.0 and not m.noisy and m.worker == 7
+    assert degenerate_measurement(3.0).repeats == 1
+
+
+# ---------------------------------------------------------------------------
+# MeasuredBackend: the pure-executor split
+# ---------------------------------------------------------------------------
+
+
+class FakeExecBackend(MeasuredBackend):
+    """Counting executor with a scripted clock (no real timing)."""
+
+    name = "fake-exec"
+
+    def __init__(self, durations, **kw):
+        kw.setdefault("policy", MeasurementPolicy(
+            repeats=2, max_repeats=2, clock=FakeClock(durations)))
+        super().__init__(**kw)
+        self.runs = 0
+
+    def run_once(self, nest):
+        self.runs += 1
+
+    def pool_spec(self):
+        raise NotImplementedError
+
+    def peak(self):
+        return 100.0
+
+
+def test_measured_backend_records_and_counters():
+    be = FakeExecBackend([0.010] * 50)
+    nest = LoopNest(BENCH)
+    g = be.evaluate(nest)
+    m = be.measurement_for(nest)
+    assert m is not None and m.gflops == g
+    assert be.n_measurements == 1 and be.n_noisy == 0
+    # unknown structure -> no record
+    other = nest.clone()
+    other.split(0, 4)
+    assert be.measurement_for(other) is None
+    stats = be.measure_stats()
+    assert stats["measurements"] == 1 and stats["mode"] == "inproc"
+    settings = be.measure_settings()
+    assert settings["mode"] == "inproc"
+    assert settings["policy"]["repeats"] == 2
+    # batch path agrees with the scalar path's bookkeeping
+    gs = be.evaluate_batch(_walk(3, seed=4))
+    assert gs.shape == (3,) and be.n_measurements == 4
+
+
+def test_measured_backend_noisy_counter():
+    # alternating 1x/2x durations: spread 1.0 > threshold, max_repeats
+    # already reached -> every measurement is noisy
+    be = FakeExecBackend([0.010, 0.020] * 50)
+    be.evaluate(LoopNest(BENCH))
+    assert be.n_noisy == 1
+    m = be.measurement_for(LoopNest(BENCH))
+    assert m.noisy
+
+
+def test_inproc_never_elides_warmup_isolated_does():
+    nest = LoopNest(BENCH)
+    be = FakeExecBackend([0.01] * 100)  # repeats=2, warmup=1
+    be.measure(nest)
+    be.measure(nest)
+    assert be.runs == 2 * (1 + 2)  # warmup every time in-process
+    iso = FakeExecBackend([0.01] * 100, isolated=True)
+    iso.measure(nest)
+    iso.measure(nest)
+    assert iso.runs == (1 + 2) + 2  # second measurement elides the warmup
+
+
+def test_conflicting_repeats_and_policy_raises():
+    with pytest.raises(ValueError):
+        CPUMeasuredBackend(repeats=5, policy=MeasurementPolicy(repeats=3))
+    with pytest.raises(ValueError):
+        CPUMeasuredBackend(measure="bogus")
+
+
+def test_peak_memoized_per_process():
+    import repro.core.cpu_backend as cb
+
+    saved = dict(cb._PEAK_CACHE)
+    try:
+        cb._PEAK_CACHE.clear()
+        cb._PEAK_CACHE[4096] = 123.0
+        # a fresh instance must reuse the process-wide calibration, not
+        # re-time the kernel
+        assert CPUMeasuredBackend().peak() == 123.0
+        assert CPUMeasuredBackend(vec_cap=4096).peak() == 123.0
+        assert 512 not in cb._PEAK_CACHE
+    finally:
+        cb._PEAK_CACHE.clear()
+        cb._PEAK_CACHE.update(saved)
+
+
+def test_cpu_cost_hint_tracks_slab_count():
+    be = CPUMeasuredBackend(repeats=1)
+    root = LoopNest(BENCH)
+    # 16^3 fits the 4096-wide suffix entirely: no python-side slab loops
+    assert be.cost_hint(root) == pytest.approx(1.0)
+    small = CPUMeasuredBackend(repeats=1, vec_cap=16)
+    assert small.cost_hint(root) > be.cost_hint(root)
+
+
+# ---------------------------------------------------------------------------
+# Env integration: reward quality in info, re-measurement of noisy rewards
+# ---------------------------------------------------------------------------
+
+
+def _noisy_then_clean_backend(**kw):
+    # reset's measurement is clean [1x, 1x]; the step's first measurement
+    # sees [1x, 2x] (noisy at max_repeats); every later measurement —
+    # including the guardrail's re-measurement — is clean again
+    return FakeExecBackend([0.010, 0.010, 0.010, 0.020] + [0.010] * 400, **kw)
+
+
+def test_env_remeasures_noisy_reward_once():
+    be = _noisy_then_clean_backend()
+    env = LoopTuneEnv([BENCH], be, actions=ACTIONS, seed=0)
+    env.reset(0)
+    # reset's initial eval was noisy -> settled on reset? reset does not
+    # re-measure (rewards are deltas); step on a structural action does
+    a_idx = next(i for i, a in enumerate(ACTIONS) if a.name == "swap_down")
+    _, _, _, info = env.step(a_idx)
+    m = info["measurement"]
+    assert info["noisy"] is False  # re-measured clean
+    assert m["remeasured"] is True
+    assert env.cache.invalidations >= 1
+
+
+def test_env_marks_still_noisy_rewards():
+    # every measurement is noisy: after the one re-measurement the reward
+    # reaches the caller marked, and is never re-measured again
+    be = FakeExecBackend([0.010, 0.020] * 400)
+    env = LoopTuneEnv([BENCH], be, actions=ACTIONS, seed=0)
+    env.reset(0)
+    a_idx = next(i for i, a in enumerate(ACTIONS) if a.name == "swap_down")
+    _, _, _, info = env.step(a_idx)
+    assert info["noisy"] is True
+    assert info["measurement"]["remeasured"] is True
+    inv = env.cache.invalidations
+    # revisiting the same structure must not trigger a re-measurement loop
+    env.reset(0)
+    _, _, _, info2 = env.step(a_idx)
+    assert env.cache.invalidations == inv
+
+
+def test_env_remeasure_disabled_marks_without_spending():
+    be = _noisy_then_clean_backend()
+    env = LoopTuneEnv([BENCH], be, actions=ACTIONS, seed=0,
+                      remeasure_noisy=False)
+    env.reset(0)
+    a_idx = next(i for i, a in enumerate(ACTIONS) if a.name == "swap_down")
+    _, _, _, info = env.step(a_idx)
+    assert info["noisy"] is True
+    assert env.cache.invalidations == 0
+
+
+def test_vec_env_settles_noisy_lanes_batched():
+    be = _noisy_then_clean_backend()
+    venv = VecLoopTuneEnv([BENCH], be, n_envs=3, actions=ACTIONS, seed=0)
+    venv.reset([0, 0, 0])
+    a_idx = next(i for i, a in enumerate(ACTIONS) if a.name == "swap_down")
+    _, _, _, infos = venv.step([a_idx] * 3)
+    # all three lanes hit the same structure: one measurement + one
+    # re-measurement total, all lanes report the settled record
+    for info in infos:
+        assert info["noisy"] is False
+        assert info["measurement"]["remeasured"] is True
+
+
+def test_noisy_baseline_marks_next_delta_reward():
+    # reset clean; the first structural step stays noisy even after its
+    # re-measurement; the NEXT step's measurement is clean but its delta
+    # reward still embeds the noisy baseline -> it must arrive marked
+    be = FakeExecBackend([0.010, 0.010,          # reset: clean
+                          0.010, 0.020,          # step 1: noisy
+                          0.010, 0.020]          # step 1 re-measure: noisy
+                         + [0.010] * 400, **{})  # step 2 onwards: clean
+    env = LoopTuneEnv([BENCH], be, actions=ACTIONS, seed=0)
+    env.reset(0)
+    a_idx = next(i for i, a in enumerate(ACTIONS) if a.name == "swap_down")
+    _, _, _, info1 = env.step(a_idx)
+    assert info1["noisy"] is True
+    _, _, _, info2 = env.step(a_idx)
+    assert info2["noisy"] is True  # baseline endpoint was noisy
+    _, _, _, info3 = env.step(a_idx)
+    assert info3["noisy"] is False  # both endpoints clean now
+
+
+def test_direct_gflops_path_is_settled_too():
+    # searches and the surrogate call env.gflops/gflops_batch directly —
+    # the guardrail must cover them, not just step()
+    be = _noisy_then_clean_backend()
+    env = LoopTuneEnv([BENCH], be, actions=ACTIONS, seed=0)
+    env.reset(0)  # consumes the clean pair
+    nest = LoopNest(BENCH)
+    nest.split(0, 4)  # fresh structure: measured noisy, then settled
+    env.gflops(nest)
+    m = be.measurement_for(nest)
+    assert m.remeasured is True and not m.noisy
+    assert env.cache.invalidations == 1
+
+
+def test_env_peak_override():
+    env = LoopTuneEnv([BENCH], "tpu", actions=ACTIONS, peak=1000.0)
+    assert env.peak == 1000.0
+    sib = env.with_backend("tpu")
+    assert sib.peak == 1000.0  # same executor: calibration carries over
+    venv = VecLoopTuneEnv.from_env(env, 2)
+    assert venv.peak == 1000.0
+    direct = VecLoopTuneEnv([BENCH], "tpu", 2, actions=ACTIONS, peak=500.0)
+    assert direct.peak == 500.0
+
+
+# ---------------------------------------------------------------------------
+# Rollouts + replay: noisy rewards never reach the buffer unmarked
+# ---------------------------------------------------------------------------
+
+
+def test_collect_vec_rollout_carries_noisy_flags():
+    from repro.core.rl_common import collect_vec_rollout
+
+    be = FakeExecBackend([0.010, 0.020] * 2000)  # always noisy
+    venv = VecLoopTuneEnv([BENCH], be, n_envs=2, actions=ACTIONS, seed=0)
+    obs = venv.reset([0, 0])
+    a_idx = next(i for i, a in enumerate(ACTIONS) if a.name == "swap_down")
+
+    def policy(o, m):
+        return np.full(2, a_idx, np.int32), {}
+
+    batch = collect_vec_rollout(venv, policy, 3, obs,
+                                np.zeros(2, np.float32), [])
+    assert batch.noisy.shape == (3, 2)
+    assert batch.noisy[0].all()  # first step changed structure noisily
+
+
+def test_replay_buffers_mark_noisy_transitions():
+    for buf in (ReplayBuffer(8, 4), PrioritizedReplay(8, 4)):
+        i0 = buf.add(np.zeros(4), 0, 1.0, np.zeros(4), False)
+        i1 = buf.add(np.zeros(4), 1, -1.0, np.zeros(4), False, noisy=True)
+        assert not buf.noisy[i0] and buf.noisy[i1]
+        out = buf.sample(4, np.random.default_rng(0))
+        idx = out[0][-1] if isinstance(buf, PrioritizedReplay) else out[-1]
+        assert set(np.unique(buf.noisy[idx])) <= {False, True}
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint meta round-trip + reward calibration
+# ---------------------------------------------------------------------------
+
+
+TRAINERS = ["dqn", "apex", "ppo", "a2c", "impala"]
+
+
+def _train_tiny(algo, env, **cfg_kw):
+    if algo == "dqn":
+        from repro.core.dqn import DQNConfig, train_dqn
+
+        return train_dqn(env, 2, DQNConfig(hidden=(16,), n_envs=2,
+                                           warmup_steps=5, **cfg_kw))
+    if algo == "apex":
+        from repro.core.apex_dqn import ApexConfig, train_apex
+
+        return train_apex(lambda i: env, 2,
+                          ApexConfig(hidden=(16,), n_actors=2,
+                                     warmup_steps=5, **cfg_kw))
+    if algo == "ppo":
+        from repro.core.ppo import PPOConfig, train_ppo
+
+        return train_ppo(lambda i: env, 2,
+                         PPOConfig(hidden=(16,), n_envs=2, **cfg_kw))
+    if algo == "a2c":
+        from repro.core.a2c import A2CConfig, train_a2c
+
+        return train_a2c(lambda i: env, 2,
+                         A2CConfig(hidden=(16,), n_envs=2, **cfg_kw))
+    from repro.core.impala import ImpalaConfig, train_impala
+
+    return train_impala(lambda i: env, 2,
+                        ImpalaConfig(hidden=(16,), n_envs=2, **cfg_kw))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algo", TRAINERS)
+def test_peak_rides_checkpoint_meta_for_every_trainer(algo, tmp_path):
+    from repro.core.tuner import LoopTuner
+
+    env = LoopTuneEnv([BENCH], "tpu", actions=ACTIONS, seed=0)
+    res = _train_tiny(algo, env)
+    assert res.meta["peak"] == pytest.approx(env.peak)
+    assert res.meta["backend"] == "tpu"
+    assert res.meta["measure"]["mode"] == "inproc"
+    path = str(tmp_path / f"{algo}.pkl")
+    res.save(path)
+    tuner = LoopTuner.from_checkpoint(path)
+    # same executor: the tuner normalizes rewards by the recorded peak
+    assert tuner.calibration["mode"] == "recorded"
+    assert tuner.peak_override == pytest.approx(env.peak)
+    tuned_env = tuner._env_for(BENCH)
+    assert tuned_env.peak == pytest.approx(env.peak)
+
+
+def test_legacy_checkpoint_without_peak_warns_once(tmp_path):
+    import repro.core.tuner as tuner_mod
+    from repro.core.dqn import DQNConfig, train_dqn
+    from repro.core.tuner import LoopTuner
+
+    env = LoopTuneEnv([BENCH], "tpu", actions=ACTIONS, seed=0)
+    res = train_dqn(env, 1, DQNConfig(hidden=(16,), n_envs=2, warmup_steps=5))
+    res.meta = dict(res.meta, peak=None)  # simulate a pre-calibration ckpt
+    path = str(tmp_path / "legacy.pkl")
+    res.save(path)
+
+    tuner_mod._WARNED_NO_PEAK = False
+    with pytest.warns(UserWarning, match="no training-time peak"):
+        tuner = LoopTuner.from_checkpoint(path)
+    assert tuner.calibration["mode"] == "legacy-live-peak"
+    assert tuner.peak_override is None  # live backend peak, explicitly
+    # "once": the second load stays silent
+    with warnings_none():
+        LoopTuner.from_checkpoint(path)
+
+
+class warnings_none:
+    def __enter__(self):
+        import warnings
+
+        self._cm = warnings.catch_warnings(record=True)
+        self.records = self._cm.__enter__()
+        import warnings as w
+
+        w.simplefilter("always")
+        return self
+
+    def __exit__(self, *exc):
+        res = self._cm.__exit__(*exc)
+        assert not [r for r in self.records
+                    if "no training-time peak" in str(r.message)]
+        return res
+
+
+def test_cross_backend_calibration_uses_live_peak(tmp_path):
+    from repro.core.dqn import DQNConfig, train_dqn
+    from repro.core.tuner import LoopTuner
+
+    env = LoopTuneEnv([BENCH], "tpu", actions=ACTIONS, seed=0)
+    res = train_dqn(env, 1, DQNConfig(hidden=(16,), n_envs=2, warmup_steps=5))
+    path = str(tmp_path / "tpu.pkl")
+    res.save(path)
+    tuner = LoopTuner.from_checkpoint(path, backend="numpy")
+    cal = tuner.calibration
+    assert cal["mode"] == "cross-backend"
+    assert cal["trained_on"] == "tpu"
+    assert cal["recorded_peak"] == pytest.approx(env.peak)
+    assert cal["live_peak"] > 0
+    assert cal["scale_ratio"] == pytest.approx(
+        cal["recorded_peak"] / cal["live_peak"])
+    assert tuner.peak_override is None
+    stats = tuner.stats()
+    assert stats["calibration"]["mode"] == "cross-backend"
+    assert stats["measurement"]["settings"]["mode"] == "inproc"
+
+
+# ---------------------------------------------------------------------------
+# Worker pool (forks processes -> slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_pool_parity_with_inproc_on_analytical_backend():
+    nests = _walk(6, seed=1)
+    inproc = make_backend("tpu")
+    with WorkerPool("tpu", n_workers=2) as pool:
+        ms = pool.measure_batch(nests)
+    got = np.array([m.gflops for m in ms])
+    want = inproc.evaluate_batch(nests)
+    assert np.abs(got - want).max() <= 1e-9
+
+
+@pytest.mark.slow
+def test_make_backend_tpu_pool_parity_and_close():
+    nests = _walk(5, seed=2)
+    be = make_backend("tpu", measure="pool", pool_workers=2)
+    try:
+        want = make_backend("tpu").evaluate_batch(nests)
+        got = be.evaluate_batch(nests)
+        assert np.abs(got - want).max() <= 1e-9
+        assert be.measure_settings()["mode"] == "pool"
+    finally:
+        be.close()
+        be.close()  # idempotent
+
+
+@pytest.mark.slow
+def test_pool_measured_backend_fans_out_and_merges():
+    nest = LoopNest(BENCH)
+    be = make_backend("numpy", repeats=1, measure="pool", pool_workers=2)
+    try:
+        m = be.measure(nest)
+        # one schedule, two workers: best-of across processes
+        assert m.repeats == 2
+        assert m.gflops > 0
+        assert be.measure_stats()["pool"]["workers"] == 2
+    finally:
+        be.close()
+
+
+@pytest.mark.slow
+def test_pool_dedups_duplicate_structures():
+    nests = _walk(3, seed=5)
+    batch = nests + [nests[0].clone(), nests[1].clone()]
+    with WorkerPool("tpu", n_workers=2) as pool:
+        ms = pool.measure_batch(batch)
+        assert pool.tasks_done == 3  # one task per distinct structure
+    assert ms[0].gflops == ms[3].gflops
+    assert ms[1].gflops == ms[4].gflops
+
+
+def _crashy_factory(token="", policy=None, crash_value=42.0, always=False):
+    class Crashy(TPUAnalyticalBackend):
+        name = "crashy"
+
+        def evaluate(self, nest):
+            if always:
+                os._exit(1)  # poison: kills every worker it touches
+            if token and os.path.exists(token):
+                os.unlink(token)  # crash exactly once across respawns
+                os._exit(1)
+            return crash_value
+
+        def peak(self):
+            return 100.0
+
+    return Crashy()
+
+
+register_backend("crashy", _crashy_factory)
+
+
+@pytest.mark.slow
+def test_pool_respawns_dead_worker_and_remeasures(tmp_path):
+    token = tmp_path / "crash-once"
+    token.write_text("boom")
+    nests = _walk(3, seed=6)
+    # fork start method: the test-registered "crashy" backend must be
+    # visible inside the workers
+    with WorkerPool("crashy", {"token": str(token)}, n_workers=1,
+                    start_method="fork") as pool:
+        ms = pool.measure_batch(nests)
+        stats = pool.stats()
+    assert [m.gflops for m in ms] == [42.0] * 3  # all re-measured
+    assert stats["respawns"] >= 1
+    assert stats["alive"] == 1  # the replacement worker survived
+    assert not token.exists()
+
+
+@pytest.mark.slow
+def test_pool_worker_payloads_flow_through_verbatim(tmp_path):
+    # a worker's evaluator output (here a deliberate NaN) reaches the
+    # parent unaltered — the pool transports rewards, it never invents them
+    nests = _walk(2, seed=7)
+    with WorkerPool("crashy", {"token": "", "crash_value": float("nan")},
+                    n_workers=1, start_method="fork",
+                    max_task_retries=1) as pool:
+        ms = pool.measure_batch(nests)
+        assert len(ms) == 2
+    assert all(np.isnan(m.gflops) for m in ms)
+
+
+@pytest.mark.slow
+def test_pool_poison_schedule_resolves_as_failed_not_in_parent(tmp_path):
+    # a schedule that kills EVERY worker must neither wedge the batch nor
+    # run in the parent (that would take the trainer down with it): after
+    # the retry budget it resolves to a marked-failed record
+    nests = _walk(2, seed=9)
+    with WorkerPool("crashy", {"always": True}, n_workers=1,
+                    start_method="fork", max_task_retries=1) as pool:
+        ms = pool.measure_batch(nests)
+        stats = pool.stats()
+    assert [m.gflops for m in ms] == [0.0, 0.0]
+    assert all(m.noisy and m.remeasured for m in ms)  # marked, not retried
+    assert stats["failed_tasks"] == 2
+    assert stats["respawns"] >= 2
+
+
+def _sleepy_factory(token="", policy=None, value=7.0, sleep_s=60.0):
+    class Sleepy(TPUAnalyticalBackend):
+        name = "sleepy"
+
+        def evaluate(self, nest):
+            import time as _t
+
+            if token and os.path.exists(token):
+                os.unlink(token)  # hang exactly once across respawns
+                _t.sleep(sleep_s)
+            return value
+
+    return Sleepy()
+
+
+register_backend("sleepy", _sleepy_factory)
+
+
+@pytest.mark.slow
+def test_pool_kills_hung_worker_and_recovers(tmp_path):
+    # a worker that is alive but stuck (inherited lock, runaway evaluator)
+    # must not wedge the batch: the watchdog kills it, the respawn
+    # re-measures, and the batch completes
+    token = tmp_path / "hang-once"
+    token.write_text("zzz")
+    nests = _walk(2, seed=8)
+    with WorkerPool("sleepy", {"token": str(token)}, n_workers=1,
+                    start_method="fork", task_timeout_s=1.5) as pool:
+        ms = pool.measure_batch(nests)
+        stats = pool.stats()
+    assert [m.gflops for m in ms] == [7.0] * 2
+    assert stats["hung_killed"] >= 1
+    assert stats["respawns"] >= 1
+    assert stats["alive"] == 1
+
+
+def test_pool_rejects_backend_instances():
+    with pytest.raises(TypeError):
+        WorkerPool(TPUAnalyticalBackend())
+
+
+# ---------------------------------------------------------------------------
+# Bench smoke (CI mark): the harness runs end-to-end on tiny inputs
+# ---------------------------------------------------------------------------
+
+
+def test_bench_measure_smoke(tmp_path, monkeypatch):
+    import benchmarks.bench_measure as bm
+    import benchmarks.common as common
+
+    monkeypatch.setattr(common, "RESULTS", tmp_path)
+    result = bm.run(n_schedules=3, reps=1, pool=False, dims=(16, 16, 16),
+                    out_name="bench_measure_test")
+    assert result["n_schedules"] == 3
+    assert result["inproc"]["wall_s"] > 0
+    assert (tmp_path / "bench_measure_test.json").exists()
+    assert "variance" in result
+
+
+def test_measure_settings_helper():
+    assert measure_settings(make_backend("tpu"))["mode"] == "inproc"
+    assert measure_settings(object()) is None
