@@ -1,19 +1,56 @@
-"""Shared benchmark helpers: result I/O and the standard env builders."""
+"""Shared benchmark helpers: result I/O, host-contention guard, and the
+standard env builders."""
 from __future__ import annotations
 
 import json
 import os
 import time
 from pathlib import Path
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+# Idle-spin calibration (amortized per process): time a fixed pure-Python
+# spin twice and compare the best to the spread.  On an idle host the two
+# passes agree to a few percent; a loaded host (CI neighbors, background
+# compiles) shows jitter, which taints any wall-clock numbers measured
+# alongside.  Every committed results/*.json carries the verdict so a
+# regression chase can discard tainted artifacts first.
+_SPIN_ITERS = 2_000_000
+_CONTENTION: Optional[Dict[str, Any]] = None
+
+
+def _spin_once() -> float:
+    t0 = time.perf_counter()
+    x = 0
+    for i in range(_SPIN_ITERS):
+        x += i
+    return time.perf_counter() - t0
+
+
+def contention_probe(refresh: bool = False) -> Dict[str, Any]:
+    """{'contended': bool, 'jitter': float, 'spin_s': float} for this host.
+
+    ``jitter`` is (max-min)/min over the spin passes; >15% flags the host
+    as contended.  Cached per process — pass ``refresh=True`` to re-probe
+    (e.g. right before the timed section of a long benchmark)."""
+    global _CONTENTION
+    if _CONTENTION is None or refresh:
+        times = sorted(_spin_once() for _ in range(3))
+        jitter = (times[-1] - times[0]) / max(times[0], 1e-9)
+        _CONTENTION = {
+            "contended": jitter > 0.15,
+            "jitter": round(jitter, 4),
+            "spin_s": round(times[0], 4),
+        }
+    return _CONTENTION
 
 
 def save_result(name: str, payload: Dict[str, Any]) -> Path:
     RESULTS.mkdir(parents=True, exist_ok=True)
     path = RESULTS / f"{name}.json"
-    payload = dict(payload, benchmark=name, timestamp=time.time())
+    payload = dict(payload, benchmark=name, timestamp=time.time(),
+                   host_contention=contention_probe())
     path.write_text(json.dumps(payload, indent=1, default=str))
     return path
 

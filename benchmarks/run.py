@@ -19,7 +19,7 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: rl,search,surrogate,tuned,kernels,"
-                         "roofline,vec_env,networks,backend,measure")
+                         "roofline,vec_env,networks,backend,measure,serve")
     args = ap.parse_args(argv)
 
     want = set(args.only.split(",")) if args.only else None
@@ -97,6 +97,12 @@ def main(argv=None) -> int:
         section("networks", lambda: bench_networks.run(
             vec=8, iters=500 if args.full else 150,
             out_name="bench_networks" + sfx))
+    if should("serve"):
+        from . import bench_serve
+        section("serve", lambda: bench_serve.run(
+            passes=5 if args.full else 3,
+            tune_budget_s=8.0 if args.full else 2.0,
+            out_name="bench_serve" + sfx))
     if should("roofline"):
         from . import bench_roofline
         section("roofline-single", lambda: bench_roofline.run("single"))

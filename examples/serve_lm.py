@@ -1,11 +1,22 @@
 """Serving example: continuous-batching decode over a pool of requests.
 
     PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --tune --registry /tmp/mg.json
 
 Runs the batched serving loop (prefill + jitted single-token serve_step
 with a donated KV cache) for a reduced musicgen-family decoder and reports
 throughput and latency percentiles.
+
+Tuned serving: pass ``--registry PATH`` to serve with a tuned-schedule
+table — the decode/prefill steps trace under the registry context, so every
+matmul-shaped contraction looks its workload signature up and (on TPU)
+routes through the Pallas tiled kernel with the tuned BlockSpec.  Add
+``--tune`` to run the tuning pre-pass first (harvests this exact model's
+contractions from its compiled HLO, spends the budget by executed-FLOP
+share, persists to PATH); subsequent runs reuse the table.  The serve
+summary then carries per-contraction registry hit/miss/routed counters.
 """
+import argparse
 import sys
 
 sys.path.insert(0, "src")
@@ -14,11 +25,25 @@ from repro.launch import serve as serve_mod
 
 
 def main():
-    raise SystemExit(serve_mod.main([
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--registry", default=None,
+                    help="tuned-schedule registry JSON to serve with")
+    ap.add_argument("--tune", action="store_true",
+                    help="tune this model's contractions first "
+                         "(requires --registry)")
+    ap.add_argument("--tune-budget-s", type=float, default=4.0)
+    args = ap.parse_args()
+
+    argv = [
         "--arch", "musicgen-large",
         "--requests", "12", "--batch", "4",
         "--prompt-len", "24", "--gen-len", "16", "--max-len", "64",
-    ]))
+    ]
+    if args.registry:
+        argv += ["--registry", args.registry]
+    if args.tune:
+        argv += ["--tune", "--tune-budget-s", str(args.tune_budget_s)]
+    raise SystemExit(serve_mod.main(argv))
 
 
 if __name__ == "__main__":

@@ -84,7 +84,7 @@ def _shape_elems(dims: str) -> int:
 
 class Computation:
     __slots__ = ("name", "flops", "mem_bytes", "coll_bytes", "coll_counts",
-                 "interior_calls", "while_calls", "max_const")
+                 "interior_calls", "while_calls", "max_const", "dots")
 
     def __init__(self, name: str):
         self.name = name
@@ -96,6 +96,8 @@ class Computation:
         # (body, condition, trips or None) per while op here
         self.while_calls: List[Tuple[str, str, Optional[int]]] = []
         self.max_const = 0  # trip-count fallback when used as a condition
+        # (batch, m, k, n, dtype) per dot op here — the harvest records
+        self.dots: List[Tuple[int, int, int, int, str]] = []
 
 
 def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
@@ -151,6 +153,9 @@ def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
             cur.coll_counts[kind] = cur.coll_counts.get(kind, 0) + 1
         if _DOT_RE.search(line):
             cur.flops += _dot_flops(line, symbols)
+            rec = _dot_record(line, symbols)
+            if rec is not None:
+                cur.dots.append(rec)
         mop = _OPNAME_RE.search(line)
         if mop and mop.group(1) in _MEM_OPS:
             op = mop.group(1)
@@ -213,6 +218,128 @@ def _dot_flops(line: str, symbols: Dict[str, Tuple[str, str]]) -> int:
         if idx < len(lhs_dims):
             contracted *= lhs_dims[idx]
     return 2 * out_elems * contracted
+
+
+_DIMS_ATTR = {
+    "lhs_c": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+    "rhs_c": re.compile(r"rhs_contracting_dims=\{([0-9,]*)\}"),
+    "lhs_b": re.compile(r"lhs_batch_dims=\{([0-9,]*)\}"),
+    "rhs_b": re.compile(r"rhs_batch_dims=\{([0-9,]*)\}"),
+}
+
+# dtype tokens as the registry / jnp spell them
+_DTYPE_NAMES = {
+    "f64": "float64", "f32": "float32", "f16": "float16", "bf16": "bfloat16",
+    "s32": "int32", "s8": "int8", "u8": "uint8",
+    "f8e4m3fn": "float8_e4m3fn", "f8e5m2": "float8_e5m2",
+}
+
+
+def _dot_record(
+    line: str, symbols: Dict[str, Tuple[str, str]]
+) -> Optional[Tuple[int, int, int, int, str]]:
+    """Matmul-shaped signature of one dot op: ``(batch, m, k, n, dtype)``.
+
+    m/k/n are products of the lhs-free / contracted / rhs-free dims, batch
+    the product of the batch dims — i.e. the shape the contraction would
+    have as a (batched) GEMM, which is the workload key the schedule
+    registry tunes and serves.  Returns None when operand shapes can't be
+    resolved.
+    """
+    paren = line.find("dot(")
+    close = line.find(")", paren)
+    inline = _SHAPE_RE.findall(line[paren:close + 1] if paren >= 0 else "")
+    shapes: List[Tuple[str, str]] = list(inline[:2])
+    if len(shapes) < 2:
+        mo = _DOT_OPERANDS.search(line)
+        if mo is None:
+            return None
+        shapes = [symbols[nm] for nm in (mo.group(1), mo.group(2))
+                  if nm in symbols]
+        if len(shapes) < 2:
+            return None
+    (lhs_dt, lhs_dims_s), (_rhs_dt, rhs_dims_s) = shapes
+    lhs = [int(x) for x in lhs_dims_s.split(",") if x]
+    rhs = [int(x) for x in rhs_dims_s.split(",") if x]
+    attrs = {}
+    for name, pat in _DIMS_ATTR.items():
+        m = pat.search(line)
+        attrs[name] = ([int(x) for x in m.group(1).split(",") if x]
+                       if m else [])
+
+    def prod(dims, idxs):
+        out = 1
+        for i in idxs:
+            if i < len(dims):
+                out *= dims[i]
+        return out
+
+    k = prod(lhs, attrs["lhs_c"])
+    batch = prod(lhs, attrs["lhs_b"])
+    m_free = [i for i in range(len(lhs))
+              if i not in attrs["lhs_c"] and i not in attrs["lhs_b"]]
+    n_free = [i for i in range(len(rhs))
+              if i not in attrs["rhs_c"] and i not in attrs["rhs_b"]]
+    return (batch, prod(lhs, m_free), k, prod(rhs, n_free),
+            _DTYPE_NAMES.get(lhs_dt, lhs_dt))
+
+
+def harvest_dots(text: str) -> List[Dict[str, object]]:
+    """Executed dot contractions with real shapes and occurrence counts.
+
+    Walks the call graph from ENTRY multiplying by while trip counts (the
+    same traversal as :func:`loop_corrected_totals`), so a dot inside a
+    scan-over-layers body counts once per layer — the *executed* workload
+    set, not the lexical one.  Returns records sorted by executed-FLOP
+    share (descending)::
+
+        {"batch", "m", "k", "n", "dtype", "count", "flops", "flop_share"}
+
+    deduplicated by ``(batch, m, k, n, dtype)`` — the structural signature
+    the schedule registry keys on.
+    """
+    comps, entry = parse_hlo(text)
+    agg: Dict[Tuple[int, int, int, int, str], Dict[str, float]] = {}
+    if entry is None:
+        return []
+    stack: Set[str] = set()
+
+    def visit(comp: Computation, mult: float) -> None:
+        if comp.name in stack:
+            return
+        stack.add(comp.name)
+        for rec in comp.dots:
+            batch, m, k, n, _dt = rec
+            slot = agg.setdefault(rec, {"count": 0.0, "flops": 0.0})
+            slot["count"] += mult
+            slot["flops"] += mult * 2.0 * batch * m * k * n
+        loop_comps = set()
+        for body_name, cond_name, trips in comp.while_calls:
+            body = comps.get(body_name)
+            cond = comps.get(cond_name)
+            if trips is None:
+                trips = max(1, cond.max_const if cond else 1)
+            loop_comps.update((body_name, cond_name))
+            if cond:
+                visit(cond, mult * trips)
+            if body:
+                visit(body, mult * trips)
+        for callee in comp.interior_calls - loop_comps:
+            sub = comps.get(callee)
+            if sub:
+                visit(sub, mult)
+        stack.discard(comp.name)
+
+    visit(comps[entry], 1.0)
+    total = sum(s["flops"] for s in agg.values()) or 1.0
+    out = [
+        {"batch": b, "m": m, "k": k, "n": n, "dtype": dt,
+         "count": s["count"], "flops": s["flops"],
+         "flop_share": s["flops"] / total}
+        for (b, m, k, n, dt), s in agg.items()
+    ]
+    out.sort(key=lambda r: -r["flops"])
+    return out
 
 
 def loop_corrected_totals(text: str) -> Dict[str, object]:

@@ -1,19 +1,69 @@
-"""Tuned-schedule registry.
+"""Tuned-schedule registry — the serving side of the tuner.
 
-The framework's Pallas kernels consult this registry for their BlockSpec
-tiling: schedules found by the RL policy (or searches) are stored keyed by
-``(kernel, m, k, n, dtype)`` and lowered to block shapes + grid order via
-:func:`schedule_to_blockspec`.  Persistence is plain JSON so launch scripts
-can ship tuned tables to every host.
+The AutoTVM "TopHub log" pattern: tuning happens once, off the request
+path, and its output is persisted in a table the compile step consults.
+Records are keyed by ``(structure_key, backend, hardware)``:
+
+* ``structure_key`` — the workload's structural signature, e.g.
+  ``mm:512x512x512:float32`` (one tuned entry covers every recurrence of
+  that contraction shape, the TPU learned-cost-model keying);
+* ``backend`` — which reward executor produced the schedule ("tpu"
+  analytical / "jax" / "numpy" / "any");
+* ``hardware`` — the host it was measured on (device kind on a real
+  accelerator, CPU model string on this container), so fleets can union
+  tables without cross-host timings clobbering each other.
+
+Each record carries the tuned ``gflops``, the action trace, the lowered
+``block``/``grid_order`` BlockSpec (via :func:`schedule_to_blockspec`),
+the measurement spread (from ``core.measure``'s variance guardrails) and
+tuner-checkpoint provenance.  Persistence is versioned JSON with atomic
+save; v1 files (ad-hoc ``kernel:dims:dtype`` keys) migrate on load.
+``merge`` unions tables best-gflops-wins so a tuning fleet's shards can
+be folded into one serving table.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import tempfile
-from typing import Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from .loop_ir import LoopNest
+
+SCHEMA_VERSION = 2
+
+#: wildcard for backend/hardware key fields (matches anything on lookup)
+ANY = "any"
+
+_HARDWARE: Optional[str] = None
+
+
+def current_hardware() -> str:
+    """Stable host descriptor for registry keys (memoized per process).
+
+    On a real accelerator this is the device kind (``TPU v5e`` etc.); on
+    CPU hosts it falls back to the platform triple — coarse, but enough to
+    keep one fleet's tables from silently overriding another's.
+    """
+    global _HARDWARE
+    if _HARDWARE is None:
+        kind = None
+        try:  # pragma: no cover - device kind depends on the host
+            import jax
+
+            dev = jax.devices()[0]
+            if dev.platform != "cpu":
+                kind = dev.device_kind
+        except Exception:  # noqa: BLE001 — jax absent/uninitializable
+            kind = None
+        if kind is None:
+            import platform
+
+            kind = f"cpu-{platform.machine() or 'unknown'}"
+        _HARDWARE = str(kind).replace("|", "/")
+    return _HARDWARE
 
 
 def schedule_to_blockspec(nest: LoopNest, vmem_boundary: Optional[int] = None):
@@ -42,17 +92,86 @@ def schedule_to_blockspec(nest: LoopNest, vmem_boundary: Optional[int] = None):
     return block, grid_order
 
 
+def _measurement_dict(measurement: Any) -> Optional[Dict[str, Any]]:
+    """Normalize a ``core.measure.Measurement`` (or plain dict) for JSON."""
+    if measurement is None:
+        return None
+    if dataclasses.is_dataclass(measurement):
+        measurement = dataclasses.asdict(measurement)
+    keep = ("gflops", "best_s", "spread", "repeats", "escalations",
+            "noisy", "worker")
+    return {k: measurement[k] for k in keep if k in measurement}
+
+
 class ScheduleRegistry:
+    """Persistent best-schedule table keyed by (structure_key, backend,
+    hardware)."""
+
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self._table: Dict[str, dict] = {}
         if path and os.path.exists(path):
             with open(path) as f:
-                self._table = json.load(f)
+                self._load(json.load(f))
+
+    # -- keys ---------------------------------------------------------------
 
     @staticmethod
     def key(kernel: str, dims: Sequence[int], dtype: str = "float32") -> str:
+        """Structural workload signature (the v1 key, kept as the first
+        component of the v2 record key)."""
         return f"{kernel}:{'x'.join(map(str, dims))}:{dtype}"
+
+    @staticmethod
+    def record_key(structure_key: str, backend: str, hardware: str) -> str:
+        return f"{structure_key}|{backend}|{hardware}"
+
+    @staticmethod
+    def split_key(record_key: str) -> Tuple[str, str, str]:
+        sk, backend, hardware = record_key.rsplit("|", 2)
+        return sk, backend, hardware
+
+    # -- schema / persistence -----------------------------------------------
+
+    def _load(self, doc: Any) -> None:
+        if isinstance(doc, dict) and doc.get("version") == SCHEMA_VERSION:
+            self._table = dict(doc.get("entries", {}))
+            return
+        # v1 migration shim: a flat {kernel:dims:dtype -> entry} table from
+        # before backend/hardware keying.  Entries become wildcard records
+        # so lookups from any executor still find them.
+        migrated: Dict[str, dict] = {}
+        for k, entry in (doc or {}).items():
+            if not isinstance(entry, dict) or "gflops" not in entry:
+                continue
+            entry = dict(entry)
+            entry.setdefault("backend", ANY)
+            entry.setdefault("hardware", ANY)
+            entry.setdefault("structure_key", k)
+            migrated[self.record_key(k, ANY, ANY)] = entry
+        self._table = migrated
+
+    def save(self, path: Optional[str] = None) -> None:
+        path = path or self.path
+        if not path:
+            raise ValueError("no registry path")
+        # abspath first: a bare filename has no dirname, and mkstemp(dir=".")
+        # in a deleted/unwritable CWD raises FileNotFoundError
+        path = os.path.abspath(path)
+        parent = os.path.dirname(path)
+        os.makedirs(parent, exist_ok=True)
+        doc = {"version": SCHEMA_VERSION, "entries": self._table}
+        fd, tmp = tempfile.mkstemp(dir=parent)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)  # atomic
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    # -- writes ---------------------------------------------------------------
 
     def put(
         self,
@@ -62,23 +181,101 @@ class ScheduleRegistry:
         actions: List[str],
         nest: Optional[LoopNest] = None,
         dtype: str = "float32",
-    ) -> None:
-        entry = {"gflops": gflops, "actions": actions}
+        *,
+        backend: str = ANY,
+        hardware: Optional[str] = None,
+        measurement: Any = None,
+        provenance: Optional[Dict[str, Any]] = None,
+    ) -> bool:
+        """Record a tuned schedule; returns True if it entered the table
+        (best-gflops-wins per record key)."""
+        hardware = hardware if hardware is not None else current_hardware()
+        sk = self.key(kernel, dims, dtype)
+        entry: Dict[str, Any] = {
+            "gflops": float(gflops),
+            "actions": list(actions),
+            "structure_key": sk,
+            "backend": backend,
+            "hardware": hardware,
+        }
         if nest is not None:
-            block, grid = schedule_to_blockspec(nest)
-            entry["block"] = block
-            entry["grid_order"] = grid
-            entry["levels"] = [
-                (l.iterator, l.count, l.step) for l in nest.loops
-            ]
-        k = self.key(kernel, dims, dtype)
-        if k not in self._table or self._table[k]["gflops"] < gflops:
+            try:
+                block, grid = schedule_to_blockspec(nest)
+                entry["block"] = block
+                entry["grid_order"] = grid
+                entry["levels"] = [
+                    (l.iterator, l.count, l.step) for l in nest.loops
+                ]
+            except Exception as e:  # noqa: BLE001 — degrade, don't drop
+                warnings.warn(
+                    f"registry: BlockSpec lowering failed for {sk} "
+                    f"({type(e).__name__}: {e}); recording actions-only "
+                    "entry (consumers will use default blocks)",
+                    stacklevel=2)
+        m = _measurement_dict(measurement)
+        if m is not None:
+            entry["measurement"] = m
+        if provenance is not None:
+            entry["provenance"] = dict(provenance)
+        k = self.record_key(sk, backend, hardware)
+        if k not in self._table or self._table[k]["gflops"] < entry["gflops"]:
             self._table[k] = entry
+            return True
+        return False
+
+    def merge(self, other: "ScheduleRegistry") -> int:
+        """Union another table into this one, best-gflops-wins per record
+        key; returns the number of records adopted.  This is how a tuning
+        fleet's per-shard tables fold into one serving table."""
+        adopted = 0
+        for k, entry in other._table.items():
+            if k not in self._table or self._table[k]["gflops"] < entry["gflops"]:
+                self._table[k] = dict(entry)
+                adopted += 1
+        return adopted
+
+    # -- lookups --------------------------------------------------------------
 
     def get(
-        self, kernel: str, dims: Sequence[int], dtype: str = "float32"
+        self,
+        kernel: str,
+        dims: Sequence[int],
+        dtype: str = "float32",
+        *,
+        backend: Optional[str] = None,
+        hardware: Optional[str] = None,
+        exact: bool = False,
     ) -> Optional[dict]:
-        return self._table.get(self.key(kernel, dims, dtype))
+        """Best record for this workload.
+
+        Candidates match on structure key; among them the most specific
+        match wins — (backend, hardware) both matching beats backend-only,
+        beats any — and gflops breaks ties.  ``exact=True`` requires the
+        (backend, hardware) pair (wildcard records still match).  With no
+        backend/hardware given, the best record for the workload is
+        returned regardless of where it was tuned (structural-signature
+        transfer: the block shape is still the best prior available).
+        """
+        sk = self.key(kernel, dims, dtype)
+        best: Optional[dict] = None
+        best_rank: Tuple[int, float] = (-1, float("-inf"))
+        for k, entry in self._table.items():
+            esk, ebackend, ehardware = self.split_key(k)
+            if esk != sk:
+                continue
+            b_ok = backend is None or ebackend in (backend, ANY)
+            h_ok = hardware is None or ehardware in (hardware, ANY)
+            if exact and not (b_ok and h_ok):
+                continue
+            specificity = ((2 if backend is not None and ebackend == backend
+                            else 0)
+                           + (1 if hardware is not None
+                              and ehardware == hardware else 0)
+                           + (1 if b_ok else 0) + (1 if h_ok else 0))
+            rank = (specificity, entry["gflops"])
+            if rank > best_rank:
+                best_rank, best = rank, entry
+        return best
 
     def block_for(
         self,
@@ -86,20 +283,18 @@ class ScheduleRegistry:
         dims: Sequence[int],
         default: Dict[str, int],
         dtype: str = "float32",
+        *,
+        backend: Optional[str] = None,
+        hardware: Optional[str] = None,
     ) -> Dict[str, int]:
-        entry = self.get(kernel, dims, dtype)
+        entry = self.get(kernel, dims, dtype, backend=backend,
+                         hardware=hardware)
         if entry and "block" in entry:
             return dict(entry["block"])
         return default
 
-    def save(self, path: Optional[str] = None) -> None:
-        path = path or self.path
-        if not path:
-            raise ValueError("no registry path")
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
-        with os.fdopen(fd, "w") as f:
-            json.dump(self._table, f, indent=1, sort_keys=True)
-        os.replace(tmp, path)  # atomic
+    def entries(self) -> Iterator[Tuple[str, dict]]:
+        return iter(self._table.items())
 
     def __len__(self) -> int:
         return len(self._table)

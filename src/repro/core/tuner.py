@@ -116,6 +116,9 @@ class LoopTuner:
         # built lazily against the first env's featurizer, then warmed by
         # each tuned benchmark's measurements (see _scorer_for)
         self._scorer: Optional[SurrogateScorer] = None
+        # registry-record provenance: where did this schedule come from
+        # (from_checkpoint overwrites with the checkpoint identity)
+        self.provenance: Dict[str, Any] = {"policy": self.policy}
 
     @classmethod
     def from_checkpoint(cls, path: str, backend: Optional[str] = None,
@@ -138,6 +141,9 @@ class LoopTuner:
             # mean exactly what the policy's output unit i was trained on
             tuner.actions = actions_from_names(meta["actions"])
         tuner._calibrate(meta)
+        tuner.provenance = {"policy": "policy", "checkpoint": path,
+                            "algo": meta.get("algo"),
+                            "trained_backend": meta.get("backend")}
         return tuner
 
     def _calibrate(self, meta: Dict[str, Any]) -> None:
@@ -205,28 +211,44 @@ class LoopTuner:
             self._scorer = SurrogateScorer.for_env(env)
         return self._scorer
 
-    def tune(self, bench: Contraction, kernel: str = "mm") -> Dict[str, Any]:
+    def _record(self, kernel: str, bench: Contraction, gflops: float,
+                actions: List[str], nest, dtype: str) -> Dict[str, Any]:
+        """Registry write with full v2 record context: executor + hardware
+        keying, the measurement spread the variance guardrails recorded for
+        the winning schedule, and tuner provenance."""
+        dims = tuple(bench.iter_sizes.values())
+        measurement = None
+        mfor = getattr(self.backend, "measurement_for", None)
+        if mfor is not None and nest is not None:
+            measurement = mfor(nest)
+        self.registry.put(kernel, dims, gflops, list(actions), nest,
+                          dtype=dtype, backend=self.backend_kind,
+                          measurement=measurement,
+                          provenance=self.provenance)
+        return dict(self.registry.get(kernel, dims, dtype))
+
+    def tune(self, bench: Contraction, kernel: str = "mm", *,
+             dtype: str = "float32", budget_s: Optional[float] = None,
+             max_evals: Optional[int] = None) -> Dict[str, Any]:
         """Tune one contraction; returns the registry entry."""
         t0 = time.perf_counter()
+        budget_s = budget_s if budget_s is not None else self.search_budget_s
         env = self._env_for(bench)
         if self.policy == "policy":
             best_g, actions, nest = greedy_rollout(env, self.act, 0)
         elif self.policy == "search":
             scorer = self._scorer_for(env)
-            res = greedy_search(env, 0, lookahead=1,
-                                budget_s=self.search_budget_s,
-                                surrogate=scorer)
+            res = greedy_search(env, 0, lookahead=1, budget_s=budget_s,
+                                max_evals=max_evals, surrogate=scorer)
             res2 = beam_search(env, 0, width=4, order="dfs",
-                               budget_s=self.search_budget_s,
+                               budget_s=budget_s, max_evals=max_evals,
                                surrogate=scorer)
             res = res2 if res2.best_gflops > res.best_gflops else res
             best_g, actions, nest = res.best_gflops, res.actions, res.best_nest
         else:  # default / untuned
             env.reset(0)
             best_g, actions, nest = env.current_gflops, [], env.nest.clone()
-        dims = tuple(bench.iter_sizes.values())
-        self.registry.put(kernel, dims, best_g, list(actions), nest)
-        entry = dict(self.registry.get(kernel, dims))
+        entry = self._record(kernel, bench, best_g, list(actions), nest, dtype)
         entry["tune_time_s"] = time.perf_counter() - t0
         entry["base_gflops"] = env.initial_gflops
         return entry
@@ -235,7 +257,11 @@ class LoopTuner:
         return self.tune(matmul_benchmark(m, k, n), kernel="mm")
 
     def tune_many(self, benches: Sequence[Contraction], kernel: str = "mm",
-                  vec_size: int = 16) -> List[Dict[str, Any]]:
+                  vec_size: int = 16, *,
+                  weights: Optional[Sequence[float]] = None,
+                  dtypes: Optional[Sequence[str]] = None,
+                  budget_s: Optional[float] = None,
+                  eval_budget: Optional[int] = None) -> List[Dict[str, Any]]:
         """Tune many contractions at once.
 
         With a trained policy, the contractions become lanes of a
@@ -243,9 +269,30 @@ class LoopTuner:
         rolled out greedily over all of them simultaneously — one batched
         act() and one batched backend call per step.  Search/default
         policies fall back to per-contraction tuning.
+
+        ``weights`` (normalized internally) split a *total* search budget —
+        ``budget_s`` seconds and optionally ``eval_budget`` backend
+        evaluations — across the contractions, so callers can spend the
+        budget where the executed FLOPs are (see ``launch.tune``).  Without
+        weights each contraction gets the tuner's per-bench default.
         """
+        dtypes = list(dtypes) if dtypes is not None else ["float32"] * len(benches)
         if self.policy != "policy":
-            return [self.tune(b, kernel) for b in benches]
+            if weights is None:
+                return [self.tune(b, kernel, dtype=dt)
+                        for b, dt in zip(benches, dtypes)]
+            total = float(sum(weights)) or 1.0
+            share = [w / total for w in weights]
+            total_s = (budget_s if budget_s is not None
+                       else self.search_budget_s * len(benches))
+            entries = []
+            for b, dt, w in zip(benches, dtypes, share):
+                evals = (max(2, int(round(eval_budget * w)))
+                         if eval_budget is not None else None)
+                entries.append(self.tune(b, kernel, dtype=dt,
+                                         budget_s=total_s * w,
+                                         max_evals=evals))
+            return entries
         entries: List[Dict[str, Any]] = []
         for lo in range(0, len(benches), vec_size):
             chunk = list(benches[lo:lo + vec_size])
@@ -260,10 +307,9 @@ class LoopTuner:
                 venv, self.act, benchmark_indices=list(range(len(chunk))))
             per_bench_s = (time.perf_counter() - t0) / len(chunk)
             for i, bench in enumerate(chunk):
-                dims = tuple(bench.iter_sizes.values())
-                self.registry.put(kernel, dims, float(best_g[i]),
-                                  list(names[i]), nests[i])
-                entry = dict(self.registry.get(kernel, dims))
+                entry = self._record(kernel, bench, float(best_g[i]),
+                                     list(names[i]), nests[i],
+                                     dtypes[lo + i])
                 entry["tune_time_s"] = per_bench_s
                 entry["base_gflops"] = float(venv.initial_gflops[i])
                 entries.append(entry)

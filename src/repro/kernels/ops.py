@@ -7,16 +7,28 @@ by ``examples/autotune_matmul.py`` or ``LoopTuner``); every wrapper falls
 back to MXU-aligned defaults when no entry exists.  ``interpret`` defaults
 to True (CPU container); on a real TPU fleet the launch scripts pass
 ``interpret=False``.
+
+**Tuned serving** (`launch/serve --registry`): :func:`tuned_einsum` is the
+model zoo's consume path.  Inside a :func:`serving` context every
+matmul-shaped contraction looks its workload signature up in the active
+:class:`ScheduleRegistry` at model-compile (trace) time; hits route through
+the Pallas tiled kernel with the tuned BlockSpec on hardware where Mosaic
+compiles (``pallas="auto"`` → real TPU), and fall back to the plain
+``jnp.einsum`` XLA lowering on cold miss, non-matmul shapes, or CPU hosts
+(where interpret-mode Pallas would be a de-optimization).  Per-contraction
+hit/miss/routed counters are kept per trace — read them with
+:func:`serving_stats`.
 """
 from __future__ import annotations
 
+import contextlib
 import os
-from typing import Dict, Optional, Union
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.registry import ScheduleRegistry
+from repro.core.registry import ScheduleRegistry, current_hardware
 
 from .flash_attention import flash_attention as _flash_attention
 from .mamba_scan import mamba_scan as _mamba_scan
@@ -37,6 +49,175 @@ def set_registry(reg: Union[str, ScheduleRegistry, None]) -> None:
 
 def get_registry() -> Optional[ScheduleRegistry]:
     return _REGISTRY
+
+
+# --------------------------------------------------------------------------
+# Tuned serving: trace-time registry context + per-contraction counters
+# --------------------------------------------------------------------------
+
+_SERVING: Optional[ScheduleRegistry] = None
+_SERVING_STATS: Dict[str, Dict[str, int]] = {}
+
+
+@contextlib.contextmanager
+def serving(registry: Union[str, ScheduleRegistry, None]):
+    """Activate a tuned-schedule registry for model tracing.
+
+    The model zoo's matmul sites go through :func:`tuned_einsum`, which
+    consults the *active* serving registry.  Because the lookup happens in
+    the jitted function body, the context only needs to cover tracing —
+    launchers wrap the step-function body so retraces see it too.  ``None``
+    deactivates (the default path is untouched ``@``/``einsum``).
+    """
+    global _SERVING
+    if isinstance(registry, str):
+        registry = ScheduleRegistry(registry)
+    prev = _SERVING
+    _SERVING = registry
+    try:
+        yield registry
+    finally:
+        _SERVING = prev
+
+
+def serving_registry() -> Optional[ScheduleRegistry]:
+    return _SERVING
+
+
+def serving_stats(reset: bool = False) -> Dict[str, Any]:
+    """Per-contraction registry hit/miss/routed counters (trace-time).
+
+    ``hits``  — workload found in the registry;
+    ``misses`` — matmul-shaped contraction with no entry (cold miss);
+    ``routed`` — hits actually lowered through the Pallas tiled kernel
+    (subset of hits: CPU hosts count the hit but keep the XLA lowering).
+    """
+    per_key = {k: dict(v) for k, v in _SERVING_STATS.items()}
+    out = {
+        "hits": sum(v.get("hits", 0) for v in per_key.values()),
+        "misses": sum(v.get("misses", 0) for v in per_key.values()),
+        "routed": sum(v.get("routed", 0) for v in per_key.values()),
+        "per_key": per_key,
+    }
+    if reset:
+        reset_serving_stats()
+    return out
+
+
+def reset_serving_stats() -> None:
+    _SERVING_STATS.clear()
+
+
+def _count(key: str, field: str) -> None:
+    slot = _SERVING_STATS.setdefault(key, {"hits": 0, "misses": 0,
+                                           "routed": 0})
+    slot[field] += 1
+
+
+def _parse_matmul_spec(spec: str, a_shape, b_shape):
+    """Match an einsum spec to a (batched-)matmul; None if not one.
+
+    Accepts two-operand specs where the rhs is 2-D, exactly one index is
+    contracted, the contracted index is the trailing lhs dim, and the
+    output is ``lhs_free + rhs_free`` — i.e. ``...k,kn->...n`` and the
+    transposed-weight form ``...k,nk->...n`` (logits against an embedding
+    table).  Returns ``(m, k, n, transpose_rhs)`` with leading lhs dims
+    folded into m, matching how ``launch/tune`` harvests workload keys.
+    """
+    if "->" not in spec or "..." in spec:
+        return None
+    ins, out = spec.split("->")
+    if ins.count(",") != 1:
+        return None
+    lhs, rhs = ins.split(",")
+    if len(rhs) != 2 or len(lhs) != len(a_shape) or len(rhs) != len(b_shape):
+        return None
+    if len(set(lhs)) != len(lhs) or len(set(rhs)) != len(rhs):
+        return None
+    contracted = (set(lhs) & set(rhs)) - set(out)
+    if len(contracted) != 1:
+        return None
+    ck = contracted.pop()
+    if lhs[-1] != ck:
+        return None
+    free_l = lhs[:-1]
+    free_r = rhs.replace(ck, "")
+    if out != free_l + free_r:
+        return None
+    m = 1
+    for d in a_shape[:-1]:
+        m *= int(d)
+    k = int(a_shape[-1])
+    n = int(b_shape[1] if rhs[0] == ck else b_shape[0])
+    return m, k, n, rhs[0] != ck
+
+
+def _route_pallas(pallas: str) -> Tuple[bool, bool]:
+    """(route through Pallas?, interpret mode?) for a registry hit.
+
+    ``"auto"`` routes only where Mosaic compiles (real TPU) — on CPU the
+    interpret-mode kernel is a de-optimization, so hits keep the XLA
+    lowering (still counted, proving the lookup path).  ``"interpret"``
+    forces the interpreted kernel (tests), ``"on"`` the compiled one,
+    ``"off"`` never routes.
+    """
+    if pallas == "off":
+        return False, True
+    if pallas == "interpret":
+        return True, True
+    if pallas == "on":
+        return True, False
+    return jax.default_backend() == "tpu", False
+
+
+def tuned_einsum(spec: str, a: jax.Array, b: jax.Array, *,
+                 registry: Optional[ScheduleRegistry] = None,
+                 pallas: str = "auto",
+                 preferred_element_type=None) -> jax.Array:
+    """Registry-backed einsum: the model zoo's tuned-serving entry point.
+
+    Looks the contraction's workload signature up in ``registry`` (default:
+    the active :func:`serving` registry) at trace time.  On a hit with a
+    tuned block, matmul-shaped contractions route through the Pallas tiled
+    kernel with the tuned BlockSpec; cold misses, non-matmul shapes, and
+    hosts where Mosaic can't compile fall back to ``jnp.einsum`` — always
+    numerically interchangeable with the fallback.
+    """
+    reg = registry if registry is not None else _SERVING
+
+    def _fallback():
+        return jnp.einsum(spec, a, b,
+                          preferred_element_type=preferred_element_type)
+
+    if reg is None:
+        return _fallback()
+    parsed = _parse_matmul_spec(spec, a.shape, b.shape)
+    if parsed is None:
+        return _fallback()
+    m, k, n, transpose_rhs = parsed
+    dtype = str(a.dtype)
+    wl_key = ScheduleRegistry.key("mm", (m, k, n), dtype)
+    entry = reg.get("mm", (m, k, n), dtype=dtype,
+                    hardware=current_hardware())
+    if not entry or "block" not in entry:
+        _count(wl_key, "misses")
+        return _fallback()
+    _count(wl_key, "hits")
+    route, interpret = _route_pallas(pallas)
+    if not route:
+        return _fallback()
+    _count(wl_key, "routed")
+    block = dict(DEFAULT_MM_BLOCK)
+    block.update({kk: int(vv) for kk, vv in entry["block"].items()})
+    go = [it for it in entry.get("grid_order", []) if it in ("m", "n")]
+    order = "nm" if go and go[0] == "n" else "mn"
+    a2 = a.reshape(m, k)
+    b2 = b.T if transpose_rhs else b
+    out_dtype = preferred_element_type if preferred_element_type is not None \
+        else a.dtype
+    out = _matmul(a2, b2, bm=block["m"], bk=block["k"], bn=block["n"],
+                  grid_order=order, interpret=interpret, out_dtype=out_dtype)
+    return out.reshape(*a.shape[:-1], n)
 
 
 def _mm_schedule(m: int, k: int, n: int):

@@ -11,8 +11,15 @@ from typing import Optional, Tuple
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    # jax >= 0.5 takes axis_types (Auto = GSPMD-propagated, our semantics);
+    # jax 0.4.x has neither the kwarg nor AxisType, and Auto is its only
+    # behavior — so omitting the kwarg there is the same mesh.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,9 +27,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     (pod=2, data=16, model=16)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh (tests / elastic remesh)."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make(shape, axes)

@@ -37,7 +37,7 @@ from repro.runtime.compress import compress_grads, ef_init
 from repro.runtime.ft import FailureInjector, FaultTolerantRunner, StragglerWatchdog
 
 
-def build(args):
+def build(args, registry=None):
     cfg = get_config(args.arch)
     if not args.full:
         cfg = cfg.smoke()
@@ -45,7 +45,7 @@ def build(args):
                                total=args.steps)
     step_fn = S.make_train_step(
         cfg, lr_fn, n_microbatches=args.microbatches,
-        weight_decay=args.weight_decay)
+        weight_decay=args.weight_decay, registry=registry)
     return cfg, step_fn
 
 
@@ -69,9 +69,16 @@ def main(argv=None) -> int:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--mesh", default="auto",
                     help="'auto' (all devices on the data axis) | 'single' | 'multi'")
+    ap.add_argument("--registry", default=None,
+                    help="tuned-schedule registry JSON (dense sites consult "
+                         "it at trace time; default: plain XLA path)")
     args = ap.parse_args(argv)
 
-    cfg, raw_step = build(args)
+    registry = None
+    if args.registry:
+        from repro.core.registry import ScheduleRegistry
+        registry = ScheduleRegistry(args.registry)
+    cfg, raw_step = build(args, registry=registry)
     if args.mesh == "auto":
         from repro.launch.mesh import make_mesh
         mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
@@ -90,7 +97,7 @@ def main(argv=None) -> int:
         def step_with_ef(state, batch):
             params, opt, ef = state
             lr_fn = cosine_with_warmup(args.lr, 10, args.steps)
-            loss_fn = S.make_loss_fn(cfg)
+            loss_fn = S.make_loss_fn(cfg, registry=registry)
             (_, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
             grads, ef = compress_grads(grads, ef)

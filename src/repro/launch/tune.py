@@ -1,0 +1,194 @@
+"""Offline tuning pre-pass: harvest a model's contractions, tune, persist.
+
+This is the "tune once, off the request path" half of schedule serving
+(AutoTVM's TopHub pattern): lower the model config's serving steps exactly
+as ``launch/serve`` jits them, parse the executed dot contractions out of
+the optimized HLO (``analysis.hlo_parse.harvest_dots`` — occurrence counts
+ride the scan-over-layers trip counts), dedup by structural signature, and
+spend the tuning budget proportionally to each contraction's executed-FLOP
+share so the roofline-dominant shapes get tuned hardest.  Best schedules
+land in a :class:`~repro.core.registry.ScheduleRegistry` table that
+``launch/serve --registry`` consumes at model-compile time.
+
+    PYTHONPATH=src python -m repro.launch.tune --arch musicgen-large \
+        --registry /tmp/musicgen.json --budget-s 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.configs import ShapeCell, get_config, input_specs
+from repro.core.loop_ir import Contraction, matmul_benchmark
+from repro.core.registry import ScheduleRegistry
+from repro.core.tuner import LoopTuner
+
+
+def harvest_model(
+    cfg,
+    *,
+    batch: int = 4,
+    prompt_len: int = 24,
+    max_len: int = 64,
+    kinds: Sequence[str] = ("decode", "prefill"),
+) -> List[Dict[str, Any]]:
+    """Executed dot contractions of a model's serving steps.
+
+    Lowers + compiles the decode (and prefill) step functions with
+    ShapeDtypeStruct stand-ins — zero allocation, same jit the server
+    builds — and returns :func:`harvest_dots` records aggregated across
+    step kinds, sorted by executed-FLOP share.  ``batch``/``prompt_len``/
+    ``max_len`` must match the serving shapes for the harvested workload
+    keys to be the ones the server looks up.
+    """
+    import jax
+
+    from repro.analysis.hlo_parse import harvest_dots
+    from repro.models import steps as S
+    from repro.models import transformer as T
+
+    params = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    agg: Dict[Tuple[int, int, int, str], Dict[str, float]] = {}
+    for kind in kinds:
+        if kind == "decode":
+            specs = input_specs(cfg, ShapeCell("serve", max_len, batch,
+                                               "decode"))
+            fn = jax.jit(S.make_decode_step(cfg))
+            lowered = fn.lower(params, specs["batch"], specs["caches"],
+                               specs["cache_len"])
+        elif kind == "prefill":
+            specs = input_specs(cfg, ShapeCell("prefill", prompt_len, batch,
+                                               "prefill"))
+            fn = jax.jit(S.make_prefill_step(cfg, max_len=max_len))
+            lowered = fn.lower(params, specs["batch"])
+        else:
+            raise ValueError(f"unknown step kind {kind!r}")
+        for rec in harvest_dots(lowered.compile().as_text()):
+            # fold batch dims into m: a batched GEMM tunes as (b*m, k, n)
+            key = (rec["batch"] * rec["m"], rec["k"], rec["n"], rec["dtype"])
+            slot = agg.setdefault(key, {"count": 0.0, "flops": 0.0})
+            slot["count"] += rec["count"]
+            slot["flops"] += rec["flops"]
+    total = sum(s["flops"] for s in agg.values()) or 1.0
+    out = [
+        {"m": m, "k": k, "n": n, "dtype": dt, "count": s["count"],
+         "flops": s["flops"], "flop_share": s["flops"] / total}
+        for (m, k, n, dt), s in agg.items()
+    ]
+    out.sort(key=lambda r: -r["flops"])
+    return out
+
+
+def tune_model(
+    cfg_or_arch,
+    *,
+    registry: Optional[ScheduleRegistry] = None,
+    registry_path: Optional[str] = None,
+    tuner: Optional[LoopTuner] = None,
+    checkpoint: Optional[str] = None,
+    backend: str = "tpu",
+    policy: str = "search",
+    budget_s: float = 4.0,
+    eval_budget: Optional[int] = None,
+    max_contractions: int = 12,
+    smoke: bool = True,
+    batch: int = 4,
+    prompt_len: int = 24,
+    max_len: int = 64,
+    kinds: Sequence[str] = ("decode", "prefill"),
+) -> Dict[str, Any]:
+    """Tune every contraction a model config lowers to; persist the table.
+
+    ``budget_s`` (and ``eval_budget``, when given) are *totals* for the
+    whole model, split across the deduped contractions by executed-FLOP
+    share — the contraction that dominates the roofline gets the budget.
+    Returns a report dict (harvested/tuned counts, per-entry summaries,
+    coverage of the executed FLOPs).
+    """
+    t0 = time.perf_counter()
+    cfg = get_config(cfg_or_arch) if isinstance(cfg_or_arch, str) else cfg_or_arch
+    if smoke and not cfg.name.endswith("-smoke"):
+        cfg = cfg.smoke()
+    if registry is None:
+        registry = ScheduleRegistry(registry_path)
+    if tuner is None:
+        if checkpoint is not None:
+            tuner = LoopTuner.from_checkpoint(checkpoint, backend=backend,
+                                              registry=registry)
+        else:
+            tuner = LoopTuner(policy=policy, backend=backend,
+                              registry=registry)
+
+    records = harvest_model(cfg, batch=batch, prompt_len=prompt_len,
+                            max_len=max_len, kinds=kinds)
+    kept = records[:max_contractions]
+    share_kept = sum(r["flop_share"] for r in kept)
+    benches: List[Contraction] = []
+    weights: List[float] = []
+    dtypes: List[str] = []
+    for r in kept:
+        benches.append(matmul_benchmark(r["m"], r["k"], r["n"]))
+        weights.append(r["flop_share"] / share_kept if share_kept else 1.0)
+        dtypes.append(r["dtype"])
+
+    entries = tuner.tune_many(
+        benches, kernel="mm", weights=weights, dtypes=dtypes,
+        budget_s=budget_s, eval_budget=eval_budget)
+
+    if registry_path:
+        registry.save(registry_path)
+    elif registry.path:
+        registry.save()
+    return {
+        "arch": cfg.name,
+        "kinds": list(kinds),
+        "shapes": {"batch": batch, "prompt_len": prompt_len,
+                   "max_len": max_len},
+        "n_harvested": len(records),
+        "n_tuned": len(entries),
+        "flop_share_covered": share_kept,
+        "registry_size": len(registry),
+        "registry_path": registry_path or registry.path,
+        "tune_time_s": round(time.perf_counter() - t0, 2),
+        "contractions": [
+            {"m": r["m"], "k": r["k"], "n": r["n"], "dtype": r["dtype"],
+             "count": r["count"], "flop_share": round(r["flop_share"], 4),
+             "gflops": e.get("gflops"),
+             "base_gflops": e.get("base_gflops")}
+            for r, e in zip(kept, entries)
+        ],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--registry", required=True, help="registry JSON path")
+    ap.add_argument("--full", action="store_true",
+                    help="published config (fleet scale); default smoke")
+    ap.add_argument("--checkpoint", default=None,
+                    help="trained policy checkpoint (default: search)")
+    ap.add_argument("--backend", default="tpu")
+    ap.add_argument("--budget-s", type=float, default=4.0)
+    ap.add_argument("--eval-budget", type=int, default=None)
+    ap.add_argument("--max-contractions", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-len", type=int, default=64)
+    args = ap.parse_args(argv)
+
+    report = tune_model(
+        args.arch, registry_path=args.registry, checkpoint=args.checkpoint,
+        backend=args.backend, budget_s=args.budget_s,
+        eval_budget=args.eval_budget, max_contractions=args.max_contractions,
+        smoke=not args.full, batch=args.batch, prompt_len=args.prompt_len,
+        max_len=args.max_len)
+    print("[tune]", json.dumps(report, indent=1), flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

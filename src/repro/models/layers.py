@@ -30,6 +30,37 @@ def dense_init(key, shape, dtype, scale: Optional[float] = None):
 
 
 # ---------------------------------------------------------------------------
+# Tuned-serving hook: matmul sites route through the schedule registry
+# ---------------------------------------------------------------------------
+
+
+def _serving_ops():
+    """``repro.kernels.ops`` iff a tuned-schedule registry is active.
+
+    Deferred import keeps the plain XLA path free of any kernels/ import;
+    the check runs at trace time, so ``kernels.ops.serving(...)`` wrapped
+    around a step-function body is enough to switch every dense site.
+    """
+    from repro.kernels import ops as _kops
+    return _kops if _kops.serving_registry() is not None else None
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``x (..., K) @ w (K, N)`` — the model zoo's matmul hot path.
+
+    With a tuned-schedule registry being served (``kernels.ops.serving``),
+    the contraction routes through :func:`repro.kernels.ops.tuned_einsum`
+    (registry lookup + Pallas tiled kernel on hit); otherwise it is exactly
+    the plain ``@`` it always was.
+    """
+    kops = _serving_ops()
+    if kops is None:
+        return x @ w
+    free = "abce"[: x.ndim - 1]  # skip k/n (bound in the spec)
+    return kops.tuned_einsum(f"{free}k,kn->{free}n", x, w)
+
+
+# ---------------------------------------------------------------------------
 # RMSNorm
 # ---------------------------------------------------------------------------
 
@@ -380,9 +411,9 @@ def attn_qkv(p, cfg, x, kv_src=None, positions=None, rope: bool = True):
     b = x.shape[0]
     hd = cfg.head_dim_
     kv_src = x if kv_src is None else kv_src
-    q = x @ p["wq"]
-    k = kv_src @ p["wk"]
-    v = kv_src @ p["wv"]
+    q = dense(x, p["wq"])
+    k = dense(kv_src, p["wk"])
+    v = dense(kv_src, p["wv"])
     if cfg.attn_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(b, x.shape[1], cfg.n_heads, hd)
@@ -415,8 +446,8 @@ def mlp_params(key, d_model: int, d_ff: int, dtype) -> Dict[str, Any]:
 
 
 def mlp_apply(p, x: jax.Array, act: str = "silu") -> jax.Array:
-    g = _ACTS[act](x @ p["w_gate"])
-    return (g * (x @ p["w_up"])) @ p["w_down"]
+    g = _ACTS[act](dense(x, p["w_gate"]))
+    return dense(g * dense(x, p["w_up"]), p["w_down"])
 
 
 # ---------------------------------------------------------------------------
@@ -438,9 +469,14 @@ def embed_apply(p, tokens: jax.Array, scale: Optional[float] = None) -> jax.Arra
 def logits_apply(embed_p, x: jax.Array, head_p=None,
                  softcap: Optional[float] = None) -> jax.Array:
     table = head_p if head_p is not None else embed_p["table"]
-    logits = jnp.einsum(
-        "bsd,vd->bsv", x, table, preferred_element_type=jnp.float32
-    )
+    kops = _serving_ops()
+    if kops is not None:
+        logits = kops.tuned_einsum("bsd,vd->bsv", x, table,
+                                   preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, table, preferred_element_type=jnp.float32
+        )
     if softcap is not None:
         logits = _softcap(logits, softcap)
     return logits

@@ -1,7 +1,14 @@
 """Step functions: training (loss + AdamW), prefill, decode — the pure
-functions that ``launch/`` jits with in/out shardings."""
+functions that ``launch/`` jits with in/out shardings.
+
+Each builder takes an optional ``registry=`` (a
+:class:`~repro.core.registry.ScheduleRegistry` or path): when given, the
+step body runs under ``kernels.ops.serving(registry)`` so every dense site
+consults the tuned-schedule table at trace time (including retraces).
+Default ``None`` leaves the plain XLA path byte-identical."""
 from __future__ import annotations
 
+import contextlib
 from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -11,6 +18,14 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.optim import AdamWState, adamw_init, adamw_update
 from . import transformer as T
+
+
+def _serving_ctx(registry):
+    """`kernels.ops.serving(registry)` or a no-op when registry is None."""
+    if registry is None:
+        return contextlib.nullcontext()
+    from repro.kernels import ops as K
+    return K.serving(registry)
 
 
 def cross_entropy(logits: jax.Array, labels: jax.Array,
@@ -64,11 +79,13 @@ def chunked_cross_entropy(cfg: ModelConfig, params, hidden: jax.Array,
     return ce + z_loss * z_sum / n, ce
 
 
-def make_loss_fn(cfg: ModelConfig, ce_chunk: int = 512) -> Callable:
+def make_loss_fn(cfg: ModelConfig, ce_chunk: int = 512,
+                 registry=None) -> Callable:
     def loss_fn(params, batch):
-        hidden, _, aux = T.hidden_states(params, cfg, batch)
-        loss, ce = chunked_cross_entropy(cfg, params, hidden,
-                                         batch["labels"], chunk=ce_chunk)
+        with _serving_ctx(registry):
+            hidden, _, aux = T.hidden_states(params, cfg, batch)
+            loss, ce = chunked_cross_entropy(cfg, params, hidden,
+                                             batch["labels"], chunk=ce_chunk)
         loss = loss + aux
         return loss, {"loss": loss, "ce": ce, "aux": aux}
 
@@ -83,6 +100,7 @@ def make_train_step(
     max_grad_norm: float = 1.0,
     n_microbatches: int = 1,
     grad_transform: Optional[Callable] = None,
+    registry=None,
 ) -> Callable:
     """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
 
@@ -91,7 +109,7 @@ def make_train_step(
     of i+1 under XLA's latency-hiding scheduler).
     ``grad_transform``: optional hook (e.g. int8 compression w/ error
     feedback) applied to the summed grads before the optimizer."""
-    loss_fn = make_loss_fn(cfg)
+    loss_fn = make_loss_fn(cfg, registry=registry)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def train_step(params, opt_state: AdamWState, batch):
@@ -124,7 +142,8 @@ def make_train_step(
     return train_step
 
 
-def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      registry=None) -> Callable:
     """prefill(params, batch) -> (last_logits, caches, cache_len)."""
 
     def prefill(params, batch):
@@ -133,18 +152,21 @@ def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
         s = (batch["tokens"].shape[1] if "tokens" in batch
              else batch["embeds"].shape[1])
         caches = T.init_cache(cfg, bsz, max_len)
-        logits, caches, _ = T.forward(params, cfg, batch, caches=caches)
+        with _serving_ctx(registry):
+            logits, caches, _ = T.forward(params, cfg, batch, caches=caches)
         return logits[:, -1], caches, jnp.asarray(s, jnp.int32)
 
     return prefill
 
 
-def make_decode_step(cfg: ModelConfig) -> Callable:
+def make_decode_step(cfg: ModelConfig, registry=None) -> Callable:
     """serve_step(params, batch, caches, cache_len) ->
     (next_token, logits, caches) — one new token against the cache."""
 
     def serve_step(params, batch, caches, cache_len):
-        logits, caches = T.decode_step(params, cfg, batch, caches, cache_len)
+        with _serving_ctx(registry):
+            logits, caches = T.decode_step(params, cfg, batch, caches,
+                                           cache_len)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return nxt, logits, caches
 

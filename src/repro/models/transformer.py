@@ -198,11 +198,11 @@ def _apply_mixer(spec, p, cfg, h, cache, cache_len, positions, encoder, decode):
                               kv_len=cache_len + 1, window=window,
                               softcap=cfg.attn_softcap)
         if spec.mixer == CROSS_ATTN:
-            out = out.reshape(*h.shape[:2], -1) @ p["attn"]["wo"]
+            out = L.dense(out.reshape(*h.shape[:2], -1), p["attn"]["wo"])
             hx = L.rms_norm(h + out.astype(h.dtype), p["norm_cross"])
             if decode:
                 ck, cv = cache["ck"], cache["cv"]
-                qx = (hx @ p["cross"]["wq"]).reshape(
+                qx = L.dense(hx, p["cross"]["wq"]).reshape(
                     *hx.shape[:2], cfg.n_heads, cfg.head_dim_)
             else:
                 qx, ck, cv = L.attn_qkv(p["cross"], cfg, hx, kv_src=encoder,
@@ -210,9 +210,10 @@ def _apply_mixer(spec, p, cfg, h, cache, cache_len, positions, encoder, decode):
                 if new_cache is not None:
                     new_cache["ck"], new_cache["cv"] = ck, cv
             xout = L.attention(qx, ck, cv, causal=False)
-            return (out + (xout.reshape(*h.shape[:2], -1)
-                           @ p["cross"]["wo"]).astype(out.dtype)), new_cache
-        return out.reshape(*h.shape[:2], -1) @ p["attn"]["wo"], new_cache
+            return (out + L.dense(xout.reshape(*h.shape[:2], -1),
+                                  p["cross"]["wo"]).astype(out.dtype)), new_cache
+        return L.dense(out.reshape(*h.shape[:2], -1),
+                       p["attn"]["wo"]), new_cache
 
     if spec.mixer == MAMBA:
         st = (M.MambaState(cache["h"], cache["conv"]) if cache is not None else None)
