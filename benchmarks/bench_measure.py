@@ -124,6 +124,33 @@ def run(
     else:
         result["inproc"] = {"wall_s": min(_time_batch(inproc, nests, reps))}
 
+    # compile-vs-measure wall-clock split on the compiled backend: how much
+    # of a cold evaluate_batch is the compiler (the cost the compile-ahead
+    # pipeline hides — see bench_compile_cache for the full cold/warm story)
+    try:
+        small = build_schedules(max(4, n_schedules // 2),
+                                dims=(32, 32, 32), steps=3)
+        jaxed = make_backend("jax", policy=fixed, prepare="off")
+        t0 = time.perf_counter()
+        jaxed.evaluate_batch(small)
+        jax_wall = time.perf_counter() - t0
+        cs = jaxed.compile_stats()
+        jaxed.close()
+        result["jax_split"] = {
+            "n_schedules": len(small),
+            "wall_s": round(jax_wall, 3),
+            "compile_s": cs["compile_s"],
+            "measure_s": round(max(jax_wall - cs["compile_s"], 0.0), 3),
+            "compile_frac": round(cs["compile_s"] / max(jax_wall, 1e-9), 3),
+            "compile_misses": cs["compile_misses"],
+        }
+        print(f"jax cold split: {jax_wall:.2f}s wall = "
+              f"{cs['compile_s']:.2f}s compile + "
+              f"{result['jax_split']['measure_s']:.2f}s measure "
+              f"({result['jax_split']['compile_frac']:.0%} compiler)")
+    except ImportError:
+        result["jax_split"] = None
+
     # variance guardrails under the default policy (escalation on): how
     # noisy this host actually is, and what the guardrail spends on it
     guarded = make_backend("numpy", repeats=repeats)

@@ -19,7 +19,8 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: rl,search,surrogate,tuned,kernels,"
-                         "roofline,vec_env,networks,backend,measure,serve")
+                         "roofline,vec_env,networks,backend,measure,serve,"
+                         "compile_cache")
     args = ap.parse_args(argv)
 
     want = set(args.only.split(",")) if args.only else None
@@ -87,6 +88,16 @@ def main(argv=None) -> int:
             section("measure", lambda: bench_measure.run(
                 n_schedules=8, dims=(64, 64, 64), reps=2,
                 out_name="bench_measure_quick"))
+    if should("compile_cache"):
+        from . import bench_compile_cache
+        if args.full:
+            section("compile_cache", lambda: bench_compile_cache.run(
+                n_schedules=8, dims=(64, 64, 64), steps=4,
+                out_name="bench_compile_cache"))
+        else:
+            section("compile_cache", lambda: bench_compile_cache.run(
+                n_schedules=4, dims=(32, 32, 32), steps=3, pool_workers=2,
+                out_name="bench_compile_cache_quick"))
     if should("vec_env"):
         from . import bench_vec_env
         section("vec_env", lambda: bench_vec_env.run(

@@ -32,6 +32,7 @@ from .jax_backend import (
     match_kernel_route,
     register_kernel_route,
 )
+from .kernel_store import PersistentKernelStore, open_store
 from .dataset import (
     DIMS,
     matmul_dataset,

@@ -60,6 +60,10 @@ class Backend(abc.ABC):
     #: in stats/meta) instead of a bogus resolvable-looking string.
     name: str
 
+    #: whether :meth:`prepare_batch` does anything — callers (searches, the
+    #: vectorized env) check this before spending time assembling frontiers
+    can_prepare: bool = False
+
     @abc.abstractmethod
     def evaluate(self, nest: LoopNest) -> float:
         """GFLOPS of one schedule (higher is better)."""
@@ -71,6 +75,16 @@ class Backend(abc.ABC):
         simply loops, so overrides only change *cost*, never values.
         """
         return np.array([self.evaluate(n) for n in nests], dtype=np.float64)
+
+    def prepare_batch(self, nests: Sequence[LoopNest]) -> int:
+        """Compile-ahead hint: schedules likely to be evaluated *next*.
+
+        Backends with expensive per-structure preparation (JIT compilation)
+        overlap it with the current batch's measurement; the default is a
+        no-op returning 0, so hinting is always safe.  Purely advisory —
+        evaluation results must be identical with or without preparation.
+        """
+        return 0
 
     @abc.abstractmethod
     def peak(self) -> float:
@@ -106,6 +120,10 @@ def backend_name(backend: Backend) -> str:
 def _numpy_backend(**kw) -> Backend:
     from .cpu_backend import CPUMeasuredBackend
 
+    # compile-cache plumbing is jax-only; tolerated here so one tuner-level
+    # ``cache_dir=...`` setting works across backend specs
+    kw.pop("cache_dir", None)
+    kw.pop("prepare", None)
     return CPUMeasuredBackend(**kw)
 
 
@@ -118,6 +136,8 @@ def _jax_backend(**kw) -> Backend:
 def _tpu_backend(**kw) -> Backend:
     from .cost_model import TPUAnalyticalBackend
 
+    kw.pop("cache_dir", None)
+    kw.pop("prepare", None)
     return TPUAnalyticalBackend(**kw)
 
 

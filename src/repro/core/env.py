@@ -127,9 +127,20 @@ class LoopTuneEnv:
         """Cached batched evaluation (one ``Backend.evaluate_batch`` call for
         the deduped misses), noisy measurements re-measured in one extra
         batched call."""
+        self.prepare_eval(nests)
         g = self.cache.evaluate_batch(self.backend, nests)
         return _settle_batch(self.backend, self.cache, nests, g,
                              self.remeasure_noisy)[0]
+
+    def prepare_eval(self, nests: Sequence[LoopNest]) -> int:
+        """Compile-ahead hint to the backend: schedules about to be (or soon
+        to be) evaluated.  Nests whose value is already cached are filtered
+        out — their executables will never be rebuilt on this path.  Purely
+        advisory: rewards are identical with or without the hint."""
+        if not getattr(self.backend, "can_prepare", False):
+            return 0
+        cold = [n for n in nests if n.structure_key() not in self.cache]
+        return self.backend.prepare_batch(cold) if cold else 0
 
     def _noisy_of(self, nest: LoopNest) -> bool:
         m = measurement_of(self.backend, nest)

@@ -29,19 +29,44 @@ Executables are cached by ``structure_key`` in :class:`CompiledKernelCache`
 measurement only re-times.  Semantics parity with the NumPy executor
 (`execute` == reference einsum for every reachable schedule) is
 property-tested in ``tests/test_jax_backend.py``.
+
+Compilation is additionally **persistent**, **fleet-deduped** and
+**overlapped** when a cache dir is configured (``cache_dir=`` /
+``LOOPTUNE_KERNEL_CACHE``):
+
+* executables are serialized through ``jax.export`` into a
+  :class:`~repro.core.kernel_store.PersistentKernelStore` keyed by
+  ``(structure_key, vec_cap, route)`` under a JAX/device fingerprint, so a
+  warm tuner run — and every :class:`~repro.core.measure.WorkerPool`
+  worker — *loads* each key instead of re-tracing it;
+* cold keys are built by exactly one process fleet-wide (file-locked);
+  peers wait for the shared artifact rather than compiling redundantly;
+* :meth:`prepare_batch` hands upcoming structures to a background compile
+  thread, so compilation overlaps the current batch's measurement
+  (AutoTVM's pipelined builder/runner split) instead of preceding it, and
+  the worker pool dispatches already-compiled schedules first.
 """
 from __future__ import annotations
 
+import os
+import queue as queue_mod
+import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, Hashable, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
 from .cpu_backend import (INPUTS_CACHE_CAPACITY, VEC_CAP_DEFAULT,
                           _einsum_expr, _run_section, make_inputs)
+from .kernel_store import PersistentKernelStore, open_store
 from .loop_ir import Contraction, LoopNest
 from .measure import MeasuredBackend, MeasurementPolicy
 from .schedule_cache import LRUCache
+
+#: environment fallback for the persistent kernel cache dir, so entry points
+#: that never grew a ``cache_dir`` flag still share the fleet cache
+CACHE_DIR_ENV = "LOOPTUNE_KERNEL_CACHE"
 
 # compiled executables are heavyweight (traced + lowered programs); keep a
 # bounded working set rather than ScheduleCache's 200k float entries
@@ -244,11 +269,24 @@ register_kernel_route("matmul", _is_matmul, _lower_matmul)
 class CompiledKernelCache(LRUCache):
     """LRU map from ``(structure_key, vec_cap, route)`` to a jitted
     executable — shares the eviction discipline of :class:`ScheduleCache`
-    (bounded, evict-coldest, never clear-all).  ``misses`` counts compiles:
-    repeated ``evaluate_batch`` calls over the same structures trace once."""
+    (bounded, evict-coldest, never clear-all).  ``misses`` counts in-memory
+    lookups that had to build *or load*: repeated ``evaluate_batch`` calls
+    over the same structures trace once.  With a
+    :class:`~repro.core.kernel_store.PersistentKernelStore` layered under
+    it (see ``JaxJitBackend``), an evicted entry re-enters by
+    deserialization, not re-tracing.
 
-    def __init__(self, capacity: int = COMPILED_CACHE_CAPACITY):
+    ``evict_cb`` (optional) fires per evicted key — the backend uses it to
+    drop warm-state bookkeeping that must never outlive the executable."""
+
+    def __init__(self, capacity: int = COMPILED_CACHE_CAPACITY,
+                 evict_cb: Optional[Callable[[Hashable], None]] = None):
         super().__init__(capacity)
+        self.evict_cb = evict_cb
+
+    def on_evict(self, key, value) -> None:
+        if self.evict_cb is not None:
+            self.evict_cb(key)
 
 
 # ---------------------------------------------------------------------------
@@ -306,6 +344,12 @@ class JaxJitBackend(MeasuredBackend):
     (i.e. on real TPU — interpret-mode timings are not meaningful),
     ``"on"`` forces it (interpret mode on CPU: correct results, trustworthy
     only for correctness), ``"off"`` always uses the generic slab lowering.
+
+    ``cache_dir`` (default: the ``LOOPTUNE_KERNEL_CACHE`` env var) enables
+    the persistent fleet-wide compile cache; ``prepare`` controls the
+    compile-ahead hook (``"thread"`` = background compile thread hides
+    compile latency behind measurement, ``"sync"`` = compile inline at
+    ``prepare_batch`` time, ``"off"`` = hook is a no-op).
     """
 
     name = "jax"
@@ -321,21 +365,69 @@ class JaxJitBackend(MeasuredBackend):
         measure: str = "inproc",
         pool_workers: Optional[int] = None,
         isolated: bool = False,
+        cache_dir: Optional[str] = None,
+        prepare: str = "thread",
     ):
         import jax  # noqa: F401 — ImportError here drives make_backend("auto") fallback
 
         if pallas not in ("auto", "on", "off"):
             raise ValueError(f"pallas must be auto|on|off, got {pallas!r}")
+        if prepare not in ("thread", "sync", "off"):
+            raise ValueError(f"prepare must be thread|sync|off, got {prepare!r}")
         super().__init__(policy=policy, repeats=repeats, measure=measure,
                          pool_workers=pool_workers, isolated=isolated)
         self.vec_cap = vec_cap
         self.seed = seed
         self.pallas = pallas
+        self.prepare = prepare
+        self.can_prepare = prepare != "off"
         self.interpret = jax.default_backend() != "tpu"
         self.kernels = (kernel_cache if kernel_cache is not None
                         else CompiledKernelCache())
+        # warm-state bookkeeping must never outlive the executable it
+        # describes: a re-entered (rebuilt or re-loaded) program pays XLA
+        # compilation again on its first call
+        if self.kernels.evict_cb is None:
+            self.kernels.evict_cb = self._on_kernel_evict
         self._inputs_cache = LRUCache(INPUTS_CACHE_CAPACITY)
-        self.compiles = 0  # executables built (== kernel-cache misses here)
+        # persistent fleet cache (None = in-process JIT only)
+        self.cache_dir = (cache_dir if cache_dir is not None
+                          else os.environ.get(CACHE_DIR_ENV) or None)
+        self.store: Optional[PersistentKernelStore] = open_store(
+            self.cache_dir, self._fingerprint())
+        # compile accounting — the "never wait on the compiler twice" ledger
+        self.compiles = 0         # actual traces performed by this process
+        self.compile_s = 0.0      # seconds spent tracing/exporting
+        self.persist_loads = 0    # executables deserialized, not traced
+        self.persist_load_s = 0.0
+        self.export_errors = 0    # unexportable builds (kept in-proc only)
+        self.deser_errors = 0     # artifacts that failed to deserialize
+        self.prepare_errors = 0   # background compile-ahead failures
+        self.prepared = 0         # keys handed to the compile-ahead path
+        # in-process compile dedup: one trace per key no matter how many
+        # threads (measurement + compile-ahead) race on it
+        self._compile_cv = threading.Condition()
+        self._building: set = set()
+        self._queued: set = set()
+        # keys whose executable has actually run at least once in this
+        # process (a loaded-but-never-called program still owes its XLA
+        # compile; is_warm must not elide the warmup that would pay it)
+        self._executed: set = set()
+        self._compile_thread: Optional[threading.Thread] = None
+        self._compile_q: Optional[queue_mod.Queue] = None
+
+    def _fingerprint(self) -> Dict[str, Any]:
+        import jax
+
+        try:
+            device = jax.devices()[0].device_kind
+        except Exception:  # noqa: BLE001 — device query is observability only
+            device = "unknown"
+        return {"jax": jax.__version__, "platform": jax.default_backend(),
+                "device": device, "interpret": self.interpret}
+
+    def _on_kernel_evict(self, key: Hashable) -> None:
+        self._executed.discard(key)
 
     # -- compilation ----------------------------------------------------------
 
@@ -346,20 +438,236 @@ class JaxJitBackend(MeasuredBackend):
             return None
         return match_kernel_route(c)
 
-    def executable(self, nest: LoopNest) -> Callable:
-        """The jitted callable for this structure (cached; compiles once)."""
+    def _compile_key(self, nest: LoopNest) -> Tuple:
+        """THE compile key — every cache layer (in-memory LRU, persistent
+        store, warm-state tracking, pool dispatch hints) must key off this
+        one helper so they can never drift apart."""
+        return (nest.structure_key(), self.vec_cap,
+                self._route(nest.contraction))
+
+    def _abstract_args(self, c: Contraction) -> List[Any]:
+        import jax
+        import jax.numpy as jnp
+
+        return [jax.ShapeDtypeStruct(t.dims, jnp.float32) for t in c.inputs()]
+
+    def _trace(self, nest: LoopNest, key: Tuple
+               ) -> Tuple[Callable, Optional[bytes]]:
+        """Build the executable the expensive way (trace + lower).  The
+        program is traced through ``jax.export`` — with a store attached
+        the serialized artifact ships fleet-wide; unexportable programs
+        degrade to plain in-process JIT (counted, never fatal).  XLA's
+        backend compile of the staged module stays lazy: it costs the same
+        whether the module was traced here or loaded from the store, lands
+        in the measurement warmup on both paths, and is therefore excluded
+        from the compile accounting symmetrically."""
         import jax
 
-        route = self._route(nest.contraction)
+        route = key[2]
+        t0 = time.perf_counter()
+        if route is not None:
+            fn = _KERNEL_ROUTES[route][1](nest, self.interpret)
+        else:
+            fn = _build_slab_fn(nest, self.vec_cap)
+        data: Optional[bytes] = None
+        try:
+            from jax import export
 
-        def build():
-            self.compiles += 1
-            if route is not None:
-                return _KERNEL_ROUTES[route][1](nest, self.interpret)
-            return jax.jit(_build_slab_fn(nest, self.vec_cap))
+            exp = export.export(jax.jit(fn))(
+                *self._abstract_args(nest.contraction))
+            if self.store is not None:
+                data = exp.serialize()
+            # run through the exported program in-process too — fleet
+            # members time the exact same XLA module they load, and the
+            # storeless path stages through export as well so the expensive
+            # Python trace lands under the compile timer (not inside the
+            # first warmup run) and ``compile_s`` means the same thing in
+            # every mode
+            fn = exp.call
+        except Exception:  # noqa: BLE001 — export is best-effort
+            self.export_errors += 1
+            data = None
+        jitted = jax.jit(fn)
+        elapsed = time.perf_counter() - t0
+        self.compiles += 1
+        self.compile_s += elapsed
+        if self.store is not None:
+            self.store.log_compile(key, elapsed)
+        return jitted, data
 
-        return self.kernels.get_or_create(
-            (nest.structure_key(), self.vec_cap, route), build)
+    def _deserialize(self, data: bytes) -> Callable:
+        import jax
+        from jax import export
+
+        return jax.jit(export.deserialize(data).call)
+
+    def _load_from_store(self, key: Tuple) -> Optional[Callable]:
+        """A shared artifact turned back into an executable, or None
+        (missing, corrupt, or version-mismatched — mismatches drop the
+        artifact so the next builder replaces it)."""
+        if self.store is None:
+            return None
+        data = self.store.load(key)
+        if data is None:
+            return None
+        t0 = time.perf_counter()
+        try:
+            fn = self._deserialize(data)
+        except Exception:  # noqa: BLE001 — fall back to in-process JIT
+            self.deser_errors += 1
+            self.store.discard(key)
+            from .kernel_store import _warn_once
+
+            _warn_once(self.store.root, "artifact failed to deserialize",
+                       "jax/device mismatch or truncated file")
+            return None
+        self.persist_loads += 1
+        self.persist_load_s += time.perf_counter() - t0
+        return fn
+
+    def _make_executable(self, nest: LoopNest, key: Tuple) -> Callable:
+        """Store-coordinated build: load the shared artifact if it exists;
+        otherwise exactly one process fleet-wide traces (file lock) while
+        peers wait for the artifact.  Every failure path lands on a plain
+        in-process JIT — a measurement is never failed by the cache."""
+        fn = self._load_from_store(key)
+        if fn is not None:
+            return fn
+        if self.store is None or self.store.acquire_build_lock(key):
+            try:
+                fn, data = self._trace(nest, key)
+                if data is not None and self.store is not None:
+                    self.store.store(key, data)
+            finally:
+                if self.store is not None:
+                    self.store.release_build_lock(key)
+            return fn
+        # a peer is already tracing this key: wait on the shared artifact
+        data = self.store.wait_for(key)
+        if data is not None:
+            t0 = time.perf_counter()
+            try:
+                loaded = self._deserialize(data)
+                self.persist_loads += 1
+                self.persist_load_s += time.perf_counter() - t0
+                return loaded
+            except Exception:  # noqa: BLE001
+                self.deser_errors += 1
+                self.store.discard(key)
+        fn, _ = self._trace(nest, key)  # builder died/timed out: build here
+        return fn
+
+    def executable(self, nest: LoopNest) -> Callable:
+        """The jitted callable for this structure.  Thread-safe and deduped
+        at every layer: per-process (memory LRU + in-flight set, so the
+        measurement thread and the compile-ahead thread never trace the
+        same key twice) and fleet-wide (persistent store + build lock, so
+        pool workers and sibling tuner runs share one trace per key)."""
+        key = self._compile_key(nest)
+        with self._compile_cv:
+            while True:
+                fn = self.kernels.get(key)
+                if fn is not None:
+                    self.kernels.hits += 1
+                    return fn
+                if key in self._building:
+                    self._compile_cv.wait()
+                    continue
+                self.kernels.misses += 1
+                self._building.add(key)
+                break
+        ok = False
+        try:
+            fn = self._make_executable(nest, key)
+            ok = True
+        finally:
+            with self._compile_cv:
+                if ok:
+                    self.kernels.put(key, fn)
+                self._building.discard(key)
+                self._compile_cv.notify_all()
+        return fn
+
+    def is_compiled(self, nest: LoopNest) -> bool:
+        """Whether measuring this structure would wait on the compiler —
+        False only for keys that are neither in memory nor in the shared
+        store.  The worker pool dispatches compiled schedules first so cold
+        keys compile in the background while warm ones measure."""
+        key = self._compile_key(nest)
+        return (key in self.kernels
+                or (self.store is not None and self.store.contains(key)))
+
+    # -- compile-ahead (the AutoTVM builder/runner overlap) -------------------
+
+    def _ensure_compile_thread(self) -> queue_mod.Queue:
+        if self._compile_q is None:
+            self._compile_q = queue_mod.Queue()
+            # daemon on purpose: an in-flight background compile must never
+            # hold the interpreter open after the tuner is done with it
+            self._compile_thread = threading.Thread(
+                target=self._compile_worker, name="looptune-compile-ahead",
+                daemon=True)
+            self._compile_thread.start()
+        return self._compile_q
+
+    def _compile_worker(self) -> None:
+        while True:
+            item = self._compile_q.get()
+            if item is None:
+                return
+            key, nest = item
+            with self._compile_cv:
+                self._queued.discard(key)
+            try:
+                self.executable(nest)
+            except Exception:  # noqa: BLE001 — ahead-of-time is best-effort;
+                # the measurement path will surface the real error
+                self.prepare_errors += 1
+
+    def prepare_batch(self, nests: Sequence[LoopNest]) -> int:
+        """Compile-ahead hook: queue the *next* frontier's cold structures
+        so tracing overlaps the current batch's measurement instead of
+        stalling it.  Returns the number of keys scheduled.  Duplicate and
+        already-compiled keys are skipped; with a worker pool the parent
+        compiles into the shared store while workers measure."""
+        if self.prepare == "off" or not nests:
+            return 0
+        todo: List[Tuple[Tuple, LoopNest]] = []
+        with self._compile_cv:
+            for nest in nests:
+                key = self._compile_key(nest)
+                if (key in self.kernels or key in self._building
+                        or key in self._queued):
+                    continue
+                self._queued.add(key)
+                # clone: callers mutate nests in place between frontiers
+                todo.append((key, nest.clone()))
+        if not todo:
+            return 0
+        self.prepared += len(todo)
+        if self.prepare == "sync":
+            for key, nest in todo:
+                with self._compile_cv:
+                    self._queued.discard(key)
+                try:
+                    self.executable(nest)
+                except Exception:  # noqa: BLE001
+                    self.prepare_errors += 1
+            return len(todo)
+        q = self._ensure_compile_thread()
+        for item in todo:
+            q.put(item)
+        return len(todo)
+
+    def close(self) -> None:
+        """Shut down the compile-ahead thread and the worker pool."""
+        if self._compile_q is not None:
+            self._compile_q.put(None)
+            if self._compile_thread is not None:
+                self._compile_thread.join(timeout=5.0)
+            self._compile_q = None
+            self._compile_thread = None
+        super().close()
 
     def _inputs(self, c: Contraction) -> Tuple:
         def build():
@@ -372,28 +680,37 @@ class JaxJitBackend(MeasuredBackend):
 
     def execute(self, nest: LoopNest) -> np.ndarray:
         """Run the (cached) executable on the backend's operand set."""
-        return np.asarray(self.executable(nest)(*self._inputs(nest.contraction)))
+        out = np.asarray(
+            self.executable(nest)(*self._inputs(nest.contraction)))
+        self._executed.add(self._compile_key(nest))
+        return out
 
     # -- executor surface (timing lives in MeasuredBackend) ------------------
 
     def run_once(self, nest: LoopNest) -> None:
         """One synchronized run of the compiled program (the untimed policy
-        warm-up run pays any compilation)."""
+        warm-up run pays any compilation — tracing *and* the lazy XLA
+        compile a store-loaded program still owes at its first call)."""
         fn = self.executable(nest)
         fn(*self._inputs(nest.contraction)).block_until_ready()
+        self._executed.add(self._compile_key(nest))
 
     def is_warm(self, nest: LoopNest) -> bool:
-        """Warm-up is elidable only once *this structure's* executable is
-        compiled — a hot contraction does not make a fresh structure warm
-        (its first call would pay tracing + XLA compilation)."""
-        key = (nest.structure_key(), self.vec_cap, self._route(nest.contraction))
-        return super().is_warm(nest) and key in self.kernels
+        """Warm-up is elidable only once *this structure's* executable has
+        actually run here — being cached (or prepared, or loaded from the
+        persistent store) is not enough, because XLA compiles lazily at the
+        first call and that cost must stay out of the timed runs."""
+        return (super().is_warm(nest)
+                and self._compile_key(nest) in self._executed)
 
     def pool_spec(self) -> Tuple[str, Dict[str, Any], Optional[str]]:
         # spawn, not fork: the parent's XLA runtime holds locks and threads
-        # a forked child would inherit mid-flight
+        # a forked child would inherit mid-flight.  Workers share the
+        # parent's persistent cache dir (fleet-wide compile-once) but run
+        # without a compile-ahead thread of their own — the parent prepares.
         return ("jax", {"vec_cap": self.vec_cap, "seed": self.seed,
-                        "pallas": self.pallas}, "spawn")
+                        "pallas": self.pallas, "cache_dir": self.cache_dir,
+                        "prepare": "off"}, "spawn")
 
     def cost_hint(self, nest: LoopNest) -> float:
         """Slab count, like the interpreter's hint: compiled programs still
@@ -431,10 +748,30 @@ class JaxJitBackend(MeasuredBackend):
             _PEAK_CACHE[device] = peak
         return peak
 
+    def compile_stats(self) -> Dict[str, Any]:
+        """Compile accounting: ``compile_misses`` = actual traces this
+        process performed, ``compile_hits`` = executables served without one
+        (in-memory kernel-cache hits + persistent-store loads)."""
+        out = {
+            "compile_misses": self.compiles,
+            "compile_hits": self.kernels.hits + self.persist_loads,
+            "compile_s": round(self.compile_s, 4),
+            "persist_loads": self.persist_loads,
+            "persist_load_s": round(self.persist_load_s, 4),
+            "export_errors": self.export_errors,
+            "deser_errors": self.deser_errors,
+            "prepared": self.prepared,
+            "prepare_errors": self.prepare_errors,
+        }
+        if self.store is not None:
+            out["store"] = self.store.stats()
+        return out
+
     def stats(self) -> Dict[str, Any]:
         return {
             "compiles": self.compiles,
             "kernel_cache": self.kernels.stats(),
             "inputs_cache": self._inputs_cache.stats(),
+            "compile": self.compile_stats(),
             "measure": self.measure_stats(),
         }

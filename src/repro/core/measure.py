@@ -462,8 +462,9 @@ class MeasuredBackend(PoolHostBackend):
         if not nests:
             return []
         if self.measure_mode == "pool" and not self.isolated:
-            ms = self._ensure_pool().measure_batch(nests,
-                                                   cost_hint=self.cost_hint)
+            ms = self._ensure_pool().measure_batch(
+                nests, cost_hint=self.cost_hint,
+                compiled_hint=getattr(self, "is_compiled", None))
             return [self._record(n, m) for n, m in zip(nests, ms)]
         return [self.measure(n) for n in nests]
 
@@ -693,6 +694,7 @@ class WorkerPool:
         self,
         nests: Sequence[LoopNest],
         cost_hint: Optional[Callable[[LoopNest], float]] = None,
+        compiled_hint: Optional[Callable[[LoopNest], bool]] = None,
     ) -> List[Measurement]:
         """Measure every nest, in parallel across the pool.
 
@@ -702,8 +704,11 @@ class WorkerPool:
         for loop nests: a bad tiling runs 30x longer than a good one)
         therefore balance dynamically instead of whichever worker drew the
         long straws idling the rest of the batch away.  The backlog is
-        ordered longest-expected-first (``cost_hint``, LPT scheduling) so
-        no heavyweight schedule starts last.  Duplicate structures are
+        ordered already-compiled-first (``compiled_hint`` — schedules whose
+        executable already exists in the shared artifact store measure
+        immediately while cold keys finish compiling in the background),
+        then longest-expected-first (``cost_hint``, LPT scheduling) so no
+        heavyweight schedule starts last.  Duplicate structures are
         measured once; when the batch is smaller than the pool, each
         schedule fans out to the idle workers and the per-worker
         measurements merge into one best-of-across-processes record.
@@ -732,11 +737,18 @@ class WorkerPool:
                 uniq_keys.append(k)
                 uniq_nests.append(n)
 
-        # longest-expected-first backlog; small batches fan each schedule
-        # out to the idle workers (best-of across processes)
+        # compiled-first, then longest-expected-first backlog; small batches
+        # fan each schedule out to the idle workers (best-of across
+        # processes)
         order = list(range(len(uniq_nests)))
-        if cost_hint is not None:
-            order.sort(key=lambda s: -cost_hint(uniq_nests[s]))
+        if cost_hint is not None or compiled_hint is not None:
+            cold = (
+                (lambda s: not compiled_hint(uniq_nests[s]))
+                if compiled_hint is not None else (lambda s: False))
+            cost = (
+                (lambda s: -cost_hint(uniq_nests[s]))
+                if cost_hint is not None else (lambda s: 0.0))
+            order.sort(key=lambda s: (cold(s), cost(s)))
         dups = max(1, self.n_workers // len(uniq_nests))
         tasks: Dict[Tuple, Tuple] = {}  # tid -> (contraction, key)
         backlog: List[Tuple] = []  # tids, next-to-dispatch last

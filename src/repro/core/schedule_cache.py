@@ -14,7 +14,10 @@ misses to :meth:`Backend.evaluate_batch`.
 bounded-recency policy also backs the measured backend's per-contraction
 input arrays and the JIT backend's compiled executables
 (:class:`~repro.core.jax_backend.CompiledKernelCache`), so no cache in the
-evaluation path ever clears wholesale on overflow.
+evaluation path ever clears wholesale on overflow.  The compiled-kernel
+cache additionally layers over a disk-backed
+:class:`~repro.core.kernel_store.PersistentKernelStore`, so an evicted
+executable re-enters by deserialization rather than re-tracing.
 
 One cache instance can back many environments (scalar and vectorized lanes
 alike), so a policy rollout, a search, and a tuner all amortize each other's
@@ -64,6 +67,12 @@ class LRUCache:
         if val is not None:
             self._data.move_to_end(key)
         return val
+
+    def peek(self, key: Hashable) -> Optional[Any]:
+        """Value for ``key`` without refreshing recency or touching any
+        counter — for advisory probes (compile-ahead filtering, dispatch
+        hints) that must not perturb what the cache keeps warm."""
+        return self._data.get(key)
 
     def put(self, key: Hashable, value: Any) -> None:
         if key in self._data:

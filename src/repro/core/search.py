@@ -53,6 +53,13 @@ class SearchResult:
     # measurements escalated repeats, and how many stayed noisy anyway
     n_escalated: int = 0
     n_noisy: int = 0
+    # compile accounting attributable to this search (delta of the compiled
+    # backend's ledger; zero on backends with no compile step): wall-clock
+    # spent tracing, executables served without a trace (in-memory +
+    # persistent-store), and actual traces performed
+    compile_s: float = 0.0
+    compile_hits: int = 0
+    compile_misses: int = 0
 
     @property
     def speedup(self) -> float:
@@ -177,18 +184,31 @@ def _children(env: LoopTuneEnv, nest: LoopNest) -> List[Tuple[int, LoopNest]]:
     return out
 
 
-def _cache_counters(env: LoopTuneEnv) -> Tuple[int, int, int, int]:
-    """Snapshot (hits, misses, escalations, noisy) of the env's shared
-    ScheduleCache and the backend's measurement-guardrail counters (zero
-    for deterministic backends, which have no guardrail traffic)."""
+def _compile_counters(env: LoopTuneEnv) -> Tuple[float, int, int]:
+    """Snapshot (compile_s, compile_hits, compile_misses) of the backend's
+    compile ledger (zeros for backends with no compile step)."""
+    stats = getattr(env.backend, "compile_stats", None)
+    if stats is None:
+        return (0.0, 0, 0)
+    d = stats()
+    return (d["compile_s"], d["compile_hits"], d["compile_misses"])
+
+
+def _cache_counters(env: LoopTuneEnv) -> Tuple:
+    """Snapshot (hits, misses, escalations, noisy, compile_s, compile_hits,
+    compile_misses) of the env's shared ScheduleCache, the backend's
+    measurement-guardrail counters, and its compile ledger (zero for
+    deterministic backends, which have neither)."""
     return (env.cache.hits, env.cache.misses,
             getattr(env.backend, "n_escalations", 0),
-            getattr(env.backend, "n_noisy", 0))
+            getattr(env.backend, "n_noisy", 0),
+            *_compile_counters(env))
 
 
 def _mk_result(name, env, base, best_g, best_seq, best_nest, budget, trace,
-               cache0=(0, 0, 0, 0), surrogate=None):
-    h0, m0, e0, z0 = cache0
+               cache0=(0, 0, 0, 0, 0.0, 0, 0), surrogate=None):
+    h0, m0, e0, z0, cs0, ch0, cm0 = cache0
+    cs1, ch1, cm1 = _compile_counters(env)
     return SearchResult(
         name=name,
         best_gflops=best_g,
@@ -202,6 +222,9 @@ def _mk_result(name, env, base, best_g, best_seq, best_nest, budget, trace,
         cache_misses=env.cache.misses - m0,
         n_escalated=getattr(env.backend, "n_escalations", 0) - e0,
         n_noisy=getattr(env.backend, "n_noisy", 0) - z0,
+        compile_s=round(cs1 - cs0, 4),
+        compile_hits=ch1 - ch0,
+        compile_misses=cm1 - cm0,
         surrogate_stats=surrogate.stats() if surrogate is not None else None,
     )
 
@@ -280,6 +303,12 @@ def greedy_search(
         ai = sub[0]
         apply_action(nest, env.actions[ai])
         seq.append(ai)
+        if getattr(env.backend, "can_prepare", False):
+            # compile-ahead: the next step's root frontier (this node's
+            # children) traces in the background while the committed state
+            # measures below — the search never waits on a cold compile it
+            # could have started a step earlier
+            env.prepare_eval([child for _, child in _children(env, nest)])
         cur_g = _eval(env, nest, budget)
         if cur_g > best_g:
             best_g, best_nest, best_seq = cur_g, nest.clone(), list(seq)
@@ -395,6 +424,12 @@ def beam_search(
                 nxt.extend(kids[:width])
             nxt.sort(key=lambda t: -t[0])
             frontier = [(n, s) for _, n, s in nxt[: width * width]]
+            if frontier and getattr(env.backend, "can_prepare", False):
+                # compile-ahead: the surviving beam's children are the next
+                # layer's frontier — start tracing them now so the layer
+                # boundary never stalls on cold executables
+                env.prepare_eval([child for n, _ in frontier
+                                  for _, child in _children(env, n)])
     return _mk_result(f"beam{width}{order}", env, base, best_g, best_seq,
                       best_nest, budget, trace, cache0, scorer)
 

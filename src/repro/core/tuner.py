@@ -88,11 +88,17 @@ class LoopTuner:
         search_budget_s: float = 10.0,
         featurizer=None,  # None -> env default (flat); set to match the act
         surrogate: str = "auto",  # "auto" | "off": cost-model-guided search
+        cache_dir: Optional[str] = None,  # persistent compiled-kernel store
     ):
         self.act = act
         # any registered backend name ("tpu" | "numpy" | "jax" | "auto" |
-        # "cpu") or a ready Backend instance — see core.backend.make_backend
-        self.backend = make_backend(backend)
+        # "cpu") or a ready Backend instance — see core.backend.make_backend.
+        # cache_dir (persistent fleet-wide compile cache; jax-only, others
+        # tolerate it) can only be applied when the tuner builds the backend
+        self.backend = (make_backend(backend, cache_dir=cache_dir)
+                        if cache_dir is not None and isinstance(backend, str)
+                        else make_backend(backend))
+        self.cache_dir = cache_dir
         self.backend_kind = backend_name(self.backend)
         self.registry = registry if registry is not None else ScheduleRegistry()
         self.episode_len = episode_len
@@ -322,11 +328,18 @@ class LoopTuner:
         counters (variance escalations, noisy flags, pool health) and the
         active reward calibration."""
         ms = getattr(self.backend, "measure_stats", None)
+        cs = getattr(self.backend, "compile_stats", None)
         return {
             "policy": self.policy,
             "backend": self.backend_kind,
             "registry_size": len(self.registry),
             "cache": self.cache.stats(),
+            # compile ledger (stable shape; zeros on compile-free backends):
+            # how much wall-clock went to tracing vs. was served from the
+            # in-memory/persistent kernel caches
+            "compile": (cs() if cs is not None
+                        else {"compile_misses": 0, "compile_hits": 0,
+                              "compile_s": 0.0}),
             # stable shape regardless of whether a scorer exists yet
             "surrogate": {"mode": self.surrogate,
                           **(self._scorer.stats()

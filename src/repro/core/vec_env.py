@@ -145,9 +145,19 @@ class VecLoopTuneEnv:
         """Cached batched evaluation with the reward-quality guardrail:
         noisy measurements re-measure once through one extra batched call
         (same semantics as ``LoopTuneEnv.gflops``)."""
+        self.prepare_eval(nests)
         g = self.cache.evaluate_batch(self.backend, nests)
         return _settle_batch(self.backend, self.cache, nests, g,
                              self.remeasure_noisy)[0]
+
+    def prepare_eval(self, nests: Sequence[LoopNest]) -> int:
+        """Compile-ahead hint to the backend (see
+        ``LoopTuneEnv.prepare_eval``): cache-cold schedules about to be
+        evaluated compile in the background while the current ones measure."""
+        if not getattr(self.backend, "can_prepare", False):
+            return 0
+        cold = [n for n in nests if n.structure_key() not in self.cache]
+        return self.backend.prepare_batch(cold) if cold else 0
 
     def _noisy_of(self, nest: LoopNest) -> bool:
         m = measurement_of(self.backend, nest)

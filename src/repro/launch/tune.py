@@ -99,14 +99,17 @@ def tune_model(
     prompt_len: int = 24,
     max_len: int = 64,
     kinds: Sequence[str] = ("decode", "prefill"),
+    kernel_cache: Optional[str] = None,
 ) -> Dict[str, Any]:
     """Tune every contraction a model config lowers to; persist the table.
 
     ``budget_s`` (and ``eval_budget``, when given) are *totals* for the
     whole model, split across the deduped contractions by executed-FLOP
     share — the contraction that dominates the roofline gets the budget.
-    Returns a report dict (harvested/tuned counts, per-entry summaries,
-    coverage of the executed FLOPs).
+    ``kernel_cache`` names the persistent compiled-kernel store dir (jax
+    backends): re-tuning the same model loads yesterday's executables
+    instead of re-tracing them.  Returns a report dict (harvested/tuned
+    counts, per-entry summaries, coverage of the executed FLOPs).
     """
     t0 = time.perf_counter()
     cfg = get_config(cfg_or_arch) if isinstance(cfg_or_arch, str) else cfg_or_arch
@@ -117,10 +120,11 @@ def tune_model(
     if tuner is None:
         if checkpoint is not None:
             tuner = LoopTuner.from_checkpoint(checkpoint, backend=backend,
-                                              registry=registry)
+                                              registry=registry,
+                                              cache_dir=kernel_cache)
         else:
             tuner = LoopTuner(policy=policy, backend=backend,
-                              registry=registry)
+                              registry=registry, cache_dir=kernel_cache)
 
     records = harvest_model(cfg, batch=batch, prompt_len=prompt_len,
                             max_len=max_len, kinds=kinds)
@@ -142,6 +146,7 @@ def tune_model(
         registry.save(registry_path)
     elif registry.path:
         registry.save()
+    compile_stats = getattr(tuner.backend, "compile_stats", None)
     return {
         "arch": cfg.name,
         "kinds": list(kinds),
@@ -152,6 +157,8 @@ def tune_model(
         "flop_share_covered": share_kept,
         "registry_size": len(registry),
         "registry_path": registry_path or registry.path,
+        "kernel_cache": kernel_cache,
+        "compile": compile_stats() if compile_stats is not None else None,
         "tune_time_s": round(time.perf_counter() - t0, 2),
         "contractions": [
             {"m": r["m"], "k": r["k"], "n": r["n"], "dtype": r["dtype"],
@@ -178,14 +185,28 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--kernel-cache", default=None,
+                    help="persistent compiled-kernel store dir (jax "
+                         "backends; default: <registry>.kernels; 'off' "
+                         "disables)")
     args = ap.parse_args(argv)
+
+    # the kernel store lives beside the registry by default: the artifacts
+    # and the schedules they serve travel (and get wiped) together
+    kernel_cache: Optional[str]
+    if args.kernel_cache == "off":
+        kernel_cache = None
+    elif args.kernel_cache is None:
+        kernel_cache = args.registry + ".kernels"
+    else:
+        kernel_cache = args.kernel_cache
 
     report = tune_model(
         args.arch, registry_path=args.registry, checkpoint=args.checkpoint,
         backend=args.backend, budget_s=args.budget_s,
         eval_budget=args.eval_budget, max_contractions=args.max_contractions,
         smoke=not args.full, batch=args.batch, prompt_len=args.prompt_len,
-        max_len=args.max_len)
+        max_len=args.max_len, kernel_cache=kernel_cache)
     print("[tune]", json.dumps(report, indent=1), flush=True)
     return 0
 

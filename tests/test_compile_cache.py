@@ -1,0 +1,452 @@
+"""Compile-ahead pipeline: persistent kernel store, fleet/thread compile
+dedup, LRU-evict -> store-rehit interplay, prepare_batch overlap parity,
+graceful degradation, and end-to-end compile accounting.
+
+Fast tests run the real JAX tracer on tiny (16^3) matmuls; the
+process-pool race and the bench smoke fork interpreters and are marked
+``slow``."""
+import json
+import threading
+import warnings
+import zlib
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompiledKernelCache,
+    LoopNest,
+    LoopTuneEnv,
+    LoopTuner,
+    MeasurementPolicy,
+    PersistentKernelStore,
+    make_backend,
+    matmul_benchmark,
+    open_store,
+)
+from repro.core.actions import apply_action, build_action_space, is_legal
+from repro.core.kernel_store import key_digest
+from repro.core.search import greedy_search
+
+jax = pytest.importorskip("jax")
+
+BENCH = matmul_benchmark(16, 16, 16)
+ACTIONS = build_action_space()
+
+
+class FakeClock:
+    """Scripted perf_counter: each timed run consumes one duration."""
+
+    def __init__(self, durations):
+        self.durations = list(durations)
+        self.i = 0
+        self.now = 0.0
+        self.pending = None
+
+    def __call__(self):
+        if self.pending is None:
+            self.pending = self.now
+            return self.now
+        d = self.durations[min(self.i, len(self.durations) - 1)]
+        self.i += 1
+        self.now = self.pending + d
+        self.pending = None
+        return self.now
+
+
+def _walk(n_nests, steps=3, seed=0, bench=BENCH):
+    """Distinct-structure random schedules of ``bench``."""
+    rng = np.random.default_rng(seed)
+    out, seen = [], set()
+    root = LoopNest(bench)
+    while len(out) < n_nests:
+        cur = root.clone()
+        for _ in range(steps):
+            legal = [a for a in ACTIONS if is_legal(cur, a)]
+            apply_action(cur, legal[int(rng.integers(len(legal)))])
+        if cur.structure_key() not in seen:
+            seen.add(cur.structure_key())
+            out.append(cur)
+    return out
+
+
+def _backend(cache_dir=None, prepare="off", **kw):
+    return make_backend("jax", cache_dir=str(cache_dir) if cache_dir else None,
+                        prepare=prepare,
+                        policy=MeasurementPolicy(repeats=1, max_repeats=1,
+                                                 warmup=1),
+                        **kw)
+
+
+# ---------------------------------------------------------------------------
+# PersistentKernelStore unit behaviour (no JAX involved)
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_and_counters(tmp_path):
+    store = PersistentKernelStore(str(tmp_path), {"v": 1})
+    key = ("k", 1)
+    assert store.load(key) is None and store.misses == 1
+    assert store.store(key, b"payload" * 100)
+    assert store.contains(key)
+    assert store.load(key) == b"payload" * 100
+    assert store.hits == 1 and store.bytes_written > 0
+    assert store.stats()["artifacts"] == 1
+
+
+def test_store_build_lock_excludes_and_releases(tmp_path):
+    a = PersistentKernelStore(str(tmp_path), {"v": 1})
+    b = PersistentKernelStore(str(tmp_path), {"v": 1})
+    key = ("k", 1)
+    assert a.acquire_build_lock(key)
+    assert not b.acquire_build_lock(key)  # held by a
+    a.store(key, b"artifact")
+    a.release_build_lock(key)
+    assert b.wait_for(key) == b"artifact"  # waiter sees the artifact
+    assert b.acquire_build_lock(key)  # and the lock is free again
+    b.release_build_lock(key)
+
+
+def test_store_stale_lock_ages_out(tmp_path):
+    a = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=0.0)
+    key = ("k", 1)
+    assert a.acquire_build_lock(key)
+    # a "crashed builder"'s lock (age > stale_lock_s=0) must not block the
+    # fleet forever: the next builder steals it
+    b = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=0.0)
+    assert b.acquire_build_lock(key)
+
+
+def test_store_wait_timeout_returns_none(tmp_path):
+    a = PersistentKernelStore(str(tmp_path), {"v": 1}, wait_timeout_s=0.1,
+                              poll_s=0.01)
+    key = ("k", 1)
+    assert a.acquire_build_lock(key)  # never builds, never releases
+    b = PersistentKernelStore(str(tmp_path), {"v": 1}, wait_timeout_s=0.1,
+                              poll_s=0.01)
+    assert b.wait_for(key) is None  # times out -> caller builds locally
+    assert b.wait_timeouts == 1
+
+
+def test_store_corrupt_artifact_dropped(tmp_path):
+    store = PersistentKernelStore(str(tmp_path), {"v": 1})
+    key = ("k", 1)
+    store.store(key, b"good")
+    # overwrite with non-zlib junk (torn write from a crashed builder)
+    store._artifact(key).write_bytes(b"\x00not-zlib")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert store.load(key) is None
+    assert store.load_errors == 1
+    assert not store.contains(key)  # dropped so the next builder replaces it
+
+
+def test_store_degrades_when_root_is_a_file(tmp_path):
+    blocker = tmp_path / "not-a-dir"
+    blocker.write_text("file where the cache dir should be")
+    with pytest.warns(UserWarning, match="falling back to in-process JIT"):
+        store = PersistentKernelStore(str(blocker), {"v": 1})
+    assert store.disabled
+    # every surface is a safe no-op after degradation
+    assert store.load(("k",)) is None
+    assert not store.store(("k",), b"x")
+    assert store.acquire_build_lock(("k",))  # degraded = build locally
+    assert open_store(str(blocker), {"v": 1}) is None
+    assert open_store(None, {"v": 1}) is None
+
+
+def test_compile_log_counts_fleet_traces(tmp_path):
+    store = PersistentKernelStore(str(tmp_path), {"v": 1})
+    store.log_compile(("a",), 1.5)
+    store.log_compile(("b",), 0.5)
+    events = store.compile_events()
+    assert len(events) == 2
+    assert {e["key"] for e in events} == {key_digest(("a",)),
+                                         key_digest(("b",))}
+    assert store.stats()["fleet_compiles"] == 2
+
+
+# ---------------------------------------------------------------------------
+# JaxJitBackend + store interplay
+# ---------------------------------------------------------------------------
+
+
+def test_compile_key_single_source_of_truth():
+    be = _backend()
+    nest = LoopNest(BENCH)
+    be.evaluate(nest)
+    key = be._compile_key(nest)
+    assert key == (nest.structure_key(), be.vec_cap, be._route(BENCH))
+    assert key in be.kernels  # executable() keyed by the same helper
+    assert be.is_compiled(nest)
+    be.close()
+
+
+def test_fresh_process_loads_instead_of_retracing(tmp_path):
+    nest = LoopNest(BENCH)
+    cold = _backend(tmp_path)
+    g_cold = cold.evaluate(nest)
+    assert cold.compiles == 1
+    cold.close()
+
+    warm = _backend(tmp_path)  # fresh instance = "new tuner run"
+    g_warm = warm.evaluate(nest)
+    cs = warm.compile_stats()
+    warm.close()
+    assert cs["compile_misses"] == 0  # loaded, never re-traced
+    assert cs["persist_loads"] == 1
+    assert cs["compile_hits"] >= 1
+    # same exported program, same operands: identical output values mean the
+    # GFLOPS differ only by clock noise
+    assert np.isfinite(g_cold) and np.isfinite(g_warm)
+
+
+def test_lru_eviction_rehits_store_not_tracer(tmp_path):
+    a, b = _walk(2)
+    be = _backend(tmp_path, kernel_cache=CompiledKernelCache(capacity=1))
+    be.evaluate(a)
+    assert be.compiles == 1
+    be.evaluate(b)  # evicts a's executable from the in-memory LRU
+    assert be.compiles == 2
+    assert be._compile_key(a) not in be.kernels
+    # warm-state bookkeeping died with the eviction (evict_cb): a re-entered
+    # program owes its XLA compile again, so warmup must not be elided
+    assert be._compile_key(a) not in be._executed
+    be.evaluate(a)  # re-enters by deserialization, NOT by re-tracing
+    assert be.compiles == 2
+    assert be.persist_loads == 1
+    be.close()
+
+
+def test_corrupt_artifact_rebuilds_and_measurement_succeeds(tmp_path):
+    nest = LoopNest(BENCH)
+    cold = _backend(tmp_path)
+    cold.evaluate(nest)
+    cold.close()
+    # corrupt the artifact on disk (e.g. truncated by a full disk)
+    kbin = next(Path(cold.store.dir).glob("*.kbin"))
+    kbin.write_bytes(zlib.compress(b"not an exported program"))
+    fresh = _backend(tmp_path)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        g = fresh.evaluate(nest)  # never fails: falls back to a local trace
+    assert np.isfinite(g) and g > 0
+    assert fresh.deser_errors == 1
+    assert fresh.compiles == 1  # rebuilt...
+    assert fresh.store.contains(fresh._compile_key(nest))  # ...and re-stored
+    fresh.close()
+
+
+def test_unwritable_cache_dir_degrades_to_inproc_jit(tmp_path):
+    blocker = tmp_path / "blocker"
+    blocker.write_text("a regular file where the cache dir should be")
+    with pytest.warns(UserWarning, match="falling back to in-process JIT"):
+        be = _backend(blocker)
+    assert be.store is None  # degraded at construction -> in-process only
+    nest = LoopNest(BENCH)
+    assert np.isfinite(be.evaluate(nest)) and be.compiles == 1
+    be.close()
+
+
+def test_inflight_dedup_across_threads():
+    """Two threads racing on one cold key trace it exactly once."""
+    be = _backend()
+    nest = LoopNest(BENCH)
+    results = []
+
+    def work():
+        results.append(be.executable(nest))
+
+    threads = [threading.Thread(target=work) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert be.compiles == 1
+    assert all(fn is results[0] for fn in results)  # same executable object
+    be.close()
+
+
+def test_instance_race_one_fleet_compile(tmp_path):
+    """Two backend instances sharing a store, racing on one cold key: the
+    file lock lets exactly one trace; the compile log proves it."""
+    nest = LoopNest(BENCH)
+    a = _backend(tmp_path)
+    b = _backend(tmp_path)
+    errs = []
+
+    def work(be):
+        try:
+            be.evaluate(nest)
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    ta, tb = threading.Thread(target=work, args=(a,)), \
+        threading.Thread(target=work, args=(b,))
+    ta.start(); tb.start(); ta.join(); tb.join()
+    assert not errs
+    events = a.store.compile_events()
+    assert len(events) == 1  # one fleet-wide trace, not two
+    assert a.compiles + b.compiles == 1
+    assert a.persist_loads + b.persist_loads == 1  # the loser loaded
+    a.close(); b.close()
+
+
+# ---------------------------------------------------------------------------
+# prepare_batch: compile-ahead overlap
+# ---------------------------------------------------------------------------
+
+
+def test_prepare_sync_compiles_ahead_and_dedups():
+    nests = _walk(3)
+    be = _backend(prepare="sync")
+    assert be.can_prepare
+    assert be.prepare_batch(nests) == 3
+    assert be.compiles == 3
+    assert all(be.is_compiled(n) for n in nests)
+    # idempotent: nothing left to prepare, nothing re-traced
+    assert be.prepare_batch(nests) == 0
+    be.evaluate_batch(nests)
+    assert be.compiles == 3  # measurement found everything warm
+    be.close()
+
+
+def test_prepare_thread_overlaps_and_measurement_waits_correctly():
+    nests = _walk(3)
+    be = _backend(prepare="thread")
+    assert be.prepare_batch(nests) == 3
+    # measuring immediately is safe: executable() blocks on the in-flight
+    # build instead of double-tracing
+    g = be.evaluate_batch(nests)
+    assert np.isfinite(g).all() and (g > 0).all()
+    assert be.compiles == 3  # background + foreground never duplicated
+    assert be.compile_stats()["prepared"] == 3
+    be.close()
+
+
+def test_prepare_off_is_a_noop():
+    be = _backend(prepare="off")
+    assert not be.can_prepare
+    assert be.prepare_batch(_walk(2)) == 0
+    assert be.compiles == 0
+    be.close()
+
+
+def test_prepare_parity_fake_clock():
+    """Overlap must not change measured GFLOPS: under a scripted clock the
+    serial and prepared paths produce bit-identical values."""
+    nests = _walk(3)
+    script = [0.001 * (i + 1) for i in range(64)]
+
+    def run(prepare):
+        be = make_backend(
+            "jax", prepare=prepare,
+            policy=MeasurementPolicy(repeats=2, max_repeats=2, warmup=1,
+                                     clock=FakeClock(script)))
+        if prepare != "off":
+            be.prepare_batch(nests)
+        g = be.evaluate_batch(nests)
+        be.close()
+        return g
+
+    g_serial = run("off")
+    g_sync = run("sync")
+    np.testing.assert_array_equal(g_serial, g_sync)
+
+
+def test_env_prepare_eval_filters_cached(tmp_path):
+    be = _backend(prepare="sync")
+    env = LoopTuneEnv([BENCH], be, actions=ACTIONS)
+    nests = _walk(2)
+    env.gflops_batch([nests[0]])  # now cached in the ScheduleCache
+    compiles_before = be.compiles
+    n = env.prepare_eval(nests)
+    # only the cache-cold schedule was prepared
+    assert n == 1
+    assert be.compiles == compiles_before + 1
+    be.close()
+
+
+def test_numpy_backend_prepare_is_safe_noop():
+    be = make_backend("numpy")
+    assert not be.can_prepare
+    assert be.prepare_batch(_walk(1)) == 0
+    # cache_dir tolerated (popped) on compile-free backends
+    assert make_backend("numpy", cache_dir="/nonexistent") is not None
+    assert make_backend("tpu", cache_dir="/nonexistent") is not None
+
+
+# ---------------------------------------------------------------------------
+# Accounting end to end: SearchResult + tuner.stats()
+# ---------------------------------------------------------------------------
+
+
+def test_search_result_carries_compile_ledger():
+    be = _backend(prepare="sync")
+    env = LoopTuneEnv([BENCH], be, actions=ACTIONS)
+    res = greedy_search(env, 0, lookahead=1, steps=1, budget_s=30.0,
+                        max_evals=3, surrogate=None)
+    assert res.compile_misses >= 1  # the search traced something
+    assert res.compile_s > 0
+    assert res.compile_hits >= 0
+    be.close()
+
+
+def test_search_result_compile_fields_zero_on_analytical():
+    env = LoopTuneEnv([BENCH], "tpu", actions=ACTIONS)
+    res = greedy_search(env, 0, lookahead=1, steps=1, budget_s=5.0,
+                        max_evals=4, surrogate=None)
+    assert (res.compile_s, res.compile_hits, res.compile_misses) == (0.0, 0, 0)
+
+
+def test_tuner_stats_compile_section(tmp_path):
+    tuner = LoopTuner(policy="default", backend="jax",
+                      cache_dir=str(tmp_path / "kernels"))
+    tuner.tune(BENCH)
+    st = tuner.stats()["compile"]
+    assert st["compile_misses"] >= 1
+    assert st["store"]["artifacts"] >= 1
+    tuner.backend.close()
+    # compile-free backends report a stable zeroed shape
+    st0 = LoopTuner(policy="default", backend="tpu").stats()["compile"]
+    assert st0["compile_misses"] == 0 and st0["compile_hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Pool + bench smoke (fork interpreters -> slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_pool_workers_share_one_compile_per_key(tmp_path):
+    """Pool of N fanning out over fewer schedules: the shared store keeps
+    fleet compiles at ~1x per unique structure_key, not ~Nx."""
+    nests = _walk(2)
+    be = _backend(tmp_path, measure="pool", pool_workers=3)
+    g = be.evaluate_batch(nests)
+    assert np.isfinite(g).all() and (g > 0).all()
+    events = be.store.compile_events()
+    by_key = {}
+    for e in events:
+        by_key[e["key"]] = by_key.get(e["key"], 0) + 1
+    assert len(by_key) == 2  # every unique structure was compiled...
+    assert max(by_key.values()) == 1  # ...exactly once, fleet-wide
+    be.close()
+
+
+@pytest.mark.slow
+def test_bench_compile_cache_smoke(tmp_path, monkeypatch):
+    """The cold-vs-warm bench runs end to end and its headline invariants
+    hold even at smoke scale (regression guard for per-worker recompiles)."""
+    from benchmarks import common as bench_common
+    from benchmarks.bench_compile_cache import run
+
+    monkeypatch.setattr(bench_common, "RESULTS", tmp_path)
+    result = run(n_schedules=3, dims=(16, 16, 16), steps=2,
+                 pool=True, pool_workers=2, out_name="smoke")
+    assert result["warm_retraces"] == 0
+    assert result["warm_vs_cold_compile_ratio"] >= 2.0
+    assert result["pool"]["max_compiles_one_key"] == 1
+    saved = json.loads((tmp_path / "smoke.json").read_text())
+    assert saved["warm_retraces"] == 0
