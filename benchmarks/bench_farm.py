@@ -1,0 +1,174 @@
+"""Measurement-farm benchmark: remote parity + fault-tolerant degradation.
+
+Backs the two claims the farm subsystem (``core/measure_service.py`` +
+``launch/measure_farm.py``) makes:
+
+* **parity** — a localhost farm serving 2 concurrent tuner clients returns
+  ``Measurement`` records identical (0.0 gap, on the deterministic
+  analytical backend) to the local :class:`WorkerPool` path;
+* **degradation** — a farm process killed (SIGKILL) mid-run costs zero
+  failed tunes: every client backs off, warns once, degrades to local
+  in-process measurement, and the tune loop completes (degraded > 0,
+  clean exit).
+
+    PYTHONPATH=src python -m benchmarks.bench_farm
+
+The committed ``results/bench_farm.json`` backs the PR's acceptance
+criteria; ``host_contention`` annotates tainted passes.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import threading
+import time
+import warnings
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import LoopTuner, make_backend
+from repro.core.loop_ir import matmul_benchmark
+
+from .bench_measure import build_schedules
+from .common import save_result
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _spawn_farm(*extra_args) -> tuple:
+    env = dict(os.environ, PYTHONPATH=str(REPO_ROOT / "src"),
+               JAX_PLATFORMS="cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.measure_farm",
+         "--addr", "127.0.0.1:0", "--backend", "tpu", "--measure", "inproc",
+         *extra_args],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env, cwd=str(REPO_ROOT))
+    line = proc.stdout.readline()
+    m = re.search(r"listening on ([\d.]+):(\d+)", line)
+    if not m:
+        proc.kill()
+        raise RuntimeError(f"farm did not announce its address: {line!r}")
+    return proc, f"{m.group(1)}:{m.group(2)}"
+
+
+def run(
+    n_schedules: int = 12,
+    dims=(96, 96, 96),
+    steps: int = 6,
+    n_clients: int = 2,
+    n_tunes: int = 4,
+    out_name: str = "bench_farm",
+) -> Dict:
+    # the analytical backend is deterministic, so remote-vs-local parity is
+    # exact equality, not a noise-floor comparison
+    nests = build_schedules(n_schedules, dims=dims, steps=steps)
+    result: Dict = {"n_schedules": n_schedules, "dims": list(dims),
+                    "steps": steps, "n_clients": n_clients}
+
+    # -- phase 1: local WorkerPool ground truth -------------------------------
+    pool = make_backend("tpu", measure="pool", pool_workers=2)
+    try:
+        ms_pool = pool._ensure_pool().measure_batch(nests)
+    finally:
+        pool.close()
+    g_pool = np.array([m.gflops for m in ms_pool], dtype=np.float64)
+
+    # -- phase 2: localhost farm, N concurrent tuner clients ------------------
+    proc, addr = _spawn_farm()
+    try:
+        client_g: Dict[int, np.ndarray] = {}
+        client_stats: Dict[int, Dict] = {}
+        t0 = time.perf_counter()
+
+        def client(i: int) -> None:
+            rb = make_backend("remote", addr=addr, fallback="tpu")
+            ms = rb.measure_batch(nests)
+            client_g[i] = np.array([m.gflops for m in ms], dtype=np.float64)
+            client_stats[i] = rb.farm_stats()
+            rb.close()
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        farm_wall = time.perf_counter() - t0
+        gaps = [float(np.abs(client_g[i] - g_pool).max())
+                for i in range(n_clients)]
+        result["parity"] = {
+            "clients": n_clients,
+            "max_abs_gflops_gap_vs_pool": max(gaps),
+            "per_client_gap": gaps,
+            "wall_s": round(farm_wall, 3),
+            "farm_rtt_s": [client_stats[i]["farm_rtt_s"]
+                           for i in range(n_clients)],
+            "requests": sum(client_stats[i]["requests"]
+                            for i in range(n_clients)),
+            "degraded_clients": sum(client_stats[i]["degraded"]
+                                    for i in range(n_clients)),
+        }
+        print(f"parity: {n_clients} clients x {n_schedules} schedules, "
+              f"max |gflops gap| vs local pool = {max(gaps)}")
+    finally:
+        proc.kill()
+        proc.wait(timeout=10)
+
+    # -- phase 3: SIGKILL the farm mid-run; zero failed tunes ----------------
+    proc, addr = _spawn_farm()
+    rb = make_backend("remote", addr=addr, fallback="tpu",
+                      max_retries=1, backoff_base_s=0.02,
+                      connect_timeout_s=0.5)
+    tuner = LoopTuner(policy="search", backend=rb)
+    benches = [matmul_benchmark(64 + 32 * i, 64, 64) for i in range(n_tunes)]
+    failed = 0
+    entries: List[Dict] = []
+    killer = threading.Timer(0.15, proc.kill)  # lands mid-tune-loop
+    killer.start()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        for b in benches:
+            try:
+                entries.append(tuner.tune(b, max_evals=64))
+            except Exception:  # noqa: BLE001 — a failed tune is the defect
+                failed += 1
+    killer.join()
+    proc.wait(timeout=10)
+    stats = rb.farm_stats()
+    rb.close()
+    fallback_warnings = sum("falling back" in str(w.message) for w in caught)
+    result["kill_mid_run"] = {
+        "n_tunes": n_tunes,
+        "failed_tunes": failed,
+        "completed_tunes": len(entries),
+        "degraded": stats["degraded"],
+        "degraded_batches": stats["degraded_batches"],
+        "retries": stats["retries"],
+        "fallback_warnings": fallback_warnings,
+        "all_tunes_found_schedules": all(e["gflops"] > 0 for e in entries),
+    }
+    print(f"kill mid-run: {len(entries)}/{n_tunes} tunes completed, "
+          f"{failed} failed, degraded={stats['degraded']} "
+          f"(batches={stats['degraded_batches']}), "
+          f"{fallback_warnings} warning(s)")
+
+    save_result(out_name, result)
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=12)
+    ap.add_argument("--clients", type=int, default=2)
+    ap.add_argument("--tunes", type=int, default=4)
+    ap.add_argument("--out", default="bench_farm")
+    args = ap.parse_args()
+    run(n_schedules=args.n, n_clients=args.clients, n_tunes=args.tunes,
+        out_name=args.out)

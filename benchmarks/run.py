@@ -20,7 +20,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma list: rl,search,surrogate,tuned,kernels,"
                          "roofline,vec_env,networks,backend,measure,serve,"
-                         "compile_cache")
+                         "compile_cache,farm")
     args = ap.parse_args(argv)
 
     want = set(args.only.split(",")) if args.only else None
@@ -98,6 +98,16 @@ def main(argv=None) -> int:
             section("compile_cache", lambda: bench_compile_cache.run(
                 n_schedules=4, dims=(32, 32, 32), steps=3, pool_workers=2,
                 out_name="bench_compile_cache_quick"))
+    if should("farm"):
+        from . import bench_farm
+        if args.full:
+            section("farm", lambda: bench_farm.run(
+                n_schedules=12, n_clients=2, n_tunes=4,
+                out_name="bench_farm"))
+        else:
+            section("farm", lambda: bench_farm.run(
+                n_schedules=6, steps=4, n_clients=2, n_tunes=2,
+                out_name="bench_farm_quick"))
     if should("vec_env"):
         from . import bench_vec_env
         section("vec_env", lambda: bench_vec_env.run(

@@ -71,6 +71,12 @@ from .measure import (
     measure_settings,
     measurement_of,
 )
+from .measure_service import (
+    FarmUnavailableError,
+    MeasureServer,
+    RemoteMeasuredBackend,
+    RemoteMeasureError,
+)
 from .networks import MASK_SENTINEL, masked_argmax, masked_fill, masked_logits
 from .loop_ir import (
     Contraction,

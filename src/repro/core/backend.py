@@ -148,11 +148,22 @@ def _auto_backend(**kw) -> Backend:
         return _numpy_backend(**kw)
 
 
+def _remote_backend(**kw) -> Backend:
+    from .measure_service import RemoteMeasuredBackend
+
+    # compile-cache plumbing belongs to the farm-side executor, not the RPC
+    # client; tolerated for the same tuner-level-setting reason as numpy/tpu
+    kw.pop("cache_dir", None)
+    kw.pop("prepare", None)
+    return RemoteMeasuredBackend(**kw)
+
+
 register_backend("numpy", _numpy_backend)
 register_backend("cpu", _numpy_backend)  # historical alias
 register_backend("jax", _jax_backend)
 register_backend("tpu", _tpu_backend)
 register_backend("auto", _auto_backend)
+register_backend("remote", _remote_backend)
 
 
 def make_backend(spec: Union[str, Backend, None] = "auto", **kw) -> Backend:

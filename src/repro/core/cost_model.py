@@ -110,8 +110,9 @@ class TPUAnalyticalBackend(PoolHostBackend):
 
     def __init__(self, dtype_bytes: int = 2, vmem_budget: int = VMEM_BUDGET,
                  reg_budget: int = REG_BUDGET,
-                 measure: str = "inproc", pool_workers=None, policy=None):
-        self._init_pool_host(measure, pool_workers, policy)
+                 measure: str = "inproc", pool_workers=None, policy=None,
+                 pool_timeout_s=None):
+        self._init_pool_host(measure, pool_workers, policy, pool_timeout_s)
         self.dtype_bytes = dtype_bytes
         self.vmem_budget = vmem_budget
         self.reg_budget = reg_budget

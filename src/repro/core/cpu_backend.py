@@ -209,9 +209,11 @@ class CPUMeasuredBackend(MeasuredBackend):
         measure: str = "inproc",
         pool_workers: Optional[int] = None,
         isolated: bool = False,
+        pool_timeout_s: Optional[float] = None,
     ):
         super().__init__(policy=policy, repeats=repeats, measure=measure,
-                         pool_workers=pool_workers, isolated=isolated)
+                         pool_workers=pool_workers, isolated=isolated,
+                         pool_timeout_s=pool_timeout_s)
         self.vec_cap = vec_cap
         self.seed = seed
         # LRU, not clear-all-on-overflow: evaluating a 65th contraction must

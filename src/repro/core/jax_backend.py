@@ -367,6 +367,7 @@ class JaxJitBackend(MeasuredBackend):
         isolated: bool = False,
         cache_dir: Optional[str] = None,
         prepare: str = "thread",
+        pool_timeout_s: Optional[float] = None,
     ):
         import jax  # noqa: F401 — ImportError here drives make_backend("auto") fallback
 
@@ -375,7 +376,8 @@ class JaxJitBackend(MeasuredBackend):
         if prepare not in ("thread", "sync", "off"):
             raise ValueError(f"prepare must be thread|sync|off, got {prepare!r}")
         super().__init__(policy=policy, repeats=repeats, measure=measure,
-                         pool_workers=pool_workers, isolated=isolated)
+                         pool_workers=pool_workers, isolated=isolated,
+                         pool_timeout_s=pool_timeout_s)
         self.vec_cap = vec_cap
         self.seed = seed
         self.pallas = pallas

@@ -93,12 +93,17 @@ class PersistentKernelStore:
         wait_timeout_s: float = 60.0,
         stale_lock_s: float = 300.0,
         poll_s: float = 0.05,
+        skew_tolerance_s: float = 120.0,
     ):
         self.root = str(root)
         self.fingerprint = dict(fingerprint, store_format=STORE_FORMAT)
         self.wait_timeout_s = wait_timeout_s
         self.stale_lock_s = stale_lock_s
         self.poll_s = poll_s
+        #: extra margin on stale-lock aging: the lock owner's clock and ours
+        #: may disagree (shared cache dir across farm hosts), and aging out a
+        #: *live* builder's lock forks the build it was coordinating
+        self.skew_tolerance_s = skew_tolerance_s
         self.disabled = False
         # traffic counters (per process)
         self.hits = 0
@@ -221,9 +226,20 @@ class PersistentKernelStore:
             self.locks_taken += 1
             return True
         except FileExistsError:
-            # stale lock from a crashed builder: age it out and retry once
+            # stale lock from a crashed builder: age it out and retry once.
+            # Age against the timestamp the *owner* wrote into the lock, not
+            # the file mtime as seen through a shared filesystem — cross-host
+            # clock skew on an NFS cache dir can make a live builder's lock
+            # look minutes old — and pad with skew_tolerance_s either way.
             try:
-                if time.time() - lock.stat().st_mtime > self.stale_lock_s:
+                owner_t: Optional[float] = None
+                try:
+                    owner_t = float(json.loads(lock.read_text())["t"])
+                except (OSError, ValueError, TypeError, KeyError):
+                    pass  # pre-upgrade / torn lock: mtime is all we have
+                if owner_t is None:
+                    owner_t = lock.stat().st_mtime
+                if time.time() - owner_t > self.stale_lock_s + self.skew_tolerance_s:
                     lock.unlink()
                     return self.acquire_build_lock(key)
             except OSError:

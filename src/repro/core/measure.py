@@ -337,12 +337,17 @@ class PoolHostBackend(Backend):
 
     def _init_pool_host(self, measure: str,
                         pool_workers: Optional[int],
-                        policy: Optional[MeasurementPolicy]) -> None:
+                        policy: Optional[MeasurementPolicy],
+                        pool_timeout_s: Optional[float] = None) -> None:
         if measure not in ("inproc", "pool"):
             raise ValueError(f"measure must be 'inproc' or 'pool', got {measure!r}")
         self.measure_mode = measure
         self.pool_workers = pool_workers
         self.policy = policy
+        #: per-task hung-kill budget forwarded to the pool (None = pool
+        #: default) — the measurement farm sets this so a wedged schedule
+        #: bounds a client's batch instead of stalling it
+        self.pool_timeout_s = pool_timeout_s
         self._pool: Optional[WorkerPool] = None
 
     @abc.abstractmethod
@@ -354,9 +359,11 @@ class PoolHostBackend(Backend):
     def _ensure_pool(self) -> "WorkerPool":
         if self._pool is None:
             spec, kwargs, method = self.pool_spec()
+            extra = ({"task_timeout_s": self.pool_timeout_s}
+                     if self.pool_timeout_s is not None else {})
             self._pool = WorkerPool(spec, kwargs, policy=self.policy,
                                     n_workers=self.pool_workers,
-                                    start_method=method)
+                                    start_method=method, **extra)
         return self._pool
 
     def measure_settings(self) -> Dict[str, Any]:
@@ -399,6 +406,7 @@ class MeasuredBackend(PoolHostBackend):
         measure: str = "inproc",
         pool_workers: Optional[int] = None,
         isolated: bool = False,
+        pool_timeout_s: Optional[float] = None,
     ):
         if policy is None:
             policy = (MeasurementPolicy(
@@ -409,7 +417,7 @@ class MeasuredBackend(PoolHostBackend):
             raise ValueError(
                 f"conflicting repeats: {repeats} vs policy.repeats "
                 f"{policy.repeats} — set one or the other")
-        self._init_pool_host(measure, pool_workers, policy)
+        self._init_pool_host(measure, pool_workers, policy, pool_timeout_s)
         #: True inside a pool worker: a warm, quiescent process where the
         #: policy may elide per-measurement warmups once operands are hot
         self.isolated = isolated
@@ -630,6 +638,7 @@ class WorkerPool:
         kw = dict(self.kwargs)
         kw.pop("measure", None)  # workers always measure in-process
         kw.pop("pool_workers", None)
+        kw.pop("pool_timeout_s", None)  # hung-kill is the parent's job
         kw["policy"] = self.policy
         return kw
 

@@ -1,0 +1,638 @@
+"""Remote measurement farm: RPC timing service + client backend.
+
+LoopTune learns from *measured* rewards, which at fleet scale means the
+timing must move off the training host: AutoTVM's distributed RPC runners
+and loop_tool's CompilerGym service split both converge on a shared
+**measurement farm** that many tuner clients talk to over the network.
+This module is that farm, layered on the existing measurement subsystem:
+
+* :class:`MeasureServer` — a TCP service (length-prefixed JSON frames)
+  that wraps any registered backend on the *measuring* host.  Batches
+  arrive as ``(contraction, structure_key)`` pairs — the exact transport
+  the :class:`~repro.core.measure.WorkerPool` already uses — are rebuilt
+  with :meth:`LoopNest.from_structure_key`, measured through the server
+  backend (typically ``measure="pool"``, so batches parallelize across
+  the farm host's cores and the pool's hung-kill machinery bounds every
+  batch), and answered with full :class:`Measurement` records **plus the
+  measuring host's hardware descriptor**, so registry records are stamped
+  with where the timing actually ran, not where the tuner ran.
+
+* :class:`RemoteMeasuredBackend` — the client, registered as
+  ``make_backend("remote", addr="host:port")``.  Robustness is the point:
+  per-request deadlines, reconnect with exponential backoff and jitter,
+  and *graceful degradation* — a farm that is unreachable, killed
+  mid-batch, or persistently timing out warns once and falls back to
+  local in-process measurement (the ``fallback`` backend spec), so a tune
+  is never failed by the farm.  Counters
+  (``requests/retries/reconnects/degraded/farm_rtt``) ride
+  ``measure_stats()`` into ``tuner.stats()``.
+
+Wire protocol (version :data:`PROTO_VERSION`): each frame is a 4-byte
+big-endian length followed by that many bytes of UTF-8 JSON.  Requests are
+``{"op": "ping"}`` (handshake: hardware / peak / backend identity) and
+``{"op": "measure", "id": n, "nests": [[contraction, structure_key], ...]}``;
+replies echo ``id`` and carry either ``measurements`` (``Measurement.ship``
+tuples) or ``error`` (a server-side traceback).  A transport failure is
+retried; an ``error`` reply is re-raised — an evaluator bug on the farm is
+not a fault to retry around (the same rule the worker pool applies).
+"""
+from __future__ import annotations
+
+import json
+import random
+import socket
+import struct
+import threading
+import time
+import traceback
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from .backend import Backend, backend_name, make_backend
+from .loop_ir import Contraction, LoopNest, TensorSpec
+from .measure import (
+    MeasuredBackend,
+    Measurement,
+    MeasurementPolicy,
+    measure_local,
+)
+from .registry import current_hardware
+
+PROTO_VERSION = 1
+
+#: refuse frames beyond this (a corrupt length prefix must not OOM the host)
+MAX_FRAME_BYTES = 64 << 20
+
+
+class ProtocolError(RuntimeError):
+    """Malformed frame / reply shape — treated like a connection fault."""
+
+
+class FarmUnavailableError(ConnectionError):
+    """The farm could not serve a request within the retry budget."""
+
+
+class RemoteMeasureError(RuntimeError):
+    """The farm's evaluator raised — re-raised at the client, never retried."""
+
+
+# ---------------------------------------------------------------------------
+# Framing
+# ---------------------------------------------------------------------------
+
+
+def send_frame(sock: socket.socket, obj: Any) -> None:
+    data = json.dumps(obj).encode()
+    if len(data) > MAX_FRAME_BYTES:
+        raise ProtocolError(f"frame of {len(data)} bytes exceeds limit")
+    sock.sendall(struct.pack(">I", len(data)) + data)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    """``n`` bytes, or None on a clean EOF at a frame boundary."""
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            if buf:
+                raise ProtocolError("connection closed mid-frame")
+            return None
+        buf += chunk
+    return buf
+
+
+def recv_frame(sock: socket.socket) -> Optional[Any]:
+    """One decoded frame, or None when the peer closed the connection."""
+    header = _recv_exact(sock, 4)
+    if header is None:
+        return None
+    (n,) = struct.unpack(">I", header)
+    if n > MAX_FRAME_BYTES:
+        raise ProtocolError(f"frame length {n} exceeds limit")
+    data = _recv_exact(sock, n)
+    if data is None:
+        raise ProtocolError("connection closed before frame payload")
+    try:
+        return json.loads(data)
+    except ValueError as e:
+        raise ProtocolError(f"undecodable frame: {e}") from None
+
+
+# ---------------------------------------------------------------------------
+# Wire encoding for the schedule transport
+# ---------------------------------------------------------------------------
+
+
+def _tensor_to_wire(t: Optional[TensorSpec]) -> Optional[Dict[str, Any]]:
+    if t is None:
+        return None
+    return {"name": t.name, "iterators": list(t.iterators),
+            "dims": list(t.dims)}
+
+
+def _tensor_from_wire(d: Optional[Dict[str, Any]]) -> Optional[TensorSpec]:
+    if d is None:
+        return None
+    return TensorSpec(d["name"], tuple(d["iterators"]), tuple(d["dims"]))
+
+
+def contraction_to_wire(c: Contraction) -> Dict[str, Any]:
+    return {
+        "name": c.name,
+        "out": _tensor_to_wire(c.out),
+        "lhs": _tensor_to_wire(c.lhs),
+        "rhs": _tensor_to_wire(c.rhs),
+        "iter_sizes": dict(c.iter_sizes),
+    }
+
+
+def contraction_from_wire(d: Dict[str, Any]) -> Contraction:
+    return Contraction(
+        name=d["name"],
+        out=_tensor_from_wire(d["out"]),
+        lhs=_tensor_from_wire(d["lhs"]),
+        rhs=_tensor_from_wire(d["rhs"]),
+        iter_sizes={k: int(v) for k, v in d["iter_sizes"].items()},
+    )
+
+
+def structure_key_to_wire(key: Tuple) -> List:
+    name, body, n_compute, cursor = key
+    return [name, [list(level) for level in body], n_compute, cursor]
+
+
+def structure_key_from_wire(w: Sequence) -> Tuple:
+    name, body, n_compute, cursor = w
+    return (name, tuple((it, int(c), int(s)) for it, c, s in body),
+            int(n_compute), int(cursor))
+
+
+def nest_to_wire(nest: LoopNest) -> List:
+    return [contraction_to_wire(nest.contraction),
+            structure_key_to_wire(nest.structure_key())]
+
+
+def nest_from_wire(w: Sequence) -> LoopNest:
+    contraction = contraction_from_wire(w[0])
+    return LoopNest.from_structure_key(contraction,
+                                       structure_key_from_wire(w[1]))
+
+
+def parse_addr(addr: Union[str, Tuple[str, int]]) -> Tuple[str, int]:
+    """``"host:port"`` (or a ready pair) -> ``(host, port)``."""
+    if isinstance(addr, (tuple, list)):
+        host, port = addr
+        return str(host), int(port)
+    host, _, port = str(addr).rpartition(":")
+    if not host or not port:
+        raise ValueError(f"addr must be 'host:port', got {addr!r}")
+    return host, int(port)
+
+
+# ---------------------------------------------------------------------------
+# Server
+# ---------------------------------------------------------------------------
+
+
+class MeasureServer:
+    """The farm side: measure shipped schedules on this host's backend.
+
+    One thread per client connection; measurement itself is serialized
+    behind a lock (the :class:`WorkerPool` is not reentrant — two clients'
+    batches interleave at batch granularity, and the pool still
+    parallelizes each batch across cores).  Batch runtime is bounded by
+    the pool's existing hung-kill machinery (``task_timeout_s`` →
+    ``pool_timeout_s``): a hung schedule resolves as a marked-failed
+    record and the reply still goes out, so clients never wait on a
+    wedged farm batch forever.
+    """
+
+    def __init__(
+        self,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        backend: Union[str, Backend] = "auto",
+        backend_kwargs: Optional[Dict[str, Any]] = None,
+        max_requests: Optional[int] = None,
+    ):
+        self.backend = make_backend(backend, **(backend_kwargs or {}))
+        self.hardware = current_hardware()
+        self.max_requests = max_requests
+        self.requests = 0
+        self.errors = 0
+        self._measure_lock = threading.Lock()
+        self._state_lock = threading.Lock()
+        self._closed = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._conns: List[socket.socket] = []
+        self._listener = socket.create_server((host, int(port)))
+        self.host, self.port = self._listener.getsockname()[:2]
+
+    @property
+    def addr(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def start(self) -> "MeasureServer":
+        """Accept connections on a background thread; returns self."""
+        t = threading.Thread(target=self._accept_loop, daemon=True,
+                             name=f"looptune-farm-{self.port}")
+        t.start()
+        self._threads.append(t)
+        return t and self
+
+    def serve_forever(self) -> None:
+        """Accept connections on the calling thread until :meth:`close`."""
+        self._accept_loop()
+
+    def close(self) -> None:
+        if self._closed.is_set():
+            return
+        self._closed.set()
+        # shutdown() wakes a thread blocked in accept(); without it the
+        # in-flight syscall pins the kernel socket open past close() and the
+        # port stays bound (a restarted farm then can't take it back)
+        try:
+            self._listener.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        # sever live connections: a close() must look like a killed farm to
+        # clients, not a server that keeps answering through old sockets
+        with self._state_lock:
+            conns, self._conns = list(self._conns), []
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        close = getattr(self.backend, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self) -> "MeasureServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- the service loop ------------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._closed.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                return  # listener closed
+            with self._state_lock:
+                self._conns.append(conn)
+            t = threading.Thread(target=self._serve_conn, args=(conn,),
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            with conn:
+                while not self._closed.is_set():
+                    try:
+                        req = recv_frame(conn)
+                    except ProtocolError:
+                        return  # garbage in: drop the connection
+                    if req is None:
+                        return
+                    send_frame(conn, self._handle(req))
+                    if (self.max_requests is not None
+                            and self.requests >= self.max_requests):
+                        self.close()
+                        return
+        except OSError:
+            return  # client went away mid-reply
+        finally:
+            with self._state_lock:
+                if conn in self._conns:
+                    self._conns.remove(conn)
+
+    def _handle(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        op = req.get("op")
+        reply: Dict[str, Any] = {"id": req.get("id"), "proto": PROTO_VERSION}
+        try:
+            if op == "ping":
+                reply.update(ok=True, hardware=self.hardware,
+                             backend=backend_name(self.backend),
+                             peak=float(self.backend.peak()))
+            elif op == "measure":
+                nests = [nest_from_wire(w) for w in req["nests"]]
+                with self._state_lock:
+                    self.requests += 1
+                with self._measure_lock:
+                    if isinstance(self.backend, MeasuredBackend):
+                        ms = self.backend.measure_batch(nests)
+                    else:
+                        ms = [measure_local(self.backend, n) for n in nests]
+                reply.update(ok=True, hardware=self.hardware,
+                             measurements=[list(m.ship()) for m in ms])
+            else:
+                reply.update(ok=False, error=f"unknown op {op!r}")
+        except Exception:  # noqa: BLE001 — report, let the client decide
+            with self._state_lock:
+                self.errors += 1
+            reply.update(ok=False, error=traceback.format_exc())
+        return reply
+
+    def stats(self) -> Dict[str, Any]:
+        return {"addr": self.addr, "requests": self.requests,
+                "errors": self.errors, "hardware": self.hardware,
+                "backend": backend_name(self.backend)}
+
+
+# ---------------------------------------------------------------------------
+# Client backend
+# ---------------------------------------------------------------------------
+
+
+class RemoteMeasuredBackend(MeasuredBackend):
+    """Measurement backend whose timings come from a remote farm.
+
+    ``make_backend("remote", addr="host:port", fallback="numpy")``.  The
+    client ships ``(contraction, structure_key)`` batches, receives full
+    :class:`Measurement` records plus the farm host's hardware descriptor
+    (:meth:`measured_hardware` — the registry stamps records with it), and
+    normalizes rewards by the *farm's* ``peak()`` (learned from the
+    handshake), since that is the machine producing the GFLOPS.
+
+    Fault model: transport failures (connect refused, request deadline
+    exceeded, connection dropped mid-batch) are retried with exponential
+    backoff + jitter up to ``max_retries``; past the budget the backend
+    *degrades* — warns once, and this and every later batch measures on
+    the local ``fallback`` backend instead.  A tune is therefore never
+    failed by the farm.  Server-side evaluator errors re-raise.
+    """
+
+    name = "remote"
+
+    def __init__(
+        self,
+        addr: Union[str, Tuple[str, int]],
+        fallback: str = "auto",
+        fallback_kwargs: Optional[Dict[str, Any]] = None,
+        policy: Optional[MeasurementPolicy] = None,
+        repeats: Optional[int] = None,
+        deadline_s: float = 120.0,
+        connect_timeout_s: float = 5.0,
+        max_retries: int = 3,
+        backoff_base_s: float = 0.05,
+        backoff_max_s: float = 2.0,
+    ):
+        super().__init__(policy=policy, repeats=repeats, measure="inproc")
+        self.measure_mode = "remote"
+        self.host, self.port = parse_addr(addr)
+        if not isinstance(fallback, str):
+            raise TypeError(
+                "fallback must be a backend registry name (the degraded "
+                f"path is built lazily), got {type(fallback).__name__}")
+        self.fallback_spec = fallback
+        self.fallback_kwargs = dict(fallback_kwargs or {})
+        self.deadline_s = deadline_s
+        self.connect_timeout_s = connect_timeout_s
+        self.max_retries = max_retries
+        self.backoff_base_s = backoff_base_s
+        self.backoff_max_s = backoff_max_s
+        self._sock: Optional[socket.socket] = None
+        self._local: Optional[Backend] = None
+        self._req_id = 0
+        self.degraded = False
+        self.degraded_reason: Optional[str] = None
+        self.remote_hardware: Optional[str] = None
+        self.remote_backend: Optional[str] = None
+        self._remote_peak: Optional[float] = None
+        # the farm counters tuner.stats() reports
+        self.n_requests = 0
+        self.n_retries = 0
+        self.n_connects = 0
+        self.n_reconnects = 0
+        self.n_degraded_batches = 0
+        self.farm_rtt_s = 0.0
+        self.last_rtt_s = 0.0
+
+    # -- executor surface (never used: measurement happens remotely) ----------
+
+    def run_once(self, nest: LoopNest) -> None:
+        raise RuntimeError("RemoteMeasuredBackend does not execute locally; "
+                           "measurement is remote (or via the fallback "
+                           "backend when degraded)")
+
+    def pool_spec(self) -> Tuple[str, Dict[str, Any], Optional[str]]:
+        raise TypeError("a remote backend cannot host a worker pool — run "
+                        "the pool on the farm side (measure_farm --measure "
+                        "pool)")
+
+    # -- connection management -------------------------------------------------
+
+    def _drop_conn(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def _ensure_conn(self) -> socket.socket:
+        if self._sock is not None:
+            return self._sock
+        sock = socket.create_connection((self.host, self.port),
+                                        timeout=self.connect_timeout_s)
+        try:
+            send_frame(sock, {"op": "ping"})
+            hello = recv_frame(sock)
+            if hello is None or not hello.get("ok"):
+                raise ProtocolError(f"bad handshake reply: {hello!r}")
+        except BaseException:
+            sock.close()
+            raise
+        self.n_connects += 1
+        if self.n_connects > 1:
+            self.n_reconnects += 1
+        self.remote_hardware = hello.get("hardware")
+        self.remote_backend = hello.get("backend")
+        if hello.get("peak"):
+            self._remote_peak = float(hello["peak"])
+        self._sock = sock
+        return sock
+
+    def _request(self, payload: Dict[str, Any]) -> Dict[str, Any]:
+        """One request with reconnect + capped exponential backoff/jitter.
+        Raises :class:`FarmUnavailableError` past the retry budget and
+        :class:`RemoteMeasureError` on an explicit server error reply."""
+        self._req_id += 1
+        payload = dict(payload, id=self._req_id, deadline_s=self.deadline_s)
+        last_err: Optional[BaseException] = None
+        for attempt in range(self.max_retries + 1):
+            if attempt:
+                self.n_retries += 1
+                delay = min(self.backoff_max_s,
+                            self.backoff_base_s * (2 ** (attempt - 1)))
+                # full jitter: desynchronize a fleet of clients hammering a
+                # farm that just came back
+                time.sleep(delay * (0.5 + random.random()))
+            try:
+                sock = self._ensure_conn()
+                sock.settimeout(self.deadline_s)
+                self.n_requests += 1
+                t0 = time.perf_counter()
+                send_frame(sock, payload)
+                reply = recv_frame(sock)
+                rtt = time.perf_counter() - t0
+                self.farm_rtt_s += rtt
+                self.last_rtt_s = rtt
+                if reply is None:
+                    raise ProtocolError("farm closed the connection")
+                if reply.get("id") != self._req_id:
+                    raise ProtocolError(
+                        f"reply id {reply.get('id')} != {self._req_id}")
+                if not reply.get("ok"):
+                    raise RemoteMeasureError(
+                        f"measurement farm at {self.host}:{self.port} "
+                        f"failed the request:\n{reply.get('error')}")
+                return reply
+            except RemoteMeasureError:
+                self._drop_conn()
+                raise
+            except (OSError, ProtocolError) as e:
+                last_err = e
+                self._drop_conn()
+        raise FarmUnavailableError(
+            f"measurement farm at {self.host}:{self.port} unavailable "
+            f"after {self.max_retries + 1} attempts: {last_err}")
+
+    # -- degradation ------------------------------------------------------------
+
+    def _degrade(self, reason: str) -> None:
+        if not self.degraded:
+            self.degraded = True
+            self.degraded_reason = reason
+            warnings.warn(
+                f"measurement farm at {self.host}:{self.port} unavailable "
+                f"({reason}); falling back to local in-process measurement "
+                f"on backend {self.fallback_spec!r}", stacklevel=3)
+        self._drop_conn()
+
+    def _ensure_local(self) -> Backend:
+        if self._local is None:
+            kw = dict(self.fallback_kwargs)
+            kw.setdefault("policy", self.policy)
+            self._local = make_backend(self.fallback_spec, **kw)
+        return self._local
+
+    # -- measurement -------------------------------------------------------------
+
+    def measure(self, nest: LoopNest, worker: int = -1) -> Measurement:
+        return self.measure_batch([nest])[0]
+
+    def measure_batch(self, nests: Sequence[LoopNest]) -> List[Measurement]:
+        if not nests:
+            return []
+        if not self.degraded:
+            try:
+                reply = self._request(
+                    {"op": "measure",
+                     "nests": [nest_to_wire(n) for n in nests]})
+                shipped = reply.get("measurements")
+                if not isinstance(shipped, list) or len(shipped) != len(nests):
+                    raise ProtocolError(
+                        f"{len(nests)} nests sent, "
+                        f"{len(shipped) if isinstance(shipped, list) else '?'}"
+                        " measurements returned")
+                if reply.get("hardware"):
+                    self.remote_hardware = reply["hardware"]
+                ms = [Measurement.unship(s) for s in shipped]
+                return [self._record(n, m) for n, m in zip(nests, ms)]
+            except (FarmUnavailableError, ProtocolError) as e:
+                self._degrade(str(e))
+        self.n_degraded_batches += 1
+        local = self._ensure_local()
+        if isinstance(local, MeasuredBackend):
+            ms = local.measure_batch(nests)
+        else:
+            ms = [measure_local(local, n) for n in nests]
+        return [self._record(n, m) for n, m in zip(nests, ms)]
+
+    # -- Backend protocol ---------------------------------------------------------
+
+    def peak(self) -> float:
+        """The farm host's peak GFLOPS (handshake) — rewards must be
+        normalized by the machine doing the timing.  Unreachable farm:
+        degrade and use the fallback's peak."""
+        if self._remote_peak is None and not self.degraded:
+            try:
+                self._request({"op": "ping"})
+            except FarmUnavailableError as e:
+                self._degrade(str(e))
+        if self._remote_peak is not None and not self.degraded:
+            return self._remote_peak
+        return float(self._ensure_local().peak())
+
+    # -- observability -------------------------------------------------------------
+
+    def measured_hardware(self) -> Optional[str]:
+        """The measuring host's descriptor for registry stamping: the farm's
+        (from the measure reply) while remote, None once degraded — records
+        then carry the local host via ``current_hardware()``."""
+        return None if self.degraded else self.remote_hardware
+
+    def measured_backend_name(self) -> Optional[str]:
+        """The backend that actually timed, for registry record keys: the
+        farm's executor while remote (a record keyed ``"remote"`` would say
+        nothing about where the schedule is good), the fallback spec once
+        degraded, None before the first handshake."""
+        if self.degraded:
+            return self.fallback_spec
+        return self.remote_backend
+
+    def farm_stats(self) -> Dict[str, Any]:
+        return {
+            "addr": f"{self.host}:{self.port}",
+            "requests": self.n_requests,
+            "retries": self.n_retries,
+            "connects": self.n_connects,
+            "reconnects": self.n_reconnects,
+            "degraded": int(self.degraded),
+            "degraded_batches": self.n_degraded_batches,
+            "degraded_reason": self.degraded_reason,
+            "farm_rtt_s": round(self.farm_rtt_s, 4),
+            "last_rtt_s": round(self.last_rtt_s, 4),
+            "remote_hardware": self.remote_hardware,
+            "remote_backend": self.remote_backend,
+        }
+
+    def measure_stats(self) -> Dict[str, Any]:
+        out = super().measure_stats()
+        out["mode"] = "remote"
+        out["farm"] = self.farm_stats()
+        return out
+
+    def measure_settings(self) -> Dict[str, Any]:
+        return {
+            "mode": "remote",
+            "addr": f"{self.host}:{self.port}",
+            "fallback": self.fallback_spec,
+            "deadline_s": self.deadline_s,
+            "max_retries": self.max_retries,
+            "policy": self.policy.to_dict() if self.policy else None,
+        }
+
+    def close(self) -> None:
+        self._drop_conn()
+        if self._local is not None:
+            close = getattr(self._local, "close", None)
+            if close is not None:
+                close()
+            self._local = None

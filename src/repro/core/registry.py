@@ -62,7 +62,9 @@ def current_hardware() -> str:
             import platform
 
             kind = f"cpu-{platform.machine() or 'unknown'}"
-        _HARDWARE = str(kind).replace("|", "/")
+        # raw descriptor: record keys escape reserved characters themselves,
+        # so a device kind containing ``|`` survives round-trips verbatim
+        _HARDWARE = str(kind)
     return _HARDWARE
 
 
@@ -122,20 +124,52 @@ class ScheduleRegistry:
         component of the v2 record key)."""
         return f"{kernel}:{'x'.join(map(str, dims))}:{dtype}"
 
+    # ``|`` joins the three key components, so a component containing a
+    # literal ``|`` (real device-kind strings do: "TPU v5 lite|pod") must be
+    # escaped on write or the fields shift on reload.  %-style escaping keeps
+    # legacy keys (no reserved characters) byte-identical.
     @staticmethod
-    def record_key(structure_key: str, backend: str, hardware: str) -> str:
-        return f"{structure_key}|{backend}|{hardware}"
+    def _escape(component: str) -> str:
+        return component.replace("%", "%25").replace("|", "%7C")
 
     @staticmethod
-    def split_key(record_key: str) -> Tuple[str, str, str]:
-        sk, backend, hardware = record_key.rsplit("|", 2)
+    def _unescape(component: str) -> str:
+        return component.replace("%7C", "|").replace("%25", "%")
+
+    @classmethod
+    def record_key(cls, structure_key: str, backend: str, hardware: str) -> str:
+        return "|".join(cls._escape(str(c))
+                        for c in (structure_key, backend, hardware))
+
+    @classmethod
+    def split_key(cls, record_key: str) -> Tuple[str, str, str]:
+        parts = record_key.split("|")
+        if len(parts) != 3:
+            raise ValueError(
+                f"un-parseable registry record key {record_key!r}: expected "
+                f"3 |-separated components, got {len(parts)}")
+        sk, backend, hardware = (cls._unescape(p) for p in parts)
         return sk, backend, hardware
 
     # -- schema / persistence -----------------------------------------------
 
     def _load(self, doc: Any) -> None:
         if isinstance(doc, dict) and doc.get("version") == SCHEMA_VERSION:
-            self._table = dict(doc.get("entries", {}))
+            table: Dict[str, dict] = {}
+            dropped = 0
+            for k, entry in dict(doc.get("entries", {})).items():
+                try:
+                    self.split_key(k)
+                except ValueError:
+                    dropped += 1
+                    continue
+                table[k] = entry
+            if dropped:
+                warnings.warn(
+                    f"registry: dropped {dropped} record(s) with "
+                    "un-parseable keys (written before |-escaping, or "
+                    "corrupted); re-tune to regenerate them", stacklevel=2)
+            self._table = table
             return
         # v1 migration shim: a flat {kernel:dims:dtype -> entry} table from
         # before backend/hardware keying.  Entries become wildcard records

@@ -227,8 +227,17 @@ class LoopTuner:
         mfor = getattr(self.backend, "measurement_for", None)
         if mfor is not None and nest is not None:
             measurement = mfor(nest)
+        # stamp the *measuring* host: with a remote farm the timing ran on
+        # the farm's hardware, and the record key must say so — local
+        # current_hardware() (registry.put's default) only when the backend
+        # has no better answer (or the farm degraded to local fallback)
+        mhw = getattr(self.backend, "measured_hardware", None)
+        hardware = mhw() if mhw is not None else None
+        mbn = getattr(self.backend, "measured_backend_name", None)
+        backend = (mbn() if mbn is not None else None) or self.backend_kind
         self.registry.put(kernel, dims, gflops, list(actions), nest,
-                          dtype=dtype, backend=self.backend_kind,
+                          dtype=dtype, backend=backend,
+                          hardware=hardware,
                           measurement=measurement,
                           provenance=self.provenance)
         return dict(self.registry.get(kernel, dims, dtype))
@@ -329,6 +338,8 @@ class LoopTuner:
         active reward calibration."""
         ms = getattr(self.backend, "measure_stats", None)
         cs = getattr(self.backend, "compile_stats", None)
+        measurement = {"settings": measure_settings(self.backend),
+                       **(ms() if ms is not None else {})}
         return {
             "policy": self.policy,
             "backend": self.backend_kind,
@@ -344,8 +355,11 @@ class LoopTuner:
             "surrogate": {"mode": self.surrogate,
                           **(self._scorer.stats()
                              if self._scorer is not None else {})},
-            "measurement": {"settings": measure_settings(self.backend),
-                            **(ms() if ms is not None else {})},
+            # "measurement" is the historical name; "measure" aliases the
+            # same dict so farm counters (requests/retries/reconnects/
+            # degraded/farm_rtt under ["farm"]) read under either spelling
+            "measurement": measurement,
+            "measure": measurement,
             "calibration": dict(self.calibration),
         }
 

@@ -121,16 +121,34 @@ def _parse_matmul_spec(spec: str, a_shape, b_shape):
     contracted, the contracted index is the trailing lhs dim, and the
     output is ``lhs_free + rhs_free`` — i.e. ``...k,kn->...n`` and the
     transposed-weight form ``...k,nk->...n`` (logits against an embedding
-    table).  Returns ``(m, k, n, transpose_rhs)`` with leading lhs dims
-    folded into m, matching how ``launch/tune`` harvests workload keys.
+    table).  An lhs/out ellipsis stands for the leading (batch) dims of
+    ``a`` and folds into ``m`` exactly like explicit letters, so
+    ``"...k,kn->...n"`` and ``"abk,kn->abn"`` on the same shapes resolve to
+    the same ``(m, k, n)`` workload key.  Returns
+    ``(m, k, n, transpose_rhs)`` with leading lhs dims folded into m,
+    matching how ``launch/tune`` harvests workload keys.
     """
-    if "->" not in spec or "..." in spec:
+    if "->" not in spec:
         return None
     ins, out = spec.split("->")
     if ins.count(",") != 1:
         return None
     lhs, rhs = ins.split(",")
-    if len(rhs) != 2 or len(lhs) != len(a_shape) or len(rhs) != len(b_shape):
+    ellipsis = lhs.startswith("...") and out.startswith("...")
+    if ellipsis:
+        lhs, out = lhs[3:], out[3:]
+    # after stripping a matched lhs/out prefix, any remaining "..." (rhs
+    # ellipsis, mid-spec, or one side only) is a shape we don't tune
+    if "..." in lhs or "..." in rhs or "..." in out:
+        return None
+    if ellipsis:
+        # the ellipsis absorbs len(a_shape) - len(lhs) leading batch dims;
+        # the explicit letters must still cover at least the contracted dim
+        if not lhs or len(lhs) > len(a_shape):
+            return None
+    elif len(lhs) != len(a_shape):
+        return None
+    if len(rhs) != 2 or len(rhs) != len(b_shape):
         return None
     if len(set(lhs)) != len(lhs) or len(set(rhs)) != len(rhs):
         return None

@@ -1,0 +1,89 @@
+"""Measurement-farm daemon: serve wall-clock timings to remote tuners.
+
+Runs a :class:`~repro.core.measure_service.MeasureServer` on this host —
+the machine whose hardware the timings should reflect — and serves any
+number of tuner clients (``launch/tune --farm HOST:PORT``, or
+``make_backend("remote", addr=...)`` directly).  The default
+``--measure pool`` wraps the warm pinned :class:`WorkerPool`, so client
+batches parallelize across this host's cores and a hung schedule is
+bounded by ``--task-timeout-s`` (the pool's hung-kill machinery) instead
+of wedging the farm.
+
+    PYTHONPATH=src python -m repro.launch.measure_farm \
+        --addr 0.0.0.0:7461 --backend jax --measure pool
+
+The first stdout line is ``[farm] listening on HOST:PORT ...`` (flushed),
+so launchers and tests can scrape the bound port when ``--addr`` uses
+port 0 (ephemeral).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, Optional
+
+from repro.core.measure import MeasurementPolicy
+from repro.core.measure_service import MeasureServer, parse_addr
+
+
+def build_server(
+    addr: str = "127.0.0.1:0",
+    backend: str = "auto",
+    measure: str = "pool",
+    pool_workers: Optional[int] = None,
+    task_timeout_s: Optional[float] = 120.0,
+    repeats: Optional[int] = None,
+    max_requests: Optional[int] = None,
+) -> MeasureServer:
+    host, port = parse_addr(addr)
+    kwargs: Dict[str, Any] = {"measure": measure}
+    if measure == "pool":
+        kwargs["pool_workers"] = pool_workers
+        kwargs["pool_timeout_s"] = task_timeout_s
+    if repeats is not None:
+        kwargs["policy"] = MeasurementPolicy(
+            repeats=repeats,
+            max_repeats=max(repeats, MeasurementPolicy.max_repeats))
+    return MeasureServer(host=host, port=port, backend=backend,
+                         backend_kwargs=kwargs, max_requests=max_requests)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--addr", default="127.0.0.1:0", metavar="HOST:PORT",
+                    help="bind address (port 0 = ephemeral, printed on "
+                         "the first stdout line)")
+    ap.add_argument("--backend", default="auto",
+                    help="executor doing the timing: numpy|jax|tpu|auto")
+    ap.add_argument("--measure", default="pool", choices=("pool", "inproc"),
+                    help="pool = parallelize batches across this host's "
+                         "cores with hung-kill bounds (default)")
+    ap.add_argument("--pool-workers", type=int, default=None)
+    ap.add_argument("--task-timeout-s", type=float, default=120.0,
+                    help="per-schedule hung-kill budget inside the pool")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="base best-of window (default: policy default)")
+    ap.add_argument("--max-requests", type=int, default=None,
+                    help="exit after N measure requests (tests/smoke)")
+    args = ap.parse_args(argv)
+
+    server = build_server(
+        addr=args.addr, backend=args.backend, measure=args.measure,
+        pool_workers=args.pool_workers, task_timeout_s=args.task_timeout_s,
+        repeats=args.repeats, max_requests=args.max_requests)
+    print(f"[farm] listening on {server.addr} "
+          f"backend={args.backend} measure={args.measure} "
+          f"hardware={server.hardware!r}", flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.close()
+    print("[farm] stopped", json.dumps(server.stats()), flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

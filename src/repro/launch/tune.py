@@ -22,6 +22,7 @@ import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import ShapeCell, get_config, input_specs
+from repro.core.backend import make_backend
 from repro.core.loop_ir import Contraction, matmul_benchmark
 from repro.core.registry import ScheduleRegistry
 from repro.core.tuner import LoopTuner
@@ -100,6 +101,7 @@ def tune_model(
     max_len: int = 64,
     kinds: Sequence[str] = ("decode", "prefill"),
     kernel_cache: Optional[str] = None,
+    farm: Optional[str] = None,
 ) -> Dict[str, Any]:
     """Tune every contraction a model config lowers to; persist the table.
 
@@ -118,12 +120,17 @@ def tune_model(
     if registry is None:
         registry = ScheduleRegistry(registry_path)
     if tuner is None:
+        # --farm: timings come from a remote measurement farm; ``backend``
+        # becomes the local fallback the client degrades to if the farm is
+        # unreachable (a tune is never failed by the farm)
+        tune_backend = (make_backend("remote", addr=farm, fallback=backend)
+                        if farm is not None else backend)
         if checkpoint is not None:
-            tuner = LoopTuner.from_checkpoint(checkpoint, backend=backend,
+            tuner = LoopTuner.from_checkpoint(checkpoint, backend=tune_backend,
                                               registry=registry,
                                               cache_dir=kernel_cache)
         else:
-            tuner = LoopTuner(policy=policy, backend=backend,
+            tuner = LoopTuner(policy=policy, backend=tune_backend,
                               registry=registry, cache_dir=kernel_cache)
 
     records = harvest_model(cfg, batch=batch, prompt_len=prompt_len,
@@ -147,6 +154,7 @@ def tune_model(
     elif registry.path:
         registry.save()
     compile_stats = getattr(tuner.backend, "compile_stats", None)
+    farm_stats = getattr(tuner.backend, "farm_stats", None)
     return {
         "arch": cfg.name,
         "kinds": list(kinds),
@@ -159,6 +167,7 @@ def tune_model(
         "registry_path": registry_path or registry.path,
         "kernel_cache": kernel_cache,
         "compile": compile_stats() if compile_stats is not None else None,
+        "farm": farm_stats() if farm_stats is not None else None,
         "tune_time_s": round(time.perf_counter() - t0, 2),
         "contractions": [
             {"m": r["m"], "k": r["k"], "n": r["n"], "dtype": r["dtype"],
@@ -189,6 +198,10 @@ def main(argv=None) -> int:
                     help="persistent compiled-kernel store dir (jax "
                          "backends; default: <registry>.kernels; 'off' "
                          "disables)")
+    ap.add_argument("--farm", default=None, metavar="HOST:PORT",
+                    help="measure on a remote farm (repro.launch."
+                         "measure_farm); --backend becomes the local "
+                         "fallback if the farm is unreachable")
     args = ap.parse_args(argv)
 
     # the kernel store lives beside the registry by default: the artifacts
@@ -206,7 +219,7 @@ def main(argv=None) -> int:
         backend=args.backend, budget_s=args.budget_s,
         eval_budget=args.eval_budget, max_contractions=args.max_contractions,
         smoke=not args.full, batch=args.batch, prompt_len=args.prompt_len,
-        max_len=args.max_len, kernel_cache=kernel_cache)
+        max_len=args.max_len, kernel_cache=kernel_cache, farm=args.farm)
     print("[tune]", json.dumps(report, indent=1), flush=True)
     return 0
 

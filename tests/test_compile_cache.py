@@ -6,7 +6,9 @@ Fast tests run the real JAX tracer on tiny (16^3) matmuls; the
 process-pool race and the bench smoke fork interpreters and are marked
 ``slow``."""
 import json
+import os
 import threading
+import time
 import warnings
 import zlib
 from pathlib import Path
@@ -109,13 +111,77 @@ def test_store_build_lock_excludes_and_releases(tmp_path):
 
 
 def test_store_stale_lock_ages_out(tmp_path):
-    a = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=0.0)
+    a = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=0.0,
+                              skew_tolerance_s=0.0)
     key = ("k", 1)
     assert a.acquire_build_lock(key)
     # a "crashed builder"'s lock (age > stale_lock_s=0) must not block the
     # fleet forever: the next builder steals it
-    b = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=0.0)
+    b = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=0.0,
+                              skew_tolerance_s=0.0)
     assert b.acquire_build_lock(key)
+
+
+def test_stale_lock_ages_on_owner_timestamp_not_mtime(tmp_path):
+    # back-dated owner timestamp (builder crashed long ago): stolen even
+    # though the file mtime is fresh — the contents are the truth
+    a = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=1.0,
+                              skew_tolerance_s=0.5)
+    key = ("k", 1)
+    assert a.acquire_build_lock(key)
+    lock = a._lock(key)
+    lock.write_text(json.dumps({"pid": 1, "t": time.time() - 100.0}))
+    b = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=1.0,
+                              skew_tolerance_s=0.5)
+    assert b.acquire_build_lock(key)
+    b.release_build_lock(key)
+
+
+def test_live_lock_with_skewed_mtime_is_not_stolen(tmp_path):
+    # regression: aging used to compare local time.time() to lock mtime —
+    # on a shared cache dir a skewed fileserver clock made a *live*
+    # builder's lock look ancient.  The owner's written timestamp is
+    # fresh, so the lock must hold regardless of mtime.
+    a = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=1.0,
+                              skew_tolerance_s=0.5)
+    key = ("k", 1)
+    assert a.acquire_build_lock(key)
+    lock = a._lock(key)
+    old = time.time() - 10_000.0
+    os.utime(lock, (old, old))
+    b = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=1.0,
+                              skew_tolerance_s=0.5)
+    assert not b.acquire_build_lock(key)
+    a.release_build_lock(key)
+
+
+def test_forward_dated_lock_holds(tmp_path):
+    # owner clock ahead of ours (negative age): never stale
+    a = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=0.0,
+                              skew_tolerance_s=0.0)
+    key = ("k", 1)
+    assert a.acquire_build_lock(key)
+    lock = a._lock(key)
+    lock.write_text(json.dumps({"pid": 1, "t": time.time() + 1000.0}))
+    old = time.time() - 10_000.0
+    os.utime(lock, (old, old))  # mtime alone would say "steal it"
+    b = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=0.0,
+                              skew_tolerance_s=0.0)
+    assert not b.acquire_build_lock(key)
+
+
+def test_torn_lock_contents_fall_back_to_mtime(tmp_path):
+    a = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=1.0,
+                              skew_tolerance_s=0.5)
+    key = ("k", 1)
+    assert a.acquire_build_lock(key)
+    lock = a._lock(key)
+    lock.write_text("")  # torn write from a crashing builder
+    old = time.time() - 100.0
+    os.utime(lock, (old, old))
+    b = PersistentKernelStore(str(tmp_path), {"v": 1}, stale_lock_s=1.0,
+                              skew_tolerance_s=0.5)
+    assert b.acquire_build_lock(key)  # mtime age 100 > 1.5: stolen
 
 
 def test_store_wait_timeout_returns_none(tmp_path):

@@ -1,0 +1,450 @@
+"""Measurement farm: wire protocol, parity, and fault injection.
+
+The contract under test (``core/measure_service.py``): a remote farm
+returns byte-identical ``Measurement`` records to the local measurement
+stack on a deterministic backend, stamps records with the *measuring*
+host's hardware, and every farm fault — unreachable, killed mid-batch,
+deadline exceeded, restarted — degrades to local measurement or
+reconnects; a tune is never failed by the farm.  Tests that spawn real
+farm processes are marked ``slow``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import socket
+import subprocess
+import sys
+import threading
+import time
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    LoopTuner,
+    MeasureServer,
+    RemoteMeasuredBackend,
+    RemoteMeasureError,
+    ScheduleRegistry,
+    make_backend,
+)
+from repro.core.cost_model import TPUAnalyticalBackend
+from repro.core.loop_ir import LoopNest, matmul_benchmark
+from repro.core.measure_service import (
+    FarmUnavailableError,
+    MAX_FRAME_BYTES,
+    ProtocolError,
+    nest_from_wire,
+    nest_to_wire,
+    parse_addr,
+    recv_frame,
+    send_frame,
+)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+BENCH = matmul_benchmark(64, 64, 64)
+
+
+def _walk(bench, steps=4, seed=0):
+    """A deterministic non-trivial schedule of ``bench``."""
+    rng = np.random.default_rng(seed)
+    nest = LoopNest(bench)
+    for _ in range(steps):
+        acts = nest.legal_actions() if hasattr(nest, "legal_actions") else []
+        if not acts:
+            break
+        nest = nest.apply(acts[rng.integers(len(acts))])
+    return nest
+
+
+def _schedules(n=4, seed=0):
+    from repro.core.actions import CPU_SPLITS, build_action_space
+    from repro.core.actions import apply_action, is_legal
+
+    actions = build_action_space(CPU_SPLITS)
+    rng = np.random.default_rng(seed)
+    out, seen = [], set()
+    root = LoopNest(BENCH)
+    tries = 0
+    while len(out) < n and tries < 200:
+        tries += 1
+        cur = root.clone()
+        for _ in range(4):
+            legal = [a for a in actions if is_legal(cur, a)]
+            if not legal:
+                break
+            apply_action(cur, legal[rng.integers(len(legal))])
+        k = cur.structure_key()
+        if k not in seen:
+            seen.add(k)
+            out.append(cur)
+    return out
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+class _SleepyBackend(TPUAnalyticalBackend):
+    """Analytical backend that dawdles past any client deadline."""
+
+    def __init__(self, sleep_s: float):
+        super().__init__()
+        self.sleep_s = sleep_s
+
+    def evaluate(self, nest):
+        time.sleep(self.sleep_s)
+        return super().evaluate(nest)
+
+
+class _ExplodingBackend(TPUAnalyticalBackend):
+    def evaluate(self, nest):
+        raise RuntimeError("evaluator bug on the farm")
+
+
+class _KillerBackend(TPUAnalyticalBackend):
+    """Kills its own server mid-measure — the in-process stand-in for a
+    farm process dying while a batch is in flight."""
+
+    server: MeasureServer = None
+
+    def evaluate(self, nest):
+        if self.server is not None:
+            srv, self.server = self.server, None
+            srv.close()
+        return super().evaluate(nest)
+
+
+# ---------------------------------------------------------------------------
+# Wire protocol
+# ---------------------------------------------------------------------------
+
+
+def test_frame_roundtrip_over_socketpair():
+    a, b = socket.socketpair()
+    payload = {"op": "measure", "id": 3, "nested": [[1, "x"], {"y": 2.5}]}
+    send_frame(a, payload)
+    assert recv_frame(b) == payload
+    a.close()
+    assert recv_frame(b) is None  # clean EOF at a frame boundary
+    b.close()
+
+
+def test_frame_rejects_oversize_and_garbage():
+    a, b = socket.socketpair()
+    with pytest.raises(ProtocolError):
+        send_frame(a, {"x": "y" * (MAX_FRAME_BYTES + 16)})
+    import struct
+
+    a.sendall(struct.pack(">I", MAX_FRAME_BYTES + 1))
+    with pytest.raises(ProtocolError):
+        recv_frame(b)
+    a.close()
+    b.close()
+
+
+def test_nest_wire_codec_roundtrip_through_json():
+    for seed in range(3):
+        nest = _schedules(1, seed=seed)[0]
+        wire = json.loads(json.dumps(nest_to_wire(nest)))
+        back = nest_from_wire(wire)
+        assert back.structure_key() == nest.structure_key()
+        assert back.contraction == nest.contraction
+
+
+def test_parse_addr():
+    assert parse_addr("127.0.0.1:80") == ("127.0.0.1", 80)
+    assert parse_addr(("h", 9)) == ("h", 9)
+    with pytest.raises(ValueError):
+        parse_addr("noport")
+
+
+# ---------------------------------------------------------------------------
+# Parity and stamping (in-process server, deterministic backend)
+# ---------------------------------------------------------------------------
+
+
+def test_remote_matches_local_measurements_exactly():
+    nests = _schedules(4)
+    local = make_backend("tpu")
+    with MeasureServer(backend="tpu").start() as srv:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu")
+        g_remote = rb.evaluate_batch(nests)
+        g_single = np.array([rb.evaluate(n) for n in nests])
+        g_local = local.evaluate_batch(nests)
+        assert np.array_equal(g_remote, g_local)  # parity 0.0, not approx
+        assert np.array_equal(g_single, g_local)
+        # full Measurement records came back, not just floats
+        m = rb.measurement_for(nests[0])
+        assert m is not None and m.gflops == g_local[0]
+        assert rb.peak() == local.peak()
+        assert not rb.degraded
+        stats = rb.farm_stats()
+        assert stats["requests"] >= 2 and stats["retries"] == 0
+        rb.close()
+
+
+def test_two_clients_share_one_farm():
+    nests = _schedules(4)
+    local = make_backend("tpu")
+    g_local = local.evaluate_batch(nests)
+    with MeasureServer(backend="tpu").start() as srv:
+        results = {}
+
+        def client(name):
+            rb = make_backend("remote", addr=srv.addr, fallback="tpu")
+            results[name] = rb.evaluate_batch(nests)
+            rb.close()
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert np.array_equal(results[0], g_local)
+        assert np.array_equal(results[1], g_local)
+        assert srv.requests == 2 and srv.errors == 0
+
+
+def test_remote_hardware_stamps_registry(tmp_path):
+    with MeasureServer(backend="tpu").start() as srv:
+        srv.hardware = "TPU v5 lite|farm-host"  # a piped device string
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu")
+        reg = ScheduleRegistry(str(tmp_path / "reg.json"))
+        tuner = LoopTuner(policy="search", backend=rb, registry=reg)
+        entry = tuner.tune(BENCH, max_evals=8)
+        assert entry["hardware"] == "TPU v5 lite|farm-host"
+        assert rb.measured_hardware() == "TPU v5 lite|farm-host"
+        # the record key names the backend that TIMED (the farm's), not
+        # the "remote" transport — serving lookups rank on it
+        assert entry["backend"] == "tpu"
+        assert rb.measured_backend_name() == "tpu"
+        # the farm counters ride tuner.stats() under both spellings
+        stats = tuner.stats()
+        assert stats["measure"]["farm"]["requests"] > 0
+        assert stats["measurement"]["farm"]["degraded"] == 0
+        # piped hardware survives a save/load round trip intact
+        reg.save()
+        reloaded = ScheduleRegistry(str(tmp_path / "reg.json"))
+        got = reloaded.get("mm", (64, 64, 64),
+                           hardware="TPU v5 lite|farm-host", exact=True)
+        assert got is not None
+        assert got["hardware"] == "TPU v5 lite|farm-host"
+        rb.close()
+
+
+def test_server_error_reply_reraises_and_does_not_degrade():
+    with MeasureServer(backend=_ExplodingBackend()).start() as srv:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu")
+        with pytest.raises(RemoteMeasureError, match="evaluator bug"):
+            rb.evaluate(LoopNest(BENCH))
+        # an evaluator bug is not a transport fault: no fallback, no retry
+        assert not rb.degraded
+        assert rb.farm_stats()["retries"] == 0
+        rb.close()
+
+
+# ---------------------------------------------------------------------------
+# Fault injection
+# ---------------------------------------------------------------------------
+
+
+def test_unreachable_farm_warns_once_and_degrades_to_local():
+    addr = f"127.0.0.1:{_free_port()}"
+    rb = make_backend("remote", addr=addr, fallback="tpu",
+                      max_retries=1, backoff_base_s=0.01,
+                      connect_timeout_s=0.2)
+    local = make_backend("tpu")
+    nests = _schedules(3)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        g1 = rb.evaluate_batch(nests)
+        g2 = rb.evaluate_batch(nests)  # second batch: no second warning
+    farm_warnings = [x for x in w if "falling back" in str(x.message)]
+    assert len(farm_warnings) == 1
+    assert np.array_equal(g1, local.evaluate_batch(nests))
+    assert np.array_equal(g2, g1)
+    assert rb.degraded and rb.farm_stats()["degraded_batches"] == 2
+    assert rb.measured_hardware() is None  # local stamping takes over
+    assert rb.peak() == local.peak()
+    rb.close()
+
+
+def test_request_deadline_exceeded_degrades_and_completes():
+    with MeasureServer(backend=_SleepyBackend(5.0)).start() as srv:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu",
+                          deadline_s=0.25, max_retries=1,
+                          backoff_base_s=0.01)
+        local = make_backend("tpu")
+        nest = _schedules(1)[0]
+        with pytest.warns(UserWarning, match="falling back"):
+            g = rb.evaluate(nest)
+        assert g == local.evaluate(nest)
+        assert rb.degraded and rb.farm_stats()["retries"] >= 1
+        rb.close()
+
+
+def test_server_killed_mid_batch_falls_back_with_zero_failures():
+    killer = _KillerBackend()
+    srv = MeasureServer(backend=killer).start()
+    killer.server = srv
+    try:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu",
+                          max_retries=1, backoff_base_s=0.01,
+                          connect_timeout_s=0.2, deadline_s=2.0)
+        local = make_backend("tpu")
+        nests = _schedules(4)
+        with pytest.warns(UserWarning, match="falling back"):
+            g = rb.evaluate_batch(nests)
+        # the batch the kill interrupted still resolved, locally, in full
+        assert np.array_equal(g, local.evaluate_batch(nests))
+        assert rb.degraded
+        assert all(rb.measurement_for(n) is not None for n in nests)
+        rb.close()
+    finally:
+        srv.close()
+
+
+def test_client_reconnects_after_farm_restart():
+    nest = _schedules(1)[0]
+    local = make_backend("tpu")
+    srv1 = MeasureServer(backend="tpu").start()
+    port = srv1.port
+    rb = make_backend("remote", addr=srv1.addr, fallback="tpu",
+                      max_retries=4, backoff_base_s=0.05,
+                      connect_timeout_s=0.5)
+    assert rb.evaluate(nest) == local.evaluate(nest)
+    srv1.close()
+    # restart on the same port: the client's retry loop reconnects instead
+    # of degrading
+    srv2 = MeasureServer(port=port, backend="tpu").start()
+    try:
+        assert rb.evaluate(nest) == local.evaluate(nest)
+        assert not rb.degraded
+        assert rb.farm_stats()["reconnects"] >= 1
+        assert rb.farm_stats()["retries"] >= 1
+    finally:
+        rb.close()
+        srv2.close()
+
+
+def test_tune_through_dead_farm_never_fails():
+    addr = f"127.0.0.1:{_free_port()}"
+    rb = make_backend("remote", addr=addr, fallback="tpu",
+                      max_retries=0, backoff_base_s=0.01,
+                      connect_timeout_s=0.2)
+    tuner = LoopTuner(policy="search", backend=rb)
+    with pytest.warns(UserWarning, match="falling back"):
+        entry = tuner.tune(BENCH, max_evals=8)
+    assert entry["gflops"] > 0
+    assert tuner.stats()["measure"]["farm"]["degraded"] == 1
+    rb.close()
+
+
+def test_remote_backend_rejects_instance_fallback_and_pool_hosting():
+    with pytest.raises(TypeError, match="registry name"):
+        RemoteMeasuredBackend("h:1", fallback=make_backend("tpu"))
+    rb = make_backend("remote", addr="127.0.0.1:1", fallback="tpu")
+    with pytest.raises(TypeError, match="farm side"):
+        rb.pool_spec()
+    with pytest.raises(RuntimeError, match="does not execute locally"):
+        rb.run_once(LoopNest(BENCH))
+    rb.close()
+
+
+# ---------------------------------------------------------------------------
+# Real farm processes (slow)
+# ---------------------------------------------------------------------------
+
+
+def _spawn_farm(*extra_args):
+    env = dict(os.environ, PYTHONPATH=str(REPO_ROOT / "src"),
+               JAX_PLATFORMS="cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.measure_farm",
+         "--addr", "127.0.0.1:0", "--backend", "tpu", "--measure", "inproc",
+         *extra_args],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env,
+        cwd=str(REPO_ROOT))
+    line = proc.stdout.readline()
+    m = re.search(r"listening on ([\d.]+):(\d+)", line)
+    assert m, f"farm did not announce its address: {line!r}"
+    return proc, f"{m.group(1)}:{m.group(2)}"
+
+
+@pytest.mark.slow
+def test_farm_process_roundtrip_then_kill_degrades():
+    proc, addr = _spawn_farm()
+    try:
+        local = make_backend("tpu")
+        nests = _schedules(4)
+        rb = make_backend("remote", addr=addr, fallback="tpu",
+                          max_retries=1, backoff_base_s=0.01,
+                          connect_timeout_s=0.5)
+        assert np.array_equal(rb.evaluate_batch(nests),
+                              local.evaluate_batch(nests))
+        assert rb.measured_hardware() is not None
+        proc.kill()
+        proc.wait(timeout=10)
+        with pytest.warns(UserWarning, match="falling back"):
+            g = rb.evaluate_batch(nests)
+        assert np.array_equal(g, local.evaluate_batch(nests))
+        assert rb.degraded
+        rb.close()
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        proc.wait(timeout=10)
+
+
+@pytest.mark.slow
+def test_farm_parity_with_local_worker_pool():
+    """Two farm clients and a local WorkerPool agree measurement-for-
+    measurement on the analytical backend (parity 0.0)."""
+    nests = _schedules(4)
+    pool = make_backend("tpu", measure="pool", pool_workers=2)
+    try:
+        ms_pool = pool._ensure_pool().measure_batch(nests)
+    finally:
+        pool.close()
+    proc, addr = _spawn_farm()
+    try:
+        results = {}
+
+        def client(i):
+            rb = make_backend("remote", addr=addr, fallback="tpu")
+            results[i] = rb.measure_batch(nests)
+            rb.close()
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for i in range(2):
+            assert [m.gflops for m in results[i]] == \
+                   [m.gflops for m in ms_pool]
+    finally:
+        proc.kill()
+        proc.wait(timeout=10)
+
+
+@pytest.mark.slow
+def test_farm_max_requests_exits_clean():
+    proc, addr = _spawn_farm("--max-requests", "1")
+    rb = make_backend("remote", addr=addr, fallback="tpu")
+    rb.evaluate(LoopNest(BENCH))
+    rb.close()
+    assert proc.wait(timeout=15) == 0
+    rest = proc.stdout.read()
+    assert "[farm] stopped" in rest

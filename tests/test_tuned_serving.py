@@ -100,6 +100,48 @@ def test_put_degrades_to_actions_only_on_lowering_failure():
     assert e["actions"] == ["a"] and "block" not in e
 
 
+def test_piped_hardware_string_survives_roundtrip(tmp_path):
+    # regression: record keys are |-joined, and real device-kind strings
+    # contain | — pre-escaping, reload shifted the key fields
+    path = str(tmp_path / "reg.json")
+    hw = "TPU v5 lite|2x2|podslice"
+    reg = ScheduleRegistry()
+    assert reg.put("mm", (64, 64, 64), 42.0, ["a"], _nest(64, 64, 64),
+                   backend="tpu", hardware=hw)
+    reg.save(path)
+    raw_key = next(iter(json.loads(open(path).read())["entries"]))
+    assert raw_key.count("|") == 2  # component pipes are escaped on disk
+    sk, backend, hardware = ScheduleRegistry.split_key(raw_key)
+    assert (sk, backend, hardware) == ("mm:64x64x64:float32", "tpu", hw)
+    loaded = ScheduleRegistry(path)
+    e = loaded.get("mm", (64, 64, 64), hardware=hw, exact=True)
+    assert e is not None and e["hardware"] == hw
+    # escape is involutive through merge too (re-keying uses record_key)
+    other = ScheduleRegistry()
+    assert other.merge(loaded) == 1
+    assert other.get("mm", (64, 64, 64), hardware=hw, exact=True) is not None
+
+
+def test_unparseable_record_keys_dropped_with_warning(tmp_path):
+    path = tmp_path / "reg.json"
+    good = ScheduleRegistry.record_key("mm:64x64x64:float32", "tpu", "hw")
+    path.write_text(json.dumps({
+        "version": 2,
+        "entries": {
+            good: {"gflops": 1.0, "actions": []},
+            # a pre-escaping key written by an old writer with a piped
+            # hardware string: 4 fields, unrecoverable
+            "mm:8x8x8:float32|tpu|TPU|v5e": {"gflops": 2.0, "actions": []},
+        },
+    }))
+    with pytest.warns(UserWarning, match="un-parseable"):
+        reg = ScheduleRegistry(str(path))
+    assert len(reg) == 1
+    assert reg.get("mm", (64, 64, 64)) is not None
+    with pytest.raises(ValueError, match="un-parseable"):
+        ScheduleRegistry.split_key("a|b|c|d")
+
+
 def test_specificity_ranked_lookup():
     reg = ScheduleRegistry()
     hw = current_hardware()
@@ -161,6 +203,49 @@ def test_tuned_einsum_transposed_rhs_logits_form():
     assert out.dtype == jnp.float32
     np.testing.assert_allclose(out, ref, atol=1e-4)
     K.reset_serving_stats()
+
+
+def test_tuned_einsum_ellipsis_and_explicit_forms_share_key():
+    # regression: "...k,kn->...n" (the docstring's own example) was
+    # rejected outright and silently cold-fell-back
+    a = jax.random.normal(jax.random.PRNGKey(4), (4, 24, 64))
+    b = jax.random.normal(jax.random.PRNGKey(5), (64, 96))
+    reg = _tuned_registry(4 * 24, 64, 96)
+    K.reset_serving_stats()
+    out_ell = K.tuned_einsum("...k,kn->...n", a, b, registry=reg,
+                             pallas="interpret")
+    out_exp = K.tuned_einsum("abk,kn->abn", a, b, registry=reg,
+                             pallas="interpret")
+    ref = jnp.einsum("abk,kn->abn", a, b)
+    np.testing.assert_allclose(out_ell, ref, atol=1e-5)
+    np.testing.assert_allclose(out_exp, ref, atol=1e-5)
+    stats = K.serving_stats(reset=True)
+    # both spellings resolve to the SAME workload key: one key, two hits
+    assert list(stats["per_key"]) == ["mm:96x64x96:float32"]
+    assert stats["hits"] == 2 and stats["routed"] == 2
+    # transposed-weight ellipsis form parses too
+    t = jax.random.normal(jax.random.PRNGKey(6), (96, 64))
+    reg2 = _tuned_registry(4 * 24, 64, 96)
+    out_t = K.tuned_einsum("...k,nk->...n", a, t, registry=reg2,
+                           pallas="interpret")
+    np.testing.assert_allclose(out_t, jnp.einsum("...k,nk->...n", a, t),
+                               atol=1e-4)
+    K.reset_serving_stats()
+
+
+def test_parse_matmul_spec_ellipsis_edge_cases():
+    P = K._parse_matmul_spec
+    # ellipsis folds batch dims into m, same as explicit letters
+    assert P("...k,kn->...n", (4, 24, 64), (64, 96)) == \
+        P("abk,kn->abn", (4, 24, 64), (64, 96)) == (96, 64, 96, False)
+    # 2-D lhs: the ellipsis absorbs one dim
+    assert P("...k,kn->...n", (8, 64), (64, 32)) == (8, 64, 32, False)
+    # malformed/unsupported ellipsis placements stay rejected
+    assert P("...k,kn->n", (4, 24, 64), (64, 96)) is None  # out lacks ...
+    assert P("ak,kn->...n", (4, 64), (64, 96)) is None     # lhs lacks ...
+    assert P("...k,...n->...n", (4, 64), (64, 96)) is None  # rhs ellipsis
+    assert P("...,kn->...", (4, 64), (64, 96)) is None     # no contracted dim
+    assert P("...abk,kn->...abn", (64,), (64, 96)) is None  # too few dims
 
 
 def test_tuned_einsum_non_matmul_spec_falls_back():
