@@ -9,12 +9,19 @@ Backs the two claims the farm subsystem (``core/measure_service.py`` +
 * **degradation** — a farm process killed (SIGKILL) mid-run costs zero
   failed tunes: every client backs off, warns once, degrades to local
   in-process measurement, and the tune loop completes (degraded > 0,
-  clean exit).
+  clean exit);
+* **fleet fairness under overload** (:func:`run_fleet`) — N concurrent
+  clients hammering a deliberately under-provisioned farm see bounded
+  queue depth (admission control holds the ``queue_limit`` cap), explicit
+  ``overloaded`` rejections instead of timeouts, zero degradations, and a
+  per-client served-request spread ≤ 2x (round-robin scheduling + slot
+  reservations at admission).
 
     PYTHONPATH=src python -m benchmarks.bench_farm
 
-The committed ``results/bench_farm.json`` backs the PR's acceptance
-criteria; ``host_contention`` annotates tainted passes.
+The committed ``results/bench_farm.json`` / ``bench_farm_fleet.json`` back
+the PRs' acceptance criteria; ``host_contention`` annotates tainted
+passes.
 """
 from __future__ import annotations
 
@@ -30,7 +37,8 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import LoopTuner, make_backend
+from repro.core import LoopTuner, MeasureServer, make_backend
+from repro.core.cost_model import TPUAnalyticalBackend
 from repro.core.loop_ir import matmul_benchmark
 
 from .bench_measure import build_schedules
@@ -161,6 +169,107 @@ def run(
     return result
 
 
+class _PacedBackend(TPUAnalyticalBackend):
+    """Deterministic backend with a fixed per-evaluate service time: the
+    stable work rate the overload scenario pushes against."""
+
+    def __init__(self, sleep_s: float):
+        super().__init__()
+        self.sleep_s = sleep_s
+
+    def evaluate(self, nest):
+        time.sleep(self.sleep_s)
+        return super().evaluate(nest)
+
+
+def run_fleet(
+    n_clients: int = 4,
+    queue_limit: int = 2,
+    duration_s: float = 2.5,
+    service_s: float = 0.005,
+    n_schedules: int = 2,
+    out_name: str = "bench_farm_fleet",
+) -> Dict:
+    """N-client fairness/overload scenario against an in-process farm.
+
+    The farm is deliberately under-provisioned (``queue_limit`` slots,
+    one paced evaluator), so the client fleet runs in sustained overload
+    for ``duration_s``.  What must hold: queue depth never exceeds the
+    admission cap, overload is answered explicitly (rejections > 0) and
+    waited out (backpressure waits > 0) rather than degrading anyone, and
+    round-robin scheduling + admission slot reservations keep the
+    per-client served-request spread ≤ 2x.
+    """
+    nests = build_schedules(n_schedules, dims=(64, 64, 64), steps=4)
+    srv = MeasureServer(backend=_PacedBackend(service_s),
+                        queue_limit=queue_limit,
+                        coalesce_requests=1).start()
+    clients = [make_backend("remote", addr=srv.addr, fallback="tpu",
+                            backpressure_budget_s=10 * duration_s,
+                            max_retries=2, backoff_base_s=0.01)
+               for _ in range(n_clients)]
+    errors: List[str] = []
+    try:
+        t_end = time.monotonic() + duration_s
+
+        def client(rb) -> None:
+            try:
+                while time.monotonic() < t_end:
+                    rb.evaluate_batch(nests)
+            except Exception as e:  # noqa: BLE001 — a failure is the defect
+                errors.append(f"{type(e).__name__}: {e}")
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=client, args=(rb,))
+                   for rb in clients]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        stats = srv.stats()
+        served = [stats["clients"].get(rb.client_id, 0) for rb in clients]
+        spread = (max(served) / min(served)) if min(served) else float("inf")
+        result = {
+            "n_clients": n_clients,
+            "queue_limit": queue_limit,
+            "duration_s": duration_s,
+            "service_s_per_evaluate": service_s,
+            "wall_s": round(wall, 3),
+            "client_errors": errors,
+            "queue_depth_peak": stats["queue_depth_peak"],
+            "queue_bounded": stats["queue_depth_peak"] <= queue_limit,
+            "served_requests": stats["served_requests"],
+            "served_nests": stats["served_nests"],
+            "rejected_overload": stats["rejected_overload"],
+            "coalesced_batches": stats["coalesced_batches"],
+            "per_client_served": served,
+            "served_spread": (round(spread, 3)
+                              if spread != float("inf") else None),
+            "fair_within_2x": spread <= 2.0,
+            "backpressure_waits": sum(rb.farm_stats()["backpressure_waits"]
+                                      for rb in clients),
+            "backpressure_wait_s": round(
+                sum(rb.farm_stats()["backpressure_wait_s"]
+                    for rb in clients), 3),
+            "degraded_clients": sum(rb.farm_stats()["degraded"]
+                                    for rb in clients),
+            "degradations": sum(rb.farm_stats()["degradations"]
+                                for rb in clients),
+        }
+    finally:
+        for rb in clients:
+            rb.close()
+        srv.close()
+    print(f"fleet: {n_clients} clients vs queue_limit={queue_limit}: "
+          f"served={served} (spread {result['served_spread']}x), "
+          f"queue peak {stats['queue_depth_peak']}/{queue_limit}, "
+          f"{stats['rejected_overload']} overload rejections, "
+          f"{result['degradations']} degradations, {len(errors)} errors")
+    save_result(out_name, result)
+    return result
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -168,7 +277,11 @@ if __name__ == "__main__":
     ap.add_argument("--n", type=int, default=12)
     ap.add_argument("--clients", type=int, default=2)
     ap.add_argument("--tunes", type=int, default=4)
+    ap.add_argument("--fleet-clients", type=int, default=4)
+    ap.add_argument("--fleet-only", action="store_true")
     ap.add_argument("--out", default="bench_farm")
     args = ap.parse_args()
-    run(n_schedules=args.n, n_clients=args.clients, n_tunes=args.tunes,
-        out_name=args.out)
+    if not args.fleet_only:
+        run(n_schedules=args.n, n_clients=args.clients, n_tunes=args.tunes,
+            out_name=args.out)
+    run_fleet(n_clients=args.fleet_clients)

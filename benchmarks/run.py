@@ -20,7 +20,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma list: rl,search,surrogate,tuned,kernels,"
                          "roofline,vec_env,networks,backend,measure,serve,"
-                         "compile_cache,farm")
+                         "compile_cache,farm,fleet")
     args = ap.parse_args(argv)
 
     want = set(args.only.split(",")) if args.only else None
@@ -108,6 +108,16 @@ def main(argv=None) -> int:
             section("farm", lambda: bench_farm.run(
                 n_schedules=6, steps=4, n_clients=2, n_tunes=2,
                 out_name="bench_farm_quick"))
+    if should("fleet"):
+        from . import bench_farm
+        if args.full:
+            section("fleet", lambda: bench_farm.run_fleet(
+                n_clients=4, queue_limit=2, duration_s=2.5,
+                out_name="bench_farm_fleet"))
+        else:
+            section("fleet", lambda: bench_farm.run_fleet(
+                n_clients=4, queue_limit=2, duration_s=1.0,
+                out_name="bench_farm_fleet_quick"))
     if should("vec_env"):
         from . import bench_vec_env
         section("vec_env", lambda: bench_vec_env.run(

@@ -629,6 +629,7 @@ class WorkerPool:
         self.tasks_done = 0
         self.failed_tasks = 0
         self.hung_killed = 0
+        self.last_batch_s = 0.0
         for wid in range(self.n_workers):
             self._spawn(wid)
 
@@ -726,6 +727,7 @@ class WorkerPool:
             raise RuntimeError("WorkerPool is closed")
         if not nests:
             return []
+        t_batch0 = time.monotonic()
         self._batch_serial += 1
         serial = self._batch_serial
         for w in self._workers:
@@ -805,6 +807,7 @@ class WorkerPool:
         for slot, nest in enumerate(uniq_nests):
             merged.append(Measurement.merge(
                 parts[slot], nest.contraction.flops(), self.policy))
+        self.last_batch_s = time.monotonic() - t_batch0
         return [merged[slot_of[n.structure_key()]] for n in nests]
 
     def _fill(self, backlog: List[Tuple], tasks: Dict[Tuple, Tuple]) -> None:
@@ -881,13 +884,16 @@ class WorkerPool:
                 else:
                     backlog.append(tid)  # re-issued to the next free worker
 
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> Dict[str, Any]:
         return {
             "workers": self.n_workers,
             "alive": sum(1 for w in self._workers
                          if w is not None and w.process.is_alive()),
+            "busy_workers": sum(1 for w in self._workers
+                                if w is not None and w.outstanding),
             "tasks_done": self.tasks_done,
             "respawns": self.respawns,
             "failed_tasks": self.failed_tasks,
             "hung_killed": self.hung_killed,
+            "last_batch_s": round(self.last_batch_s, 4),
         }

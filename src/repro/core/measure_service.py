@@ -1,4 +1,4 @@
-"""Remote measurement farm: RPC timing service + client backend.
+"""Remote measurement farm: fleet-grade RPC timing service + client backend.
 
 LoopTune learns from *measured* rewards, which at fleet scale means the
 timing must move off the training host: AutoTVM's distributed RPC runners
@@ -7,38 +7,55 @@ and loop_tool's CompilerGym service split both converge on a shared
 This module is that farm, layered on the existing measurement subsystem:
 
 * :class:`MeasureServer` — a TCP service (length-prefixed JSON frames)
-  that wraps any registered backend on the *measuring* host.  Batches
-  arrive as ``(contraction, structure_key)`` pairs — the exact transport
-  the :class:`~repro.core.measure.WorkerPool` already uses — are rebuilt
-  with :meth:`LoopNest.from_structure_key`, measured through the server
-  backend (typically ``measure="pool"``, so batches parallelize across
-  the farm host's cores and the pool's hung-kill machinery bounds every
-  batch), and answered with full :class:`Measurement` records **plus the
-  measuring host's hardware descriptor**, so registry records are stamped
-  with where the timing actually ran, not where the tuner ran.
+  that wraps any registered backend on the *measuring* host.  Connection
+  threads only parse frames; measurement flows through a **bounded
+  central queue** with admission control (a full queue answers
+  ``overloaded`` with a ``retry_after_s`` hint instead of buffering
+  without bound), **per-client round-robin fair scheduling** (one greedy
+  tuner cannot starve the fleet), and **cross-client batch coalescing**
+  — a single dispatcher folds up to ``coalesce_requests`` queued
+  requests into one :meth:`measure_batch` call, so the
+  :class:`~repro.core.measure.WorkerPool` dedups and parallelizes
+  *across* clients.  A ``status`` op reports queue depth / inflight /
+  served counters, and :meth:`drain` (SIGTERM in ``launch.measure_farm``)
+  stops accepting, finishes queued + inflight work, answers later
+  requests ``shutting_down``, and lets the process exit 0.
 
 * :class:`RemoteMeasuredBackend` — the client, registered as
   ``make_backend("remote", addr="host:port")``.  Robustness is the point:
   per-request deadlines, reconnect with exponential backoff and jitter,
-  and *graceful degradation* — a farm that is unreachable, killed
-  mid-batch, or persistently timing out warns once and falls back to
-  local in-process measurement (the ``fallback`` backend spec), so a tune
-  is never failed by the farm.  Counters
-  (``requests/retries/reconnects/degraded/farm_rtt``) ride
-  ``measure_stats()`` into ``tuner.stats()``.
+  **backpressure honoring** (an ``overloaded``/``shutting_down`` reply is
+  waited out with the server's ``retry_after_s`` hint, jittered, without
+  consuming transport retries), bounded inflight (one outstanding request,
+  batches chunked at ``max_nests_per_request``), and *graceful
+  degradation* — a farm that is unreachable, killed mid-batch, or
+  persistently overloaded warns once and falls back to local in-process
+  measurement (the ``fallback`` backend spec), so a tune is never failed
+  by the farm.  Degradation is no longer permanent: periodic re-probes
+  (every ``reprobe_every_batches`` batches or ``reprobe_after_s``
+  seconds) **re-promote** the client to remote measurement when the farm
+  comes back.  Counters (``requests/retries/reconnects/degraded/
+  repromotions/backpressure_waits/farm_rtt``) ride ``measure_stats()``
+  into ``tuner.stats()``.
 
 Wire protocol (version :data:`PROTO_VERSION`): each frame is a 4-byte
 big-endian length followed by that many bytes of UTF-8 JSON.  Requests are
-``{"op": "ping"}`` (handshake: hardware / peak / backend identity) and
-``{"op": "measure", "id": n, "nests": [[contraction, structure_key], ...]}``;
-replies echo ``id`` and carry either ``measurements`` (``Measurement.ship``
-tuples) or ``error`` (a server-side traceback).  A transport failure is
-retried; an ``error`` reply is re-raised — an evaluator bug on the farm is
-not a fault to retry around (the same rule the worker pool applies).
+``{"op": "ping"}`` (handshake: hardware / peak / backend identity),
+``{"op": "status"}`` (health: the server's :meth:`MeasureServer.stats`),
+and ``{"op": "measure", "id": n, "client": cid, "nests": [[contraction,
+structure_key], ...]}``; replies echo ``id`` and carry either
+``measurements`` (``Measurement.ship`` tuples) or ``error`` (a server-side
+traceback).  Admission rejections additionally carry ``error_kind``
+(``"overloaded"`` | ``"shutting_down"``) and ``retry_after_s`` — the
+client treats both as backpressure, not as faults.  A transport failure
+is retried; any other ``error`` reply is re-raised — an evaluator bug on
+the farm is not a fault to retry around (the same rule the worker pool
+applies).
 """
 from __future__ import annotations
 
 import json
+import os
 import random
 import socket
 import struct
@@ -46,7 +63,8 @@ import threading
 import time
 import traceback
 import warnings
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 from .backend import Backend, backend_name, make_backend
 from .loop_ir import Contraction, LoopNest, TensorSpec
@@ -58,10 +76,13 @@ from .measure import (
 )
 from .registry import current_hardware
 
-PROTO_VERSION = 1
+PROTO_VERSION = 2
 
 #: refuse frames beyond this (a corrupt length prefix must not OOM the host)
 MAX_FRAME_BYTES = 64 << 20
+
+#: reply kinds the client treats as backpressure instead of faults
+BACKPRESSURE_KINDS = ("overloaded", "shutting_down")
 
 
 class ProtocolError(RuntimeError):
@@ -194,17 +215,47 @@ def parse_addr(addr: Union[str, Tuple[str, int]]) -> Tuple[str, int]:
 # ---------------------------------------------------------------------------
 
 
+class _PendingRequest:
+    """One admitted measure request waiting in (or dispatched from) the
+    central queue.  Holds everything the dispatcher needs to answer on the
+    originating connection — ``send_lock`` serializes dispatcher replies
+    against the connection thread's own ping/status/rejection replies."""
+
+    __slots__ = ("conn", "send_lock", "req_id", "client", "nests", "t_enq")
+
+    def __init__(self, conn: socket.socket, send_lock: threading.Lock,
+                 req_id: Any, client: str, nests: List[LoopNest]):
+        self.conn = conn
+        self.send_lock = send_lock
+        self.req_id = req_id
+        self.client = client
+        self.nests = nests
+        self.t_enq = time.monotonic()
+
+
 class MeasureServer:
     """The farm side: measure shipped schedules on this host's backend.
 
-    One thread per client connection; measurement itself is serialized
-    behind a lock (the :class:`WorkerPool` is not reentrant — two clients'
-    batches interleave at batch granularity, and the pool still
-    parallelizes each batch across cores).  Batch runtime is bounded by
-    the pool's existing hung-kill machinery (``task_timeout_s`` →
-    ``pool_timeout_s``): a hung schedule resolves as a marked-failed
-    record and the reply still goes out, so clients never wait on a
-    wedged farm batch forever.
+    Connection threads only read frames and answer control ops; every
+    measure request passes **admission control** into a bounded central
+    queue (``queue_limit`` requests; beyond it the server answers
+    ``overloaded`` with a ``retry_after_s`` hint derived from the observed
+    per-nest service time, instead of buffering without bound).  A single
+    dispatcher thread drains the queue **round-robin across client ids**
+    and coalesces up to ``coalesce_requests`` requests (``coalesce_nests``
+    nests) into one backend ``measure_batch`` call — with ``measure=
+    "pool"`` the :class:`WorkerPool` then dedups duplicate structures and
+    parallelizes the combined batch across this host's cores, and the
+    pool's hung-kill machinery (``task_timeout_s`` → ``pool_timeout_s``)
+    bounds every batch, so clients never wait on a wedged farm forever.
+
+    :meth:`drain` (wired to SIGTERM by ``launch.measure_farm``) stops
+    accepting connections, finishes every queued and inflight request,
+    answers anything arriving later with a clean ``shutting_down`` reply
+    (clients treat it like ``overloaded``), and releases
+    :meth:`serve_forever`, so a supervised farm restarts without severing
+    clients mid-batch.  ``max_requests`` triggers the same drain after N
+    admitted requests — a batch scheduler's self-terminating unit.
     """
 
     def __init__(
@@ -214,12 +265,46 @@ class MeasureServer:
         backend: Union[str, Backend] = "auto",
         backend_kwargs: Optional[Dict[str, Any]] = None,
         max_requests: Optional[int] = None,
+        queue_limit: int = 32,
+        coalesce_requests: int = 4,
+        coalesce_nests: int = 64,
     ):
+        if queue_limit < 1:
+            raise ValueError(f"queue_limit must be >= 1, got {queue_limit}")
+        if coalesce_requests < 1 or coalesce_nests < 1:
+            raise ValueError("coalesce_requests/coalesce_nests must be >= 1")
         self.backend = make_backend(backend, **(backend_kwargs or {}))
         self.hardware = current_hardware()
         self.max_requests = max_requests
-        self.requests = 0
+        self.queue_limit = int(queue_limit)
+        self.coalesce_requests = int(coalesce_requests)
+        self.coalesce_nests = int(coalesce_nests)
+        self.requests = 0  # admitted measure requests
         self.errors = 0
+        # fair-queue state + counters, all guarded by _cond's lock
+        self._cond = threading.Condition()
+        self._queues: Dict[str, Deque[_PendingRequest]] = {}
+        self._ready: Deque[str] = deque()  # round-robin rotation
+        self._queued = 0
+        self._queued_nests = 0
+        # admission fairness: clients rejected for overload hold a slot
+        # reservation (client id -> last-rejection time) other clients may
+        # not take until they return or the reservation expires
+        self._deferred: Dict[str, float] = {}
+        self._deferred_ttl_s = 5.0
+        self._draining = False
+        self._drained = threading.Event()
+        self.served_requests = 0
+        self.served_nests = 0
+        self.rejected_overload = 0
+        self.rejected_shutdown = 0
+        self.pool_batches = 0
+        self.coalesced_batches = 0
+        self.queue_depth_peak = 0
+        self.inflight_requests = 0
+        self.inflight_nests = 0
+        self.per_client_served: Dict[str, int] = {}
+        self._service_s_per_nest: Optional[float] = None  # EWMA
         self._measure_lock = threading.Lock()
         self._state_lock = threading.Lock()
         self._closed = threading.Event()
@@ -227,6 +312,10 @@ class MeasureServer:
         self._conns: List[socket.socket] = []
         self._listener = socket.create_server((host, int(port)))
         self.host, self.port = self._listener.getsockname()[:2]
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, daemon=True,
+            name=f"looptune-farm-dispatch-{self.port}")
+        self._dispatcher.start()
 
     @property
     def addr(self) -> str:
@@ -243,13 +332,29 @@ class MeasureServer:
         return t and self
 
     def serve_forever(self) -> None:
-        """Accept connections on the calling thread until :meth:`close`."""
+        """Accept connections on the calling thread until :meth:`close` or
+        a completed :meth:`drain` (queued + inflight work finishes first)."""
         self._accept_loop()
+        if self._draining and not self._closed.is_set():
+            self._drained.wait()
+        self.close()
 
-    def close(self) -> None:
-        if self._closed.is_set():
-            return
-        self._closed.set()
+    def drain(self, wait: bool = False,
+              timeout: Optional[float] = None) -> bool:
+        """Graceful shutdown: stop accepting, finish queued + inflight
+        requests, answer new ones ``shutting_down``.  Returns True once the
+        queue is flushed (immediately when ``wait`` is False)."""
+        with self._cond:
+            first = not self._draining
+            self._draining = True
+            self._cond.notify_all()
+        if first:
+            self._shutdown_listener()
+        if wait:
+            return self._drained.wait(timeout)
+        return True
+
+    def _shutdown_listener(self) -> None:
         # shutdown() wakes a thread blocked in accept(); without it the
         # in-flight syscall pins the kernel socket open past close() and the
         # port stays bound (a restarted farm then can't take it back)
@@ -261,6 +366,16 @@ class MeasureServer:
             self._listener.close()
         except OSError:
             pass
+
+    def close(self) -> None:
+        if self._closed.is_set():
+            return
+        self._closed.set()
+        with self._cond:
+            self._draining = True
+            self._cond.notify_all()
+        self._drained.set()
+        self._shutdown_listener()
         # sever live connections: a close() must look like a killed farm to
         # clients, not a server that keeps answering through old sockets
         with self._state_lock:
@@ -284,10 +399,10 @@ class MeasureServer:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    # -- the service loop ------------------------------------------------------
+    # -- connection handling ---------------------------------------------------
 
     def _accept_loop(self) -> None:
-        while not self._closed.is_set():
+        while not self._closed.is_set() and not self._draining:
             try:
                 conn, _ = self._listener.accept()
             except OSError:
@@ -300,6 +415,7 @@ class MeasureServer:
             self._threads.append(t)
 
     def _serve_conn(self, conn: socket.socket) -> None:
+        send_lock = threading.Lock()
         try:
             with conn:
                 while not self._closed.is_set():
@@ -309,11 +425,10 @@ class MeasureServer:
                         return  # garbage in: drop the connection
                     if req is None:
                         return
-                    send_frame(conn, self._handle(req))
-                    if (self.max_requests is not None
-                            and self.requests >= self.max_requests):
-                        self.close()
-                        return
+                    reply = self._handle(req, conn, send_lock)
+                    if reply is not None:  # None = queued; dispatcher answers
+                        with send_lock:
+                            send_frame(conn, reply)
         except OSError:
             return  # client went away mid-reply
         finally:
@@ -321,37 +436,240 @@ class MeasureServer:
                 if conn in self._conns:
                     self._conns.remove(conn)
 
-    def _handle(self, req: Dict[str, Any]) -> Dict[str, Any]:
+    @staticmethod
+    def _conn_client(conn: socket.socket) -> str:
+        try:
+            host, port = conn.getpeername()[:2]
+            return f"{host}:{port}"
+        except OSError:
+            return "unknown"
+
+    def _handle(self, req: Dict[str, Any], conn: socket.socket,
+                send_lock: threading.Lock) -> Optional[Dict[str, Any]]:
         op = req.get("op")
         reply: Dict[str, Any] = {"id": req.get("id"), "proto": PROTO_VERSION}
         try:
             if op == "ping":
                 reply.update(ok=True, hardware=self.hardware,
                              backend=backend_name(self.backend),
-                             peak=float(self.backend.peak()))
+                             peak=float(self.backend.peak()),
+                             draining=self._draining)
+            elif op == "status":
+                reply.update(ok=True, **self.stats())
             elif op == "measure":
                 nests = [nest_from_wire(w) for w in req["nests"]]
-                with self._state_lock:
-                    self.requests += 1
-                with self._measure_lock:
-                    if isinstance(self.backend, MeasuredBackend):
-                        ms = self.backend.measure_batch(nests)
-                    else:
-                        ms = [measure_local(self.backend, n) for n in nests]
-                reply.update(ok=True, hardware=self.hardware,
-                             measurements=[list(m.ship()) for m in ms])
+                client = str(req.get("client") or self._conn_client(conn))
+                pending = _PendingRequest(conn, send_lock, req.get("id"),
+                                          client, nests)
+                rejection = self._admit(pending)
+                if rejection is None:
+                    return None  # admitted; the dispatcher replies
+                reply.update(rejection)
             else:
                 reply.update(ok=False, error=f"unknown op {op!r}")
         except Exception:  # noqa: BLE001 — report, let the client decide
-            with self._state_lock:
+            with self._cond:
                 self.errors += 1
             reply.update(ok=False, error=traceback.format_exc())
         return reply
 
+    # -- admission control -------------------------------------------------------
+
+    def _retry_after_locked(self) -> float:
+        """Backpressure hint: how long until the backlog likely clears,
+        from the EWMA per-nest service time (crude, but it spaces a fleet's
+        retries to the farm's actual pace instead of a fixed constant)."""
+        per_nest = self._service_s_per_nest or 0.05
+        backlog = self._queued_nests + self.inflight_nests + 1
+        return min(5.0, max(0.05, per_nest * backlog))
+
+    def _admit(self, p: _PendingRequest) -> Optional[Dict[str, Any]]:
+        """Enqueue under the queue bound, or return a rejection reply.
+        Explicit rejection is the contract: a client told ``overloaded``
+        backs off for ``retry_after_s``, while unbounded buffering would
+        instead time out every client's deadline at once.
+
+        Fairness starts at admission, not just in the queue: a freed slot
+        grabbed first-come-first-served always goes to the client that was
+        just served (it re-sends instantly, while a rejected client is
+        still sleeping out its ``retry_after_s``), which starves the
+        rejected client indefinitely.  So an overload rejection leaves a
+        slot *reservation* behind — other clients cannot fill capacity
+        that rejected clients are coming back for — with a TTL so a client
+        that gave up does not pin capacity."""
+        trigger_drain = False
+        with self._cond:
+            if self._draining or self._closed.is_set():
+                self.rejected_shutdown += 1
+                return {"ok": False, "error_kind": "shutting_down",
+                        "retry_after_s": round(self._retry_after_locked(), 3),
+                        "error": "farm is draining; no new work accepted"}
+            now = time.monotonic()
+            for c in [c for c, t in self._deferred.items()
+                      if now - t > self._deferred_ttl_s]:
+                del self._deferred[c]
+            reserved = sum(1 for c in self._deferred if c != p.client)
+            if (self._queued >= self.queue_limit
+                    or (p.client not in self._deferred
+                        and self._queued + reserved >= self.queue_limit)):
+                self.rejected_overload += 1
+                self._deferred[p.client] = now
+                return {"ok": False, "error_kind": "overloaded",
+                        "retry_after_s": round(self._retry_after_locked(), 3),
+                        "error": (f"admission queue full "
+                                  f"({self._queued}/{self.queue_limit}, "
+                                  f"{reserved} reserved)")}
+            self._deferred.pop(p.client, None)
+            q = self._queues.get(p.client)
+            if q is None:
+                q = self._queues[p.client] = deque()
+            if not q:
+                self._ready.append(p.client)
+            q.append(p)
+            self._queued += 1
+            self._queued_nests += len(p.nests)
+            self.queue_depth_peak = max(self.queue_depth_peak, self._queued)
+            self.requests += 1
+            if (self.max_requests is not None
+                    and self.requests >= self.max_requests):
+                trigger_drain = True
+            self._cond.notify_all()
+        if trigger_drain:
+            self.drain()  # this request was admitted and will be served
+        return None
+
+    # -- the dispatcher ----------------------------------------------------------
+
+    def _take_batch_locked(self) -> List[_PendingRequest]:
+        """Round-robin across client ids: one request per ready client per
+        rotation, until the coalescing budget fills.  Fairness unit is the
+        request — a greedy client's pile-up waits behind one request from
+        every other client each cycle."""
+        batch: List[_PendingRequest] = []
+        n_nests = 0
+        while self._ready and len(batch) < self.coalesce_requests:
+            client = self._ready[0]
+            q = self._queues[client]
+            if batch and n_nests + len(q[0].nests) > self.coalesce_nests:
+                break
+            p = q.popleft()
+            self._ready.popleft()
+            if q:
+                self._ready.append(client)
+            else:
+                del self._queues[client]
+            self._queued -= 1
+            self._queued_nests -= len(p.nests)
+            batch.append(p)
+            n_nests += len(p.nests)
+        return batch
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._ready:
+                    if self._closed.is_set():
+                        return
+                    if self._draining:
+                        self._drained.set()
+                        return
+                    self._cond.wait(timeout=0.2)
+                if self._closed.is_set():
+                    return
+                batch = self._take_batch_locked()
+                self.inflight_requests = len(batch)
+                self.inflight_nests = sum(len(p.nests) for p in batch)
+            try:
+                self._run_batch(batch)
+            finally:
+                with self._cond:
+                    self.inflight_requests = 0
+                    self.inflight_nests = 0
+                    self._cond.notify_all()
+
+    def _measure_nests(self, nests: Sequence[LoopNest]) -> List[Measurement]:
+        with self._measure_lock:
+            if isinstance(self.backend, MeasuredBackend):
+                return self.backend.measure_batch(nests)
+            return [measure_local(self.backend, n) for n in nests]
+
+    def _run_batch(self, batch: List[_PendingRequest]) -> None:
+        nests = [n for p in batch for n in p.nests]
+        t0 = time.monotonic()
+        try:
+            ms = self._measure_nests(nests)
+        except Exception:  # noqa: BLE001 — report, let the client decide
+            with self._cond:
+                self.errors += 1
+            if len(batch) > 1:
+                # isolate the fault: one client's broken schedule must not
+                # fail the coalesced neighbors — re-run each request alone
+                # so only the faulty one gets the error reply
+                for p in batch:
+                    self._run_batch([p])
+                return
+            self._reply(batch[0],
+                        {"ok": False, "error": traceback.format_exc()})
+            return
+        per_nest = (time.monotonic() - t0) / max(1, len(nests))
+        with self._cond:
+            self._service_s_per_nest = (
+                per_nest if self._service_s_per_nest is None
+                else 0.7 * self._service_s_per_nest + 0.3 * per_nest)
+            self.pool_batches += 1
+            if len(batch) > 1:
+                self.coalesced_batches += 1
+        i = 0
+        for p in batch:
+            part = ms[i:i + len(p.nests)]
+            i += len(p.nests)
+            # count before replying: a client that saw its reply must see
+            # itself in stats(), even if it asks immediately
+            with self._cond:
+                self.served_requests += 1
+                self.served_nests += len(p.nests)
+                self.per_client_served[p.client] = (
+                    self.per_client_served.get(p.client, 0) + 1)
+            self._reply(p, {"ok": True, "hardware": self.hardware,
+                            "measurements": [list(m.ship()) for m in part]})
+
+    def _reply(self, p: _PendingRequest, body: Dict[str, Any]) -> None:
+        reply: Dict[str, Any] = {"id": p.req_id, "proto": PROTO_VERSION}
+        reply.update(body)
+        try:
+            with p.send_lock:
+                send_frame(p.conn, reply)
+        except (OSError, ProtocolError):
+            pass  # client went away; its measurement is dropped
+
+    # -- observability -----------------------------------------------------------
+
     def stats(self) -> Dict[str, Any]:
-        return {"addr": self.addr, "requests": self.requests,
-                "errors": self.errors, "hardware": self.hardware,
-                "backend": backend_name(self.backend)}
+        with self._cond:
+            return {
+                "addr": self.addr,
+                "requests": self.requests,
+                "errors": self.errors,
+                "hardware": self.hardware,
+                "backend": backend_name(self.backend),
+                "queue_depth": self._queued,
+                "queue_limit": self.queue_limit,
+                "queue_depth_peak": self.queue_depth_peak,
+                "inflight_requests": self.inflight_requests,
+                "inflight_nests": self.inflight_nests,
+                "served_requests": self.served_requests,
+                "served_nests": self.served_nests,
+                "rejected_overload": self.rejected_overload,
+                "rejected_shutdown": self.rejected_shutdown,
+                "deferred_clients": len(self._deferred),
+                "pool_batches": self.pool_batches,
+                "coalesced_batches": self.coalesced_batches,
+                "draining": self._draining,
+                "clients": dict(self.per_client_served),
+                "service_s_per_nest": (
+                    round(self._service_s_per_nest, 6)
+                    if self._service_s_per_nest is not None else None),
+            }
 
 
 # ---------------------------------------------------------------------------
@@ -363,18 +681,26 @@ class RemoteMeasuredBackend(MeasuredBackend):
     """Measurement backend whose timings come from a remote farm.
 
     ``make_backend("remote", addr="host:port", fallback="numpy")``.  The
-    client ships ``(contraction, structure_key)`` batches, receives full
-    :class:`Measurement` records plus the farm host's hardware descriptor
-    (:meth:`measured_hardware` — the registry stamps records with it), and
-    normalizes rewards by the *farm's* ``peak()`` (learned from the
-    handshake), since that is the machine producing the GFLOPS.
+    client ships ``(contraction, structure_key)`` batches (chunked at
+    ``max_nests_per_request``, one request in flight at a time), receives
+    full :class:`Measurement` records plus the farm host's hardware
+    descriptor (:meth:`measured_hardware` — the registry stamps records
+    with it), and normalizes rewards by the *farm's* ``peak()`` (learned
+    from the handshake), since that is the machine producing the GFLOPS.
 
     Fault model: transport failures (connect refused, request deadline
     exceeded, connection dropped mid-batch) are retried with exponential
-    backoff + jitter up to ``max_retries``; past the budget the backend
-    *degrades* — warns once, and this and every later batch measures on
-    the local ``fallback`` backend instead.  A tune is therefore never
-    failed by the farm.  Server-side evaluator errors re-raise.
+    backoff + jitter up to ``max_retries``.  Explicit **backpressure**
+    replies (``overloaded`` / ``shutting_down``) are not faults: the
+    client waits the server's ``retry_after_s`` hint (with jitter, so a
+    fleet desynchronizes) without consuming transport retries, up to
+    ``backpressure_budget_s`` per request.  Past either budget the backend
+    *degrades* — warns once, and measures on the local ``fallback``
+    backend instead, so a tune is never failed by the farm.  While
+    degraded it **re-probes** the farm every ``reprobe_every_batches``
+    batches or ``reprobe_after_s`` seconds and re-promotes itself to
+    remote measurement on a successful handshake (``repromotions``
+    counter).  Server-side evaluator errors re-raise.
     """
 
     name = "remote"
@@ -391,6 +717,11 @@ class RemoteMeasuredBackend(MeasuredBackend):
         max_retries: int = 3,
         backoff_base_s: float = 0.05,
         backoff_max_s: float = 2.0,
+        backpressure_budget_s: float = 60.0,
+        max_nests_per_request: int = 64,
+        reprobe_every_batches: int = 8,
+        reprobe_after_s: float = 30.0,
+        client_id: Optional[str] = None,
     ):
         super().__init__(policy=policy, repeats=repeats, measure="inproc")
         self.measure_mode = "remote"
@@ -399,6 +730,8 @@ class RemoteMeasuredBackend(MeasuredBackend):
             raise TypeError(
                 "fallback must be a backend registry name (the degraded "
                 f"path is built lazily), got {type(fallback).__name__}")
+        if max_nests_per_request < 1:
+            raise ValueError("max_nests_per_request must be >= 1")
         self.fallback_spec = fallback
         self.fallback_kwargs = dict(fallback_kwargs or {})
         self.deadline_s = deadline_s
@@ -406,11 +739,23 @@ class RemoteMeasuredBackend(MeasuredBackend):
         self.max_retries = max_retries
         self.backoff_base_s = backoff_base_s
         self.backoff_max_s = backoff_max_s
+        self.backpressure_budget_s = backpressure_budget_s
+        self.max_nests_per_request = int(max_nests_per_request)
+        self.reprobe_every_batches = max(1, int(reprobe_every_batches))
+        self.reprobe_after_s = float(reprobe_after_s)
+        # the fair-queue identity the farm schedules on: stable per backend
+        # instance, unique across a fleet of tuner processes
+        self.client_id = client_id or (
+            f"{socket.gethostname()}-{os.getpid()}-"
+            f"{random.getrandbits(24):06x}")
         self._sock: Optional[socket.socket] = None
         self._local: Optional[Backend] = None
         self._req_id = 0
         self.degraded = False
         self.degraded_reason: Optional[str] = None
+        self._warned_fallback = False
+        self._batches_since_probe = 0
+        self._last_probe_t = time.monotonic()
         self.remote_hardware: Optional[str] = None
         self.remote_backend: Optional[str] = None
         self._remote_peak: Optional[float] = None
@@ -420,6 +765,11 @@ class RemoteMeasuredBackend(MeasuredBackend):
         self.n_connects = 0
         self.n_reconnects = 0
         self.n_degraded_batches = 0
+        self.n_degradations = 0
+        self.n_repromotions = 0
+        self.n_probes = 0
+        self.n_backpressure_waits = 0
+        self.backpressure_wait_s = 0.0
         self.farm_rtt_s = 0.0
         self.last_rtt_s = 0.0
 
@@ -451,7 +801,7 @@ class RemoteMeasuredBackend(MeasuredBackend):
         sock = socket.create_connection((self.host, self.port),
                                         timeout=self.connect_timeout_s)
         try:
-            send_frame(sock, {"op": "ping"})
+            send_frame(sock, {"op": "ping", "client": self.client_id})
             hello = recv_frame(sock)
             if hello is None or not hello.get("ok"):
                 raise ProtocolError(f"bad handshake reply: {hello!r}")
@@ -470,19 +820,31 @@ class RemoteMeasuredBackend(MeasuredBackend):
 
     def _request(self, payload: Dict[str, Any]) -> Dict[str, Any]:
         """One request with reconnect + capped exponential backoff/jitter.
-        Raises :class:`FarmUnavailableError` past the retry budget and
+
+        Transport faults consume ``max_retries``; explicit backpressure
+        replies wait the server's ``retry_after_s`` (jittered) without
+        consuming them, bounded by ``backpressure_budget_s`` per request.
+        Raises :class:`FarmUnavailableError` past either budget and
         :class:`RemoteMeasureError` on an explicit server error reply."""
         self._req_id += 1
-        payload = dict(payload, id=self._req_id, deadline_s=self.deadline_s)
+        payload = dict(payload, id=self._req_id, client=self.client_id,
+                       deadline_s=self.deadline_s)
+        faults = 0
+        waited_s = 0.0
         last_err: Optional[BaseException] = None
-        for attempt in range(self.max_retries + 1):
-            if attempt:
+        while True:
+            if faults > self.max_retries:
+                raise FarmUnavailableError(
+                    f"measurement farm at {self.host}:{self.port} "
+                    f"unavailable after {faults} attempts: {last_err}")
+            if faults and last_err is not None:
                 self.n_retries += 1
                 delay = min(self.backoff_max_s,
-                            self.backoff_base_s * (2 ** (attempt - 1)))
+                            self.backoff_base_s * (2 ** (faults - 1)))
                 # full jitter: desynchronize a fleet of clients hammering a
                 # farm that just came back
                 time.sleep(delay * (0.5 + random.random()))
+                last_err = None
             try:
                 sock = self._ensure_conn()
                 sock.settimeout(self.deadline_s)
@@ -499,6 +861,21 @@ class RemoteMeasuredBackend(MeasuredBackend):
                     raise ProtocolError(
                         f"reply id {reply.get('id')} != {self._req_id}")
                 if not reply.get("ok"):
+                    kind = reply.get("error_kind")
+                    if kind in BACKPRESSURE_KINDS:
+                        wait = float(reply.get("retry_after_s") or 0.25)
+                        wait *= 0.5 + random.random()  # jittered
+                        if waited_s + wait > self.backpressure_budget_s:
+                            raise FarmUnavailableError(
+                                f"measurement farm at {self.host}:"
+                                f"{self.port} still {kind} after waiting "
+                                f"{waited_s:.1f}s (budget "
+                                f"{self.backpressure_budget_s}s)")
+                        self.n_backpressure_waits += 1
+                        self.backpressure_wait_s += wait
+                        waited_s += wait
+                        time.sleep(wait)
+                        continue  # not a fault: transport retries intact
                     raise RemoteMeasureError(
                         f"measurement farm at {self.host}:{self.port} "
                         f"failed the request:\n{reply.get('error')}")
@@ -506,24 +883,60 @@ class RemoteMeasuredBackend(MeasuredBackend):
             except RemoteMeasureError:
                 self._drop_conn()
                 raise
+            except FarmUnavailableError:
+                self._drop_conn()
+                raise
             except (OSError, ProtocolError) as e:
                 last_err = e
                 self._drop_conn()
-        raise FarmUnavailableError(
-            f"measurement farm at {self.host}:{self.port} unavailable "
-            f"after {self.max_retries + 1} attempts: {last_err}")
+                faults += 1
 
-    # -- degradation ------------------------------------------------------------
+    # -- degradation / re-promotion ---------------------------------------------
 
     def _degrade(self, reason: str) -> None:
         if not self.degraded:
             self.degraded = True
             self.degraded_reason = reason
-            warnings.warn(
-                f"measurement farm at {self.host}:{self.port} unavailable "
-                f"({reason}); falling back to local in-process measurement "
-                f"on backend {self.fallback_spec!r}", stacklevel=3)
+            self.n_degradations += 1
+            self._batches_since_probe = 0
+            self._last_probe_t = time.monotonic()
+            if not self._warned_fallback:
+                self._warned_fallback = True
+                warnings.warn(
+                    f"measurement farm at {self.host}:{self.port} "
+                    f"unavailable ({reason}); falling back to local "
+                    f"in-process measurement on backend "
+                    f"{self.fallback_spec!r} (periodic re-probes will "
+                    f"re-promote when the farm returns)", stacklevel=3)
         self._drop_conn()
+
+    def _maybe_reprobe(self) -> bool:
+        """While degraded, periodically attempt a fresh handshake and
+        re-promote to remote measurement on success.  Returns True when no
+        longer degraded.  Probe cadence is bounded (every
+        ``reprobe_every_batches`` batches or ``reprobe_after_s`` seconds)
+        so a dead farm costs one connect timeout per window, not per
+        batch."""
+        if not self.degraded:
+            return True
+        self._batches_since_probe += 1
+        now = time.monotonic()
+        due = (self._batches_since_probe >= self.reprobe_every_batches
+               or now - self._last_probe_t >= self.reprobe_after_s)
+        if not due:
+            return False
+        self._batches_since_probe = 0
+        self._last_probe_t = now
+        self.n_probes += 1
+        try:
+            self._ensure_conn()
+        except (OSError, ProtocolError):
+            self._drop_conn()
+            return False
+        self.degraded = False
+        self.degraded_reason = None
+        self.n_repromotions += 1
+        return True
 
     def _ensure_local(self) -> Backend:
         if self._local is None:
@@ -540,30 +953,42 @@ class RemoteMeasuredBackend(MeasuredBackend):
     def measure_batch(self, nests: Sequence[LoopNest]) -> List[Measurement]:
         if not nests:
             return []
-        if not self.degraded:
+        nests = list(nests)
+        out: List[Measurement] = []
+        idx = 0
+        if self.degraded:
+            self._maybe_reprobe()
+        while idx < len(nests) and not self.degraded:
+            # bounded inflight: one request at a time, chunked so a giant
+            # batch neither monopolizes the farm's queue nor balloons frames
+            chunk = nests[idx:idx + self.max_nests_per_request]
             try:
                 reply = self._request(
                     {"op": "measure",
-                     "nests": [nest_to_wire(n) for n in nests]})
+                     "nests": [nest_to_wire(n) for n in chunk]})
                 shipped = reply.get("measurements")
-                if not isinstance(shipped, list) or len(shipped) != len(nests):
+                if not isinstance(shipped, list) or len(shipped) != len(chunk):
                     raise ProtocolError(
-                        f"{len(nests)} nests sent, "
+                        f"{len(chunk)} nests sent, "
                         f"{len(shipped) if isinstance(shipped, list) else '?'}"
                         " measurements returned")
                 if reply.get("hardware"):
                     self.remote_hardware = reply["hardware"]
-                ms = [Measurement.unship(s) for s in shipped]
-                return [self._record(n, m) for n, m in zip(nests, ms)]
+                out.extend(Measurement.unship(s) for s in shipped)
+                idx += len(chunk)
             except (FarmUnavailableError, ProtocolError) as e:
                 self._degrade(str(e))
-        self.n_degraded_batches += 1
-        local = self._ensure_local()
-        if isinstance(local, MeasuredBackend):
-            ms = local.measure_batch(nests)
-        else:
-            ms = [measure_local(local, n) for n in nests]
-        return [self._record(n, m) for n, m in zip(nests, ms)]
+        if idx < len(nests):
+            # whatever the farm did not serve measures locally, so the
+            # batch always completes in full
+            self.n_degraded_batches += 1
+            local = self._ensure_local()
+            rest = nests[idx:]
+            if isinstance(local, MeasuredBackend):
+                out.extend(local.measure_batch(rest))
+            else:
+                out.extend(measure_local(local, n) for n in rest)
+        return [self._record(n, m) for n, m in zip(nests, out)]
 
     # -- Backend protocol ---------------------------------------------------------
 
@@ -600,13 +1025,19 @@ class RemoteMeasuredBackend(MeasuredBackend):
     def farm_stats(self) -> Dict[str, Any]:
         return {
             "addr": f"{self.host}:{self.port}",
+            "client_id": self.client_id,
             "requests": self.n_requests,
             "retries": self.n_retries,
             "connects": self.n_connects,
             "reconnects": self.n_reconnects,
             "degraded": int(self.degraded),
+            "degradations": self.n_degradations,
             "degraded_batches": self.n_degraded_batches,
             "degraded_reason": self.degraded_reason,
+            "repromotions": self.n_repromotions,
+            "probes": self.n_probes,
+            "backpressure_waits": self.n_backpressure_waits,
+            "backpressure_wait_s": round(self.backpressure_wait_s, 4),
             "farm_rtt_s": round(self.farm_rtt_s, 4),
             "last_rtt_s": round(self.last_rtt_s, 4),
             "remote_hardware": self.remote_hardware,
@@ -626,6 +1057,10 @@ class RemoteMeasuredBackend(MeasuredBackend):
             "fallback": self.fallback_spec,
             "deadline_s": self.deadline_s,
             "max_retries": self.max_retries,
+            "backpressure_budget_s": self.backpressure_budget_s,
+            "max_nests_per_request": self.max_nests_per_request,
+            "reprobe_every_batches": self.reprobe_every_batches,
+            "reprobe_after_s": self.reprobe_after_s,
             "policy": self.policy.to_dict() if self.policy else None,
         }
 

@@ -268,6 +268,46 @@ class ScheduleRegistry:
                 adopted += 1
         return adopted
 
+    def flush(self, path: Optional[str] = None) -> int:
+        """Concurrent-writer-safe save: merge the on-disk table into ours,
+        then save, under an exclusive ``<path>.lock`` advisory lock.
+
+        ``save()`` alone is atomic (no torn files) but last-writer-wins:
+        two fleet shards flushing the same path would each clobber the
+        other's records.  The lock serializes the read-merge-write cycle,
+        so every writer's records survive (best-gflops-wins per key, as
+        :meth:`merge`).  Returns the number of on-disk records adopted.
+        """
+        path = os.path.abspath(path or self.path or "")
+        if not path:
+            raise ValueError("no registry path")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        try:
+            import fcntl
+        except ImportError:  # pragma: no cover - non-POSIX host
+            fcntl = None
+        lock_f = None
+        if fcntl is not None:
+            lock_f = open(path + ".lock", "a")
+            fcntl.flock(lock_f.fileno(), fcntl.LOCK_EX)
+        try:
+            adopted = 0
+            if os.path.exists(path):
+                try:
+                    disk = ScheduleRegistry(path)
+                except (ValueError, OSError) as e:
+                    warnings.warn(
+                        f"registry: could not reload {path} during flush "
+                        f"({type(e).__name__}: {e}); writing our table "
+                        "as-is", stacklevel=2)
+                else:
+                    adopted = self.merge(disk)
+            self.save(path)
+            return adopted
+        finally:
+            if lock_f is not None:
+                lock_f.close()  # releases the flock
+
     # -- lookups --------------------------------------------------------------
 
     def get(

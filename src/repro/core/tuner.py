@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import time
 import warnings
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .actions import CPU_SPLITS, TPU_SPLITS, actions_from_names, build_action_space
 from .backend import backend_name, make_backend
@@ -276,7 +276,9 @@ class LoopTuner:
                   weights: Optional[Sequence[float]] = None,
                   dtypes: Optional[Sequence[str]] = None,
                   budget_s: Optional[float] = None,
-                  eval_budget: Optional[int] = None) -> List[Dict[str, Any]]:
+                  eval_budget: Optional[int] = None,
+                  on_entry: Optional[Callable[[int, Dict[str, Any]], None]]
+                  = None) -> List[Dict[str, Any]]:
         """Tune many contractions at once.
 
         With a trained policy, the contractions become lanes of a
@@ -290,23 +292,33 @@ class LoopTuner:
         evaluations — across the contractions, so callers can spend the
         budget where the executed FLOPs are (see ``launch.tune``).  Without
         weights each contraction gets the tuner's per-bench default.
+
+        ``on_entry(i, entry)`` fires as soon as contraction ``i``'s entry
+        is recorded (both policy and search paths) — the hook crash-
+        resumable tuning journals per-contraction progress through (see
+        ``launch.tune``'s :class:`TuneJournal`).
         """
         dtypes = list(dtypes) if dtypes is not None else ["float32"] * len(benches)
         if self.policy != "policy":
             if weights is None:
-                return [self.tune(b, kernel, dtype=dt)
-                        for b, dt in zip(benches, dtypes)]
-            total = float(sum(weights)) or 1.0
-            share = [w / total for w in weights]
+                share = [None] * len(benches)
+            else:
+                total = float(sum(weights)) or 1.0
+                share = [w / total for w in weights]
             total_s = (budget_s if budget_s is not None
                        else self.search_budget_s * len(benches))
             entries = []
-            for b, dt, w in zip(benches, dtypes, share):
-                evals = (max(2, int(round(eval_budget * w)))
-                         if eval_budget is not None else None)
-                entries.append(self.tune(b, kernel, dtype=dt,
-                                         budget_s=total_s * w,
-                                         max_evals=evals))
+            for i, (b, dt, w) in enumerate(zip(benches, dtypes, share)):
+                if w is None:
+                    entry = self.tune(b, kernel, dtype=dt)
+                else:
+                    evals = (max(2, int(round(eval_budget * w)))
+                             if eval_budget is not None else None)
+                    entry = self.tune(b, kernel, dtype=dt,
+                                      budget_s=total_s * w, max_evals=evals)
+                entries.append(entry)
+                if on_entry is not None:
+                    on_entry(i, entry)
             return entries
         entries: List[Dict[str, Any]] = []
         for lo in range(0, len(benches), vec_size):
@@ -328,6 +340,8 @@ class LoopTuner:
                 entry["tune_time_s"] = per_bench_s
                 entry["base_gflops"] = float(venv.initial_gflops[i])
                 entries.append(entry)
+                if on_entry is not None:
+                    on_entry(lo + i, entry)
         return entries
 
     def stats(self) -> Dict[str, Any]:

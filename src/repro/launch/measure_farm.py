@@ -9,6 +9,15 @@ batches parallelize across this host's cores and a hung schedule is
 bounded by ``--task-timeout-s`` (the pool's hung-kill machinery) instead
 of wedging the farm.
 
+Fleet capacity is bounded and observable: ``--queue-limit`` caps the
+central admission queue (beyond it clients get ``overloaded`` +
+``retry_after_s`` and back off), ``--coalesce-requests`` /
+``--coalesce-nests`` bound how much queued cross-client work folds into
+one pool batch, and the ``status`` op reports queue depth / inflight /
+served / per-client counters.  SIGTERM (and ``--max-requests``) drains:
+stop accepting, finish queued + inflight work, answer stragglers
+``shutting_down``, exit 0 — so a supervised farm restarts cleanly.
+
     PYTHONPATH=src python -m repro.launch.measure_farm \
         --addr 0.0.0.0:7461 --backend jax --measure pool
 
@@ -20,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import signal
 import sys
 from typing import Any, Dict, Optional
 
@@ -35,6 +45,9 @@ def build_server(
     task_timeout_s: Optional[float] = 120.0,
     repeats: Optional[int] = None,
     max_requests: Optional[int] = None,
+    queue_limit: int = 32,
+    coalesce_requests: int = 4,
+    coalesce_nests: int = 64,
 ) -> MeasureServer:
     host, port = parse_addr(addr)
     kwargs: Dict[str, Any] = {"measure": measure}
@@ -46,7 +59,10 @@ def build_server(
             repeats=repeats,
             max_repeats=max(repeats, MeasurementPolicy.max_repeats))
     return MeasureServer(host=host, port=port, backend=backend,
-                         backend_kwargs=kwargs, max_requests=max_requests)
+                         backend_kwargs=kwargs, max_requests=max_requests,
+                         queue_limit=queue_limit,
+                         coalesce_requests=coalesce_requests,
+                         coalesce_nests=coalesce_nests)
 
 
 def main(argv=None) -> int:
@@ -65,15 +81,35 @@ def main(argv=None) -> int:
     ap.add_argument("--repeats", type=int, default=None,
                     help="base best-of window (default: policy default)")
     ap.add_argument("--max-requests", type=int, default=None,
-                    help="exit after N measure requests (tests/smoke)")
+                    help="drain after N measure requests (tests/smoke)")
+    ap.add_argument("--queue-limit", type=int, default=32,
+                    help="admission queue bound; beyond it clients get "
+                         "'overloaded' + retry_after_s (default 32)")
+    ap.add_argument("--coalesce-requests", type=int, default=4,
+                    help="max queued requests folded into one pool batch")
+    ap.add_argument("--coalesce-nests", type=int, default=64,
+                    help="max nests per coalesced pool batch")
     args = ap.parse_args(argv)
 
     server = build_server(
         addr=args.addr, backend=args.backend, measure=args.measure,
         pool_workers=args.pool_workers, task_timeout_s=args.task_timeout_s,
-        repeats=args.repeats, max_requests=args.max_requests)
+        repeats=args.repeats, max_requests=args.max_requests,
+        queue_limit=args.queue_limit,
+        coalesce_requests=args.coalesce_requests,
+        coalesce_nests=args.coalesce_nests)
+
+    def _on_sigterm(signum, frame):  # noqa: ARG001 - signal signature
+        # drain, don't die: finish queued + inflight work, answer new
+        # requests shutting_down, release serve_forever → exit 0
+        print("[farm] SIGTERM: draining", flush=True)
+        server.drain()
+
+    signal.signal(signal.SIGTERM, _on_sigterm)
+
     print(f"[farm] listening on {server.addr} "
           f"backend={args.backend} measure={args.measure} "
+          f"queue_limit={args.queue_limit} "
           f"hardware={server.hardware!r}", flush=True)
     try:
         server.serve_forever()

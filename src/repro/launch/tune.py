@@ -12,20 +12,85 @@ land in a :class:`~repro.core.registry.ScheduleRegistry` table that
 
     PYTHONPATH=src python -m repro.launch.tune --arch musicgen-large \
         --registry /tmp/musicgen.json --budget-s 4
+
+Tuning is **crash-resumable**: per-contraction results append to a JSONL
+journal (default ``<registry>.journal.jsonl``) the moment each contraction
+finishes, and the registry flushes (lock-merge-save) at the same
+granularity — so a client kill, farm death, or host reboot loses at most
+the contraction in flight.  ``--resume`` reloads the journal and re-tunes
+only the unfinished contractions.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import ShapeCell, get_config, input_specs
 from repro.core.backend import make_backend
-from repro.core.loop_ir import Contraction, matmul_benchmark
+from repro.core.loop_ir import matmul_benchmark
 from repro.core.registry import ScheduleRegistry
 from repro.core.tuner import LoopTuner
+
+
+class TuneJournal:
+    """Append-only JSONL ledger of per-contraction tune results.
+
+    One line per finished contraction: ``{"key": ..., "entry": {...}}``,
+    flushed + fsynced on append so a SIGKILL after contraction *i* leaves
+    lines 0..i durable.  :meth:`load` tolerates a torn trailing line (the
+    one write a crash can interrupt) by ignoring it; torn lines *elsewhere*
+    are warned about and skipped — progress is best-effort recovered, never
+    corrupted.  Keys are workload signatures (:meth:`key_of`), so a resume
+    matches by what was tuned, not by position.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+
+    @staticmethod
+    def key_of(m: int, k: int, n: int, dtype: str = "float32") -> str:
+        return f"mm:{m}x{k}x{n}:{dtype}"
+
+    def load(self) -> Dict[str, Dict[str, Any]]:
+        done: Dict[str, Dict[str, Any]] = {}
+        if not os.path.exists(self.path):
+            return done
+        with open(self.path) as f:
+            lines = f.read().splitlines()
+        for i, line in enumerate(lines):
+            if not line.strip():
+                continue
+            try:
+                rec = json.loads(line)
+                done[str(rec["key"])] = dict(rec["entry"])
+            except (ValueError, KeyError, TypeError):
+                if i == len(lines) - 1:
+                    continue  # torn tail: the interrupted final append
+                warnings.warn(
+                    f"tune journal {self.path}: skipping corrupt line "
+                    f"{i + 1} (not the tail — was the file edited?)",
+                    stacklevel=2)
+        return done
+
+    def append(self, key: str, entry: Dict[str, Any]) -> None:
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        line = json.dumps({"key": key, "entry": entry}, default=str)
+        with open(self.path, "a") as f:
+            f.write(line + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def reset(self) -> None:
+        """Start a fresh session (non-resume runs must not inherit a stale
+        journal, or a later --resume would skip work it never did)."""
+        if os.path.exists(self.path):
+            os.unlink(self.path)
 
 
 def harvest_model(
@@ -83,6 +148,71 @@ def harvest_model(
     return out
 
 
+def tune_records(
+    kept: Sequence[Dict[str, Any]],
+    *,
+    tuner: LoopTuner,
+    registry: ScheduleRegistry,
+    registry_path: Optional[str] = None,
+    budget_s: float = 4.0,
+    eval_budget: Optional[int] = None,
+    journal: Optional[TuneJournal] = None,
+    resume: bool = False,
+) -> Tuple[List[Dict[str, Any]], int]:
+    """Tune harvested contraction records with journaled checkpoints.
+
+    Each record needs ``m/k/n/dtype`` and ``flop_share`` (budget weight).
+    As each contraction finishes, its entry appends to ``journal`` and the
+    registry flushes (lock-merge-save) — crash granularity is one
+    contraction.  With ``resume``, records whose journal key is already
+    present are skipped (their journaled entries returned in place) and
+    the remaining budget is scaled to the remaining FLOP share.  Returns
+    ``(entries aligned with kept, n_skipped)``.
+    """
+    kept = list(kept)
+    keys = [TuneJournal.key_of(r["m"], r["k"], r["n"], r["dtype"])
+            for r in kept]
+    done: Dict[str, Dict[str, Any]] = {}
+    if journal is not None:
+        if resume:
+            done = journal.load()
+        else:
+            journal.reset()
+    todo = [i for i, k in enumerate(keys) if k not in done]
+    entries: List[Optional[Dict[str, Any]]] = [
+        None if k not in done else dict(done[k], resumed=True)
+        for k in keys]
+    if not todo:
+        return [e for e in entries if e is not None], len(kept)
+
+    total_share = sum(r["flop_share"] for r in kept) or 1.0
+    todo_share = sum(kept[i]["flop_share"] for i in todo) or 1.0
+    flush_path = registry_path or registry.path
+
+    def on_entry(j: int, entry: Dict[str, Any]) -> None:
+        i = todo[j]
+        entries[i] = entry
+        if journal is not None:
+            journal.append(keys[i], entry)
+        # flush, not save: concurrent fleet shards (and a farm-side merge)
+        # must not lose each other's records
+        if flush_path:
+            registry.flush(flush_path)
+
+    tuner.tune_many(
+        [matmul_benchmark(kept[i]["m"], kept[i]["k"], kept[i]["n"])
+         for i in todo],
+        kernel="mm",
+        weights=[kept[i]["flop_share"] / todo_share for i in todo],
+        dtypes=[kept[i]["dtype"] for i in todo],
+        budget_s=budget_s * (todo_share / total_share),
+        eval_budget=(max(len(todo),
+                         int(round(eval_budget * todo_share / total_share)))
+                     if eval_budget is not None else None),
+        on_entry=on_entry)
+    return [e for e in entries if e is not None], len(kept) - len(todo)
+
+
 def tune_model(
     cfg_or_arch,
     *,
@@ -102,6 +232,8 @@ def tune_model(
     kinds: Sequence[str] = ("decode", "prefill"),
     kernel_cache: Optional[str] = None,
     farm: Optional[str] = None,
+    journal_path: Optional[str] = None,
+    resume: bool = False,
 ) -> Dict[str, Any]:
     """Tune every contraction a model config lowers to; persist the table.
 
@@ -137,22 +269,16 @@ def tune_model(
                             max_len=max_len, kinds=kinds)
     kept = records[:max_contractions]
     share_kept = sum(r["flop_share"] for r in kept)
-    benches: List[Contraction] = []
-    weights: List[float] = []
-    dtypes: List[str] = []
-    for r in kept:
-        benches.append(matmul_benchmark(r["m"], r["k"], r["n"]))
-        weights.append(r["flop_share"] / share_kept if share_kept else 1.0)
-        dtypes.append(r["dtype"])
 
-    entries = tuner.tune_many(
-        benches, kernel="mm", weights=weights, dtypes=dtypes,
-        budget_s=budget_s, eval_budget=eval_budget)
+    journal = TuneJournal(journal_path) if journal_path else None
+    entries, n_skipped = tune_records(
+        kept, tuner=tuner, registry=registry, registry_path=registry_path,
+        budget_s=budget_s, eval_budget=eval_budget,
+        journal=journal, resume=resume)
 
-    if registry_path:
-        registry.save(registry_path)
-    elif registry.path:
-        registry.save()
+    path = registry_path or registry.path
+    if path:
+        registry.flush(path)
     compile_stats = getattr(tuner.backend, "compile_stats", None)
     farm_stats = getattr(tuner.backend, "farm_stats", None)
     return {
@@ -162,6 +288,9 @@ def tune_model(
                    "max_len": max_len},
         "n_harvested": len(records),
         "n_tuned": len(entries),
+        "n_skipped": n_skipped,
+        "resumed": bool(resume),
+        "journal": journal_path,
         "flop_share_covered": share_kept,
         "registry_size": len(registry),
         "registry_path": registry_path or registry.path,
@@ -173,7 +302,8 @@ def tune_model(
             {"m": r["m"], "k": r["k"], "n": r["n"], "dtype": r["dtype"],
              "count": r["count"], "flop_share": round(r["flop_share"], 4),
              "gflops": e.get("gflops"),
-             "base_gflops": e.get("base_gflops")}
+             "base_gflops": e.get("base_gflops"),
+             "resumed": bool(e.get("resumed", False))}
             for r, e in zip(kept, entries)
         ],
     }
@@ -202,6 +332,12 @@ def main(argv=None) -> int:
                     help="measure on a remote farm (repro.launch."
                          "measure_farm); --backend becomes the local "
                          "fallback if the farm is unreachable")
+    ap.add_argument("--journal", default=None,
+                    help="per-contraction JSONL progress ledger (default: "
+                         "<registry>.journal.jsonl; 'off' disables)")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip contractions already in the journal (after "
+                         "a crash/kill: re-tunes only unfinished work)")
     args = ap.parse_args(argv)
 
     # the kernel store lives beside the registry by default: the artifacts
@@ -214,12 +350,23 @@ def main(argv=None) -> int:
     else:
         kernel_cache = args.kernel_cache
 
+    # the journal lives beside the registry by default, same reasoning as
+    # the kernel store: session state and its output travel together
+    journal_path: Optional[str]
+    if args.journal == "off":
+        journal_path = None
+    elif args.journal is None:
+        journal_path = args.registry + ".journal.jsonl"
+    else:
+        journal_path = args.journal
+
     report = tune_model(
         args.arch, registry_path=args.registry, checkpoint=args.checkpoint,
         backend=args.backend, budget_s=args.budget_s,
         eval_budget=args.eval_budget, max_contractions=args.max_contractions,
         smoke=not args.full, batch=args.batch, prompt_len=args.prompt_len,
-        max_len=args.max_len, kernel_cache=kernel_cache, farm=args.farm)
+        max_len=args.max_len, kernel_cache=kernel_cache, farm=args.farm,
+        journal_path=journal_path, resume=args.resume)
     print("[tune]", json.dumps(report, indent=1), flush=True)
     return 0
 

@@ -1,0 +1,177 @@
+"""TCP fault-injection proxy for chaos-testing the measurement farm.
+
+Sits between a ``RemoteMeasuredBackend`` and a ``MeasureServer`` and
+injects the network's unglamorous failure modes on command: added latency,
+silent connection drops, hard RST resets, and mid-frame byte truncation.
+The farm's robustness claims (retry/backoff, reconnect, degrade-to-local,
+re-promotion) are only real if they survive these.
+
+    srv = MeasureServer(backend="tpu").start()
+    proxy = FaultProxy(srv.addr, plan=[
+        {"kind": "reset", "after_bytes": 0},      # conn 1: RST the reply
+        None,                                     # conn 2: clean
+    ])
+    rb = make_backend("remote", addr=proxy.addr, fallback="tpu")
+
+Each accepted connection consumes the next fault spec from ``plan`` (a
+``None`` spec means clean passthrough); when the plan is exhausted,
+``default_fault`` applies (default: clean).  Fault specs:
+
+* ``{"kind": "delay", "delay_s": S}`` — sleep S before forwarding each
+  chunk (per-direction added latency).
+* ``{"kind": "drop", "after_bytes": N}`` — forward N bytes, then close
+  both sides silently (clean FIN mid-stream: a NAT timeout, a dying VM).
+* ``{"kind": "reset", "after_bytes": N}`` — forward N bytes, then close
+  the client side with SO_LINGER(1, 0): an RST, the TCP equivalent of a
+  kill -9.
+* ``{"kind": "truncate", "after_bytes": N}`` — forward exactly N bytes
+  then close: cuts a length-prefixed frame in half, which the receiver
+  must treat as a protocol fault, not valid data.
+
+``"dir"`` selects the direction the fault applies to: ``"u2c"``
+(upstream→client, i.e. replies — the default) or ``"c2u"``
+(client→upstream, i.e. requests).
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+
+class FaultProxy:
+    """A one-hop TCP proxy that injects faults per accepted connection."""
+
+    def __init__(
+        self,
+        upstream: Union[str, Tuple[str, int]],
+        plan: Optional[Sequence[Optional[Dict[str, Any]]]] = None,
+        default_fault: Optional[Dict[str, Any]] = None,
+    ):
+        if isinstance(upstream, str):
+            host, _, port = upstream.rpartition(":")
+            self.upstream: Tuple[str, int] = (host, int(port))
+        else:
+            self.upstream = (upstream[0], int(upstream[1]))
+        self.plan: List[Optional[Dict[str, Any]]] = list(plan or [])
+        self.default_fault = default_fault
+        self.n_conns = 0
+        self.n_faults = 0
+        self._lock = threading.Lock()
+        self._closed = False
+        self._socks: List[socket.socket] = []
+        self._listener = socket.create_server(("127.0.0.1", 0))
+        self.host, self.port = self._listener.getsockname()[:2]
+        threading.Thread(target=self._accept_loop, daemon=True,
+                         name=f"fault-proxy-{self.port}").start()
+
+    @property
+    def addr(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            socks, self._socks = list(self._socks), []
+        for s in socks:
+            try:
+                s.close()
+            except OSError:
+                pass
+
+    def __enter__(self) -> "FaultProxy":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- internals -------------------------------------------------------------
+
+    def _next_fault(self) -> Optional[Dict[str, Any]]:
+        with self._lock:
+            self.n_conns += 1
+            if self.plan:
+                return self.plan.pop(0)
+            return self.default_fault
+
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                client, _ = self._listener.accept()
+            except OSError:
+                return
+            fault = self._next_fault()
+            threading.Thread(target=self._handle, args=(client, fault),
+                             daemon=True).start()
+
+    def _handle(self, client: socket.socket,
+                fault: Optional[Dict[str, Any]]) -> None:
+        try:
+            up = socket.create_connection(self.upstream, timeout=5.0)
+        except OSError:
+            client.close()
+            return
+        with self._lock:
+            self._socks.extend((client, up))
+            if fault is not None:
+                self.n_faults += 1
+        for src, dst, direction in ((client, up, "c2u"), (up, client, "u2c")):
+            threading.Thread(
+                target=self._pump, args=(src, dst, direction, fault,
+                                         client, up),
+                daemon=True).start()
+
+    def _kill(self, client: socket.socket, up: socket.socket,
+              reset: bool) -> None:
+        if reset:
+            # SO_LINGER(on, 0): close() sends RST instead of FIN
+            try:
+                client.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                                  struct.pack("ii", 1, 0))
+            except OSError:
+                pass
+        for s in (client, up):
+            try:
+                s.close()
+            except OSError:
+                pass
+
+    def _pump(self, src: socket.socket, dst: socket.socket, direction: str,
+              fault: Optional[Dict[str, Any]], client: socket.socket,
+              up: socket.socket) -> None:
+        f = (fault if fault is not None
+             and fault.get("dir", "u2c") == direction else None)
+        budget: Optional[int] = None
+        if f is not None and f["kind"] in ("drop", "reset", "truncate"):
+            budget = int(f.get("after_bytes", 0))
+        try:
+            while True:
+                data = src.recv(65536)
+                if not data:
+                    break
+                if f is not None and f["kind"] == "delay":
+                    time.sleep(float(f.get("delay_s", 0.05)))
+                if budget is not None:
+                    if len(data) >= budget:
+                        if budget > 0:
+                            try:
+                                dst.sendall(data[:budget])
+                            except OSError:
+                                pass
+                        self._kill(client, up, reset=f["kind"] == "reset")
+                        return
+                    budget -= len(data)
+                dst.sendall(data)
+        except OSError:
+            return
+        # clean EOF: propagate the half-close so framing sees a tidy end
+        try:
+            dst.shutdown(socket.SHUT_WR)
+        except OSError:
+            pass

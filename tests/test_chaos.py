@@ -1,0 +1,644 @@
+"""Chaos suite: the farm under injected faults, overload, and crash-resume.
+
+Drives the fleet-grade measurement farm through the failure modes that
+actually happen at scale — added latency, RSTs, truncated frames, silent
+drops (via :class:`fault_proxy.FaultProxy`), sustained overload from
+concurrent clients, drain/shutdown races, farm SIGKILL + restart — and
+asserts the robustness contract: every tune completes with zero failed
+measurements, the registry never loses or tears records, degraded clients
+re-promote when the farm returns, and ``--resume`` after a mid-run kill
+re-tunes only the unfinished contractions.  Subprocess farm tests are
+marked ``slow``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+from fault_proxy import FaultProxy
+
+from repro.core import (
+    LoopTuner,
+    MeasureServer,
+    ScheduleRegistry,
+    make_backend,
+)
+from repro.core.cost_model import TPUAnalyticalBackend
+from repro.core.loop_ir import LoopNest, matmul_benchmark
+from repro.core.measure_service import recv_frame, send_frame
+from repro.launch.tune import TuneJournal, tune_records
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+BENCH = matmul_benchmark(64, 64, 64)
+
+
+def _schedules(n=4, seed=0):
+    from repro.core.actions import CPU_SPLITS, build_action_space
+    from repro.core.actions import apply_action, is_legal
+
+    actions = build_action_space(CPU_SPLITS)
+    rng = np.random.default_rng(seed)
+    out, seen = [], set()
+    root = LoopNest(BENCH)
+    tries = 0
+    while len(out) < n and tries < 200:
+        tries += 1
+        cur = root.clone()
+        for _ in range(4):
+            legal = [a for a in actions if is_legal(cur, a)]
+            if not legal:
+                break
+            apply_action(cur, legal[rng.integers(len(legal))])
+        k = cur.structure_key()
+        if k not in seen:
+            seen.add(k)
+            out.append(cur)
+    return out
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+class _PacedBackend(TPUAnalyticalBackend):
+    """Deterministic backend with a fixed per-evaluate service time, so
+    overload scenarios have a stable work rate to push against."""
+
+    def __init__(self, sleep_s: float):
+        super().__init__()
+        self.sleep_s = sleep_s
+
+    def evaluate(self, nest):
+        time.sleep(self.sleep_s)
+        return super().evaluate(nest)
+
+
+# ---------------------------------------------------------------------------
+# Fault proxy: transport chaos between client and farm
+# ---------------------------------------------------------------------------
+
+
+def test_proxy_clean_passthrough_parity():
+    nests = _schedules(4)
+    local = make_backend("tpu")
+    with MeasureServer(backend="tpu").start() as srv, \
+            FaultProxy(srv.addr) as proxy:
+        rb = make_backend("remote", addr=proxy.addr, fallback="tpu")
+        assert np.array_equal(rb.evaluate_batch(nests),
+                              local.evaluate_batch(nests))
+        assert not rb.degraded and rb.farm_stats()["retries"] == 0
+        rb.close()
+
+
+def test_delay_within_deadline_does_not_degrade():
+    nests = _schedules(3)
+    local = make_backend("tpu")
+    with MeasureServer(backend="tpu").start() as srv, \
+            FaultProxy(srv.addr,
+                       default_fault={"kind": "delay",
+                                      "delay_s": 0.05}) as proxy:
+        rb = make_backend("remote", addr=proxy.addr, fallback="tpu",
+                          deadline_s=10.0)
+        assert np.array_equal(rb.evaluate_batch(nests),
+                              local.evaluate_batch(nests))
+        assert not rb.degraded
+        assert rb.farm_stats()["last_rtt_s"] >= 0.05  # the delay is real
+        rb.close()
+
+
+def test_reset_mid_handshake_reconnects_clean():
+    nests = _schedules(3)
+    local = make_backend("tpu")
+    with MeasureServer(backend="tpu").start() as srv, \
+            FaultProxy(srv.addr,
+                       plan=[{"kind": "reset", "after_bytes": 0}]) as proxy:
+        rb = make_backend("remote", addr=proxy.addr, fallback="tpu",
+                          max_retries=3, backoff_base_s=0.01)
+        # conn 1 gets an RST the moment the farm replies; the retry loop
+        # reconnects (conn 2 is clean) without degrading
+        assert np.array_equal(rb.evaluate_batch(nests),
+                              local.evaluate_batch(nests))
+        assert not rb.degraded
+        stats = rb.farm_stats()
+        assert stats["retries"] >= 1 and stats["degraded_batches"] == 0
+        assert proxy.n_faults == 1
+        rb.close()
+
+
+def test_truncated_reply_is_a_fault_not_data():
+    nests = _schedules(3)
+    local = make_backend("tpu")
+    with MeasureServer(backend="tpu").start() as srv, \
+            FaultProxy(srv.addr,
+                       plan=[{"kind": "truncate",
+                              "after_bytes": 20}]) as proxy:
+        rb = make_backend("remote", addr=proxy.addr, fallback="tpu",
+                          max_retries=3, backoff_base_s=0.01)
+        # 20 bytes of the handshake reply, then EOF: a frame cut mid-body
+        # must surface as a protocol fault and retry, never parse as data
+        assert np.array_equal(rb.evaluate_batch(nests),
+                              local.evaluate_batch(nests))
+        assert not rb.degraded and rb.farm_stats()["retries"] >= 1
+        rb.close()
+
+
+def test_truncated_request_recovers_too():
+    nests = _schedules(3)
+    local = make_backend("tpu")
+    with MeasureServer(backend="tpu").start() as srv, \
+            FaultProxy(srv.addr,
+                       plan=[{"kind": "truncate", "after_bytes": 150,
+                              "dir": "c2u"}]) as proxy:
+        rb = make_backend("remote", addr=proxy.addr, fallback="tpu",
+                          max_retries=3, backoff_base_s=0.01)
+        # the ping passes under 150 bytes; the measure request is cut
+        # mid-frame on its way to the farm (which drops the garbled conn)
+        assert np.array_equal(rb.evaluate_batch(nests),
+                              local.evaluate_batch(nests))
+        assert not rb.degraded and rb.farm_stats()["retries"] >= 1
+        rb.close()
+
+
+def test_silent_drop_retries_clean():
+    nests = _schedules(3)
+    local = make_backend("tpu")
+    with MeasureServer(backend="tpu").start() as srv, \
+            FaultProxy(srv.addr,
+                       plan=[{"kind": "drop", "after_bytes": 0}]) as proxy:
+        rb = make_backend("remote", addr=proxy.addr, fallback="tpu",
+                          max_retries=3, backoff_base_s=0.01)
+        assert np.array_equal(rb.evaluate_batch(nests),
+                              local.evaluate_batch(nests))
+        assert not rb.degraded and rb.farm_stats()["retries"] >= 1
+        rb.close()
+
+
+def test_tune_through_chaos_never_fails():
+    """A full tune through a proxy that faults every other connection still
+    completes with schedules measured (remotely or locally), zero failed."""
+    plan = []
+    for i in range(20):
+        plan.append({"kind": "reset", "after_bytes": 0} if i % 2 == 0
+                    else None)
+    with MeasureServer(backend="tpu").start() as srv, \
+            FaultProxy(srv.addr, plan=plan) as proxy:
+        rb = make_backend("remote", addr=proxy.addr, fallback="tpu",
+                          max_retries=4, backoff_base_s=0.01)
+        tuner = LoopTuner(policy="search", backend=rb)
+        entry = tuner.tune(BENCH, max_evals=8)
+        assert entry["gflops"] > 0
+        ms = tuner.stats()["measure"]
+        assert ms.get("pool", {}).get("failed_tasks", 0) == 0
+        rb.close()
+
+
+# ---------------------------------------------------------------------------
+# Admission control, fairness, backpressure (in-process overload)
+# ---------------------------------------------------------------------------
+
+
+def test_overload_is_bounded_fair_and_survivable():
+    """4 concurrent clients against a queue_limit=2 farm: queue depth stays
+    bounded, overload rejections are explicit, clients wait them out
+    without degrading, and round-robin keeps served counts within 2x."""
+    nests = _schedules(2)
+    srv = MeasureServer(backend=_PacedBackend(0.005), queue_limit=2,
+                        coalesce_requests=1).start()
+    clients = [make_backend("remote", addr=srv.addr, fallback="tpu",
+                            backpressure_budget_s=30.0, max_retries=2,
+                            backoff_base_s=0.01)
+               for _ in range(4)]
+    try:
+        t_end = time.monotonic() + 1.5
+        errors = []
+
+        def run(rb):
+            try:
+                while time.monotonic() < t_end:
+                    rb.evaluate_batch(nests)
+            except Exception as e:  # noqa: BLE001 — collected for assert
+                errors.append(e)
+
+        threads = [threading.Thread(target=run, args=(rb,))
+                   for rb in clients]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+        stats = srv.stats()
+        assert stats["queue_depth_peak"] <= 2  # admission bound held
+        assert stats["rejected_overload"] > 0  # overload was explicit
+        served = [stats["clients"].get(rb.client_id, 0) for rb in clients]
+        assert all(s >= 1 for s in served), served
+        assert max(served) <= 2 * min(served), served  # RR fairness
+        assert sum(rb.farm_stats()["backpressure_waits"]
+                   for rb in clients) > 0
+        assert all(not rb.degraded for rb in clients)
+        assert all(rb.farm_stats()["degradations"] == 0 for rb in clients)
+    finally:
+        for rb in clients:
+            rb.close()
+        srv.close()
+
+
+def test_cross_client_requests_coalesce_into_one_batch():
+    srv = MeasureServer(backend=_PacedBackend(0.2), queue_limit=8,
+                        coalesce_requests=4).start()
+    nests = _schedules(2)
+    clients = [make_backend("remote", addr=srv.addr, fallback="tpu")
+               for _ in range(3)]
+    try:
+        # one slow request (>= 0.4s) occupies the dispatcher while the
+        # others queue behind it; the queued requests then fold into one
+        # backend batch
+        threads = [threading.Thread(target=rb.evaluate_batch, args=(nests,))
+                   for rb in clients]
+        for t in threads:
+            t.start()
+            time.sleep(0.04)  # let the first request reach the dispatcher
+        for t in threads:
+            t.join()
+        stats = srv.stats()
+        assert stats["served_requests"] == 3
+        assert stats["coalesced_batches"] >= 1
+        assert stats["pool_batches"] < 3  # fewer batches than requests
+    finally:
+        for rb in clients:
+            rb.close()
+        srv.close()
+
+
+def test_status_op_reports_farm_health():
+    with MeasureServer(backend="tpu", queue_limit=7).start() as srv:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu")
+        rb.evaluate_batch(_schedules(2))
+        sock = socket.create_connection((srv.host, srv.port), timeout=5)
+        send_frame(sock, {"op": "status", "id": 1})
+        reply = recv_frame(sock)
+        sock.close()
+        assert reply["ok"] and reply["id"] == 1
+        for field in ("queue_depth", "queue_limit", "queue_depth_peak",
+                      "inflight_requests", "served_requests", "served_nests",
+                      "rejected_overload", "rejected_shutdown", "draining",
+                      "clients"):
+            assert field in reply, field
+        assert reply["queue_limit"] == 7
+        assert reply["served_requests"] == 1
+        assert reply["clients"].get(rb.client_id) == 1
+        assert reply["draining"] is False
+        rb.close()
+
+
+def test_drain_answers_shutting_down_not_severed_socket():
+    local = make_backend("tpu")
+    nests = _schedules(3)
+    with MeasureServer(backend="tpu").start() as srv:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu",
+                          backpressure_budget_s=0.4, max_retries=1,
+                          backoff_base_s=0.01)
+        assert np.array_equal(rb.evaluate_batch(nests),
+                              local.evaluate_batch(nests))
+        assert srv.drain(wait=True, timeout=5.0)
+        # the existing connection stays open; a new request gets a clean
+        # shutting_down reply, which the client treats as backpressure and
+        # — once the wait budget is spent — degrades to local, not to a
+        # burned transport-retry budget
+        with pytest.warns(UserWarning, match="falling back"):
+            g = rb.evaluate_batch(nests)
+        assert np.array_equal(g, local.evaluate_batch(nests))
+        assert rb.degraded
+        stats = rb.farm_stats()
+        assert stats["backpressure_waits"] >= 1
+        assert stats["retries"] == 0  # clean replies are not faults
+        assert srv.rejected_shutdown >= 1
+        rb.close()
+
+
+def test_max_requests_drains_instead_of_severing():
+    local = make_backend("tpu")
+    nests = _schedules(2)
+    with MeasureServer(backend="tpu", max_requests=1).start() as srv:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu",
+                          backpressure_budget_s=0.4, max_retries=1,
+                          backoff_base_s=0.01)
+        # request 1: admitted and served in full
+        assert np.array_equal(rb.evaluate_batch(nests),
+                              local.evaluate_batch(nests))
+        # request 2: clean shutting_down reply on the same socket
+        with pytest.warns(UserWarning, match="falling back"):
+            g = rb.evaluate_batch(nests)
+        assert np.array_equal(g, local.evaluate_batch(nests))
+        assert rb.farm_stats()["retries"] == 0
+        assert srv.rejected_shutdown >= 1
+        assert srv.stats()["draining"] is True
+        rb.close()
+
+
+def test_degraded_client_repromotes_when_farm_returns():
+    nest = _schedules(1)[0]
+    local = make_backend("tpu")
+    srv1 = MeasureServer(backend="tpu").start()
+    port = srv1.port
+    rb = make_backend("remote", addr=srv1.addr, fallback="tpu",
+                      max_retries=0, backoff_base_s=0.01,
+                      connect_timeout_s=0.3, reprobe_every_batches=1)
+    assert rb.evaluate(nest) == local.evaluate(nest)
+    srv1.close()
+    with pytest.warns(UserWarning, match="falling back"):
+        assert rb.evaluate(nest) == local.evaluate(nest)
+    assert rb.degraded
+    # farm comes back on the same port: the next batch's re-probe promotes
+    # the client back to remote measurement
+    srv2 = MeasureServer(port=port, backend="tpu").start()
+    try:
+        assert rb.evaluate(nest) == local.evaluate(nest)
+        stats = rb.farm_stats()
+        assert not rb.degraded
+        assert stats["repromotions"] == 1
+        assert stats["probes"] >= 1
+        assert srv2.served_requests >= 1  # the batch really went remote
+    finally:
+        rb.close()
+        srv2.close()
+
+
+def test_dead_farm_reprobe_cadence_is_bounded():
+    addr = f"127.0.0.1:{_free_port()}"
+    rb = make_backend("remote", addr=addr, fallback="tpu",
+                      max_retries=0, backoff_base_s=0.01,
+                      connect_timeout_s=0.2,
+                      reprobe_every_batches=3, reprobe_after_s=3600.0)
+    nest = _schedules(1)[0]
+    with pytest.warns(UserWarning, match="falling back"):
+        rb.evaluate(nest)
+    assert rb.degraded
+    for _ in range(6):  # 6 degraded batches, cadence 3 → exactly 2 probes
+        rb.evaluate(nest)
+    stats = rb.farm_stats()
+    assert stats["probes"] == 2
+    assert stats["repromotions"] == 0 and rb.degraded
+    rb.close()
+
+
+# ---------------------------------------------------------------------------
+# Crash-resumable tuning (journal + registry flush)
+# ---------------------------------------------------------------------------
+
+
+def _records():
+    return [
+        {"m": 64, "k": 64, "n": 64, "dtype": "float32", "flop_share": 0.5},
+        {"m": 48, "k": 48, "n": 48, "dtype": "float32", "flop_share": 0.3},
+        {"m": 32, "k": 32, "n": 32, "dtype": "float32", "flop_share": 0.2},
+    ]
+
+
+def test_journal_appends_are_durable_and_torn_tail_tolerated(tmp_path):
+    j = TuneJournal(str(tmp_path / "tune.journal.jsonl"))
+    j.append("mm:64x64x64:float32", {"gflops": 1.0})
+    j.append("mm:48x48x48:float32", {"gflops": 2.0})
+    # a SIGKILL mid-append leaves a torn trailing line
+    with open(j.path, "a") as f:
+        f.write('{"key": "mm:32x32')
+    done = j.load()
+    assert set(done) == {"mm:64x64x64:float32", "mm:48x48x48:float32"}
+    assert done["mm:48x48x48:float32"]["gflops"] == 2.0
+    # a torn line mid-file (not the crash tail) warns but still recovers
+    with open(j.path, "w") as f:
+        f.write('{"key": "a", "entry": {"gflops": 1}}\n')
+        f.write("GARBAGE\n")
+        f.write('{"key": "b", "entry": {"gflops": 2}}\n')
+    with pytest.warns(UserWarning, match="corrupt line"):
+        done = j.load()
+    assert set(done) == {"a", "b"}
+
+
+def test_tune_records_journals_and_flushes_per_contraction(tmp_path):
+    reg_path = str(tmp_path / "reg.json")
+    jpath = str(tmp_path / "reg.json.journal.jsonl")
+    reg = ScheduleRegistry(reg_path)
+    tuner = LoopTuner(policy="default", backend="tpu", registry=reg)
+    entries, n_skipped = tune_records(
+        _records(), tuner=tuner, registry=reg, registry_path=reg_path,
+        budget_s=0.2, journal=TuneJournal(jpath))
+    assert len(entries) == 3 and n_skipped == 0
+    with open(jpath) as f:
+        assert len(f.read().splitlines()) == 3
+    # the registry flushed at contraction granularity: on-disk table holds
+    # every tuned record without an explicit final save
+    assert len(ScheduleRegistry(reg_path)) == 3
+
+
+def test_resume_after_midrun_crash_retunes_only_unfinished(tmp_path):
+    reg_path = str(tmp_path / "reg.json")
+    jpath = str(tmp_path / "journal.jsonl")
+
+    class _CrashyTuner(LoopTuner):
+        """Dies after the first contraction — the mid-run client kill."""
+
+        tunes = 0
+
+        def tune(self, *a, **kw):
+            if _CrashyTuner.tunes >= 1:
+                raise RuntimeError("simulated mid-run kill")
+            _CrashyTuner.tunes += 1
+            return super().tune(*a, **kw)
+
+    reg = ScheduleRegistry(reg_path)
+    crashy = _CrashyTuner(policy="default", backend="tpu", registry=reg)
+    with pytest.raises(RuntimeError, match="mid-run kill"):
+        tune_records(_records(), tuner=crashy, registry=reg,
+                     registry_path=reg_path, budget_s=0.2,
+                     journal=TuneJournal(jpath))
+    # contraction 1 survived the crash: journaled + flushed to disk
+    assert len(TuneJournal(jpath).load()) == 1
+    assert len(ScheduleRegistry(reg_path)) == 1
+
+    # resume with a healthy tuner: only the two unfinished contractions
+    # are re-tuned; the finished one returns its journaled entry
+    calls = []
+    reg2 = ScheduleRegistry(reg_path)
+    tuner2 = LoopTuner(policy="default", backend="tpu", registry=reg2)
+    orig_tune = tuner2.tune
+    tuner2.tune = lambda b, *a, **kw: calls.append(b) or orig_tune(b, *a, **kw)
+    entries, n_skipped = tune_records(
+        _records(), tuner=tuner2, registry=reg2, registry_path=reg_path,
+        budget_s=0.2, journal=TuneJournal(jpath), resume=True)
+    assert n_skipped == 1 and len(entries) == 3
+    assert entries[0].get("resumed") is True
+    assert "resumed" not in entries[1] and "resumed" not in entries[2]
+    assert len(calls) == 2  # only the unfinished work re-tuned
+    assert {c.iter_sizes["m"] for c in calls} == {48, 32}
+    assert len(ScheduleRegistry(reg_path)) == 3
+    assert len(TuneJournal(jpath).load()) == 3
+
+
+def test_fresh_run_resets_stale_journal(tmp_path):
+    jpath = str(tmp_path / "journal.jsonl")
+    reg = ScheduleRegistry(str(tmp_path / "reg.json"))
+    j = TuneJournal(jpath)
+    j.append("mm:999x999x999:float32", {"gflops": 9.0})  # stale session
+    tuner = LoopTuner(policy="default", backend="tpu", registry=reg)
+    tune_records(_records()[:1], tuner=tuner, registry=reg,
+                 registry_path=reg.path, budget_s=0.1, journal=j)
+    done = j.load()
+    assert "mm:999x999x999:float32" not in done  # reset, not inherited
+    assert len(done) == 1
+
+
+# ---------------------------------------------------------------------------
+# Concurrent registry writers
+# ---------------------------------------------------------------------------
+
+_WRITER_SCRIPT = """
+import sys
+from repro.core.registry import ScheduleRegistry
+path, tag, n = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+for i in range(n):
+    reg = ScheduleRegistry()
+    reg.put("mm", (tag, i + 1, 64), gflops=1.0 + i, actions=["split"],
+            backend="tpu", hardware=f"host-{tag}")
+    reg.flush(path)
+"""
+
+
+def test_concurrent_registry_writers_lose_nothing(tmp_path):
+    """Two processes flushing the same registry path concurrently: the file
+    always parses (atomic rename) and no writer's records are lost (locked
+    read-merge-write)."""
+    path = str(tmp_path / "shared.json")
+    env = dict(os.environ, PYTHONPATH=str(REPO_ROOT / "src"),
+               JAX_PLATFORMS="cpu")
+    n = 8
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _WRITER_SCRIPT, path, str(tag), str(n)],
+        env=env, cwd=str(REPO_ROOT)) for tag in (101, 202)]
+    torn = 0
+    while any(p.poll() is None for p in procs):
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    json.load(f)
+            except ValueError:
+                torn += 1
+        time.sleep(0.002)
+    assert all(p.wait(timeout=30) == 0 for p in procs)
+    assert torn == 0  # no reader ever saw a half-written file
+    final = ScheduleRegistry(path)
+    assert len(final) == 2 * n  # every record from both writers survived
+    for tag in (101, 202):
+        for i in range(n):
+            got = final.get("mm", (tag, i + 1, 64), backend="tpu",
+                            hardware=f"host-{tag}", exact=True)
+            assert got is not None and got["gflops"] == 1.0 + i
+
+
+def test_flush_merges_both_writers_in_process(tmp_path):
+    path = str(tmp_path / "reg.json")
+    a = ScheduleRegistry(path)
+    b = ScheduleRegistry(path)
+    a.put("mm", (64, 64, 64), gflops=5.0, actions=["x"], backend="tpu")
+    b.put("mm", (32, 32, 32), gflops=7.0, actions=["y"], backend="tpu")
+    a.flush()
+    adopted = b.flush()
+    assert adopted == 1  # b picked up a's record during its flush
+    final = ScheduleRegistry(path)
+    assert len(final) == 2
+    assert final.get("mm", (64, 64, 64))["gflops"] == 5.0
+    assert final.get("mm", (32, 32, 32))["gflops"] == 7.0
+    # flush keeps best-gflops-wins semantics on collisions
+    c = ScheduleRegistry(path)
+    c.put("mm", (64, 64, 64), gflops=3.0, actions=["worse"], backend="tpu")
+    c.flush()
+    assert ScheduleRegistry(path).get("mm", (64, 64, 64))["gflops"] == 5.0
+
+
+# ---------------------------------------------------------------------------
+# Real farm processes (slow)
+# ---------------------------------------------------------------------------
+
+
+def _spawn_farm(*extra_args, port=0):
+    env = dict(os.environ, PYTHONPATH=str(REPO_ROOT / "src"),
+               JAX_PLATFORMS="cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.measure_farm",
+         "--addr", f"127.0.0.1:{port}", "--backend", "tpu",
+         "--measure", "inproc", *extra_args],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env,
+        cwd=str(REPO_ROOT))
+    line = proc.stdout.readline()
+    m = re.search(r"listening on ([\d.]+):(\d+)", line)
+    assert m, f"farm did not announce its address: {line!r}"
+    return proc, f"{m.group(1)}:{m.group(2)}"
+
+
+@pytest.mark.slow
+def test_farm_sigterm_drains_and_exits_zero():
+    proc, addr = _spawn_farm()
+    rb = make_backend("remote", addr=addr, fallback="tpu")
+    try:
+        rb.evaluate(LoopNest(BENCH))
+        proc.send_signal(signal.SIGTERM)
+        assert proc.wait(timeout=20) == 0
+        out = proc.stdout.read()
+        assert "SIGTERM: draining" in out
+        assert "[farm] stopped" in out
+    finally:
+        rb.close()
+        if proc.poll() is None:
+            proc.kill()
+        proc.wait(timeout=10)
+
+
+@pytest.mark.slow
+def test_farm_sigkill_then_restart_repromotes_client():
+    """The full fleet story: farm dies hard mid-session, the client
+    degrades and keeps tuning locally, the farm restarts on the same port,
+    and the client's re-probe promotes it back to remote measurement."""
+    port = _free_port()
+    nests = _schedules(3)
+    local = make_backend("tpu")
+    proc1, addr = _spawn_farm(port=port)
+    rb = make_backend("remote", addr=addr, fallback="tpu",
+                      max_retries=1, backoff_base_s=0.01,
+                      connect_timeout_s=0.5, reprobe_every_batches=1)
+    proc2 = None
+    try:
+        assert np.array_equal(rb.evaluate_batch(nests),
+                              local.evaluate_batch(nests))
+        proc1.kill()
+        proc1.wait(timeout=10)
+        with pytest.warns(UserWarning, match="falling back"):
+            g = rb.evaluate_batch(nests)
+        assert np.array_equal(g, local.evaluate_batch(nests))
+        assert rb.degraded
+        proc2, _ = _spawn_farm(port=port)
+        deadline = time.monotonic() + 10
+        while rb.degraded and time.monotonic() < deadline:
+            assert np.array_equal(rb.evaluate_batch(nests),
+                                  local.evaluate_batch(nests))
+        assert not rb.degraded
+        assert rb.farm_stats()["repromotions"] >= 1
+    finally:
+        rb.close()
+        for p in (proc1, proc2):
+            if p is not None:
+                if p.poll() is None:
+                    p.kill()
+                p.wait(timeout=10)
