@@ -20,7 +20,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma list: rl,search,surrogate,tuned,kernels,"
                          "roofline,vec_env,networks,backend,measure,serve,"
-                         "compile_cache,farm,fleet")
+                         "compile_cache,farm,fleet,pipeline")
     args = ap.parse_args(argv)
 
     want = set(args.only.split(",")) if args.only else None
@@ -118,6 +118,16 @@ def main(argv=None) -> int:
             section("fleet", lambda: bench_farm.run_fleet(
                 n_clients=4, queue_limit=2, duration_s=1.0,
                 out_name="bench_farm_fleet_quick"))
+    if should("pipeline"):
+        from . import bench_farm
+        if args.full:
+            section("pipeline", lambda: bench_farm.run_pipeline(
+                n_batches=10, batch_size=6, n_clients=2,
+                out_name="bench_farm_async"))
+        else:
+            section("pipeline", lambda: bench_farm.run_pipeline(
+                n_batches=6, batch_size=4, n_clients=2,
+                out_name="bench_farm_async_quick"))
     if should("vec_env"):
         from . import bench_vec_env
         section("vec_env", lambda: bench_vec_env.run(

@@ -51,10 +51,13 @@ class ApexConfig:
     # ("auto" | "off") — persisted via checkpoint_meta
     surrogate: str = "auto"
     # reward-source executor for the rollout fleet, by registry name
-    # ("numpy" | "jax" | "tpu" | "auto"; see core.backend.make_backend).
-    # None = keep the executor of the env the factory provides.  The
-    # resolved name is persisted via checkpoint_meta so the tuner can
-    # rebuild the same reward source.
+    # ("numpy" | "jax" | "tpu" | "auto"; see core.backend.make_backend) or
+    # the self-contained farm spec "remote:host:port" — then every actor
+    # lane's rewards are measured by the shared farm over one pipelined
+    # connection (the vectorized env submits changed lanes and featurizes
+    # while they measure).  None = keep the executor of the env the factory
+    # provides.  The resolved name is persisted via checkpoint_meta so the
+    # tuner can rebuild the same reward source.
     backend: Optional[str] = None
     # learner weight multiplier for transitions whose (n-step) reward
     # includes a measurement flagged noisy by the guardrails — composes
@@ -198,9 +201,15 @@ def train_apex(
         recent = finished[-5 * n:]
         rewards.append(float(np.mean(recent)) if recent else 0.0)
         times.append(time.perf_counter() - t_start)
+    # measurement observability rides in extra: on a farm backend this is
+    # where the pipelining counters (tickets, in-flight depth, overlap
+    # ratio under ["farm"]) surface for the training run
+    mstats = getattr(venv.backend, "measure_stats", None)
+    extra = {"updates": updates,
+             "measure": mstats() if mstats is not None else {}}
     return TrainResult("apex_dqn", params_ref[0],
                        make_masked_act(make_score_fn(net))(params_ref),
-                       rewards, times, extra={"updates": updates},
+                       rewards, times, extra=extra,
                        meta=checkpoint_meta("dueling", enc_cfg, venv.actions,
                                             venv.state_dim,
                                             surrogate=cfg.surrogate,

@@ -64,6 +64,13 @@ class Backend(abc.ABC):
     #: vectorized env) check this before spending time assembling frontiers
     can_prepare: bool = False
 
+    #: whether :meth:`submit_batch` actually overlaps measurement with
+    #: caller work (the remote farm client pipelines ticketed requests) —
+    #: callers check this before restructuring their loops around
+    #: submit/collect; the default implementations are synchronous
+    #: equivalents so the async shape is always *safe* to use
+    can_measure_async: bool = False
+
     @abc.abstractmethod
     def evaluate(self, nest: LoopNest) -> float:
         """GFLOPS of one schedule (higher is better)."""
@@ -85,6 +92,27 @@ class Backend(abc.ABC):
         evaluation results must be identical with or without preparation.
         """
         return 0
+
+    def submit_batch(self, nests: Sequence[LoopNest]):
+        """Measure-ahead (``measure_async``): start evaluating ``nests``
+        and return an opaque handle for :meth:`collect_batch`.
+
+        The async sibling of :meth:`prepare_batch`: backends whose
+        measurement happens elsewhere (the remote farm) put the batch in
+        flight and return immediately, so callers overlap frontier
+        generation / surrogate ranking / compile-ahead with it.  The
+        default evaluates synchronously and returns the finished result as
+        the handle — same values, zero overlap — so the split shape is
+        always safe; check :attr:`can_measure_async` before restructuring
+        a loop around it.
+        """
+        return self.evaluate_batch(nests)
+
+    def collect_batch(self, handle) -> np.ndarray:
+        """Resolve a :meth:`submit_batch` handle: block until the batch is
+        measured and return its GFLOPS (float64, submit order).  Values
+        must be identical to a direct :meth:`evaluate_batch` call."""
+        return np.asarray(handle, dtype=np.float64)
 
     @abc.abstractmethod
     def peak(self) -> float:
@@ -175,9 +203,17 @@ def make_backend(spec: Union[str, Backend, None] = "auto", **kw) -> Backend:
     ``None`` (same as ``"auto"``).  ``kw`` reaches the factory — notably
     the measurement settings ``measure="inproc"|"pool"``, ``pool_workers``
     and ``policy`` (a :class:`~repro.core.measure.MeasurementPolicy`).
+
+    ``"remote:host:port"`` is accepted as a self-contained spec for the
+    farm client (equivalent to ``make_backend("remote", addr="host:port")``)
+    so plain-string configuration points — ``ApexConfig.backend``, CLI
+    ``--backend`` flags — can target a measurement farm directly.
     """
     if spec is None:
         spec = "auto"
+    if isinstance(spec, str) and spec.startswith("remote:"):
+        kw.setdefault("addr", spec[len("remote:"):])
+        spec = "remote"
     if isinstance(spec, Backend):
         if kw:
             raise ValueError(

@@ -142,6 +142,19 @@ class LoopTuneEnv:
         cold = [n for n in nests if n.structure_key() not in self.cache]
         return self.backend.prepare_batch(cold) if cold else 0
 
+    def submit_eval(self, nests: Sequence[LoopNest]) -> int:
+        """Measure-ahead hint, the async sibling of :meth:`prepare_eval`:
+        cache-cold schedules likely to be evaluated next go *in flight* on
+        an async backend (``can_measure_async``) while the caller keeps
+        working — frontier generation, surrogate ranking, compile-ahead —
+        and a later ``gflops``/``gflops_batch`` collects them instead of
+        measuring cold.  The cache's in-flight table guarantees nothing is
+        measured twice.  Advisory and always safe: returns 0 when the
+        backend has no async path."""
+        if not getattr(self.backend, "can_measure_async", False):
+            return 0
+        return self.cache.submit_eval(self.backend, nests)
+
     def _noisy_of(self, nest: LoopNest) -> bool:
         m = measurement_of(self.backend, nest)
         return bool(m is not None and m.noisy)

@@ -324,6 +324,16 @@ def measure_settings(backend: Backend) -> Optional[Dict[str, Any]]:
     return getter() if getter is not None else None
 
 
+def measure_stats(backend: Backend) -> Dict[str, Any]:
+    """The backend's measurement counters, ``{}`` for backends that keep
+    none.  On a remote farm client the ``["farm"]`` sub-dict carries the
+    pipelining observability: tickets submitted/collected/resubmitted,
+    in-flight depth (current/peak) and the overlap ratio (fraction of
+    measurement wall-clock with at least one ticket outstanding)."""
+    getter = getattr(backend, "measure_stats", None)
+    return getter() if getter is not None else {}
+
+
 # ---------------------------------------------------------------------------
 # Measured-backend base: pure executor + delegated timing
 # ---------------------------------------------------------------------------

@@ -51,6 +51,33 @@ client treats both as backpressure, not as faults.  A transport failure
 is retried; any other ``error`` reply is re-raised — an evaluator bug on
 the farm is not a fault to retry around (the same rule the worker pool
 applies).
+
+**Pipelined (ticketed) measurement** rides the same framing:
+
+* ``{"op": "submit", "id": n, "client": cid, "ticket": t, "nests":
+  [...]}`` passes the same admission control as ``measure`` but is
+  acknowledged immediately (``{"ok": true, "ticket": t, "accepted":
+  true}``); the dispatcher parks the finished result in a per-client
+  ticket table instead of replying.  Tickets are idempotent: a resubmit
+  of a known ``(client, ticket)`` — the client's recovery move when an
+  ack was lost to a dropped connection — is re-acked with ``duplicate``
+  instead of being measured again, which is what makes reconnect
+  recovery **exactly-once**.
+* ``{"op": "collect", "id": n, "client": cid, "tickets": [...],
+  "timeout_s": s, "ack": [...]}`` blocks (bounded) until at least one
+  named ticket has a parked result and returns ``done`` (ticket ->
+  measure reply body), ``pending`` (still queued/inflight) and
+  ``unknown`` (lost to a farm restart or TTL expiry — the client
+  resubmits those).  Results stay parked until the client *acks* them on
+  a later request (at-least-once delivery across reconnects); unacked
+  results expire after ``ticket_ttl_s``.  Parked results are keyed by
+  the stable ``client`` id, not the connection, so a reconnected client
+  collects work it submitted on a previous socket.
+
+:meth:`MeasureServer.drain` finishes queued + inflight ticketed work and
+then **lingers** (up to ``drain_linger_s``) until parked results are
+collected and acked, so SIGTERM with tickets outstanding hands every
+result to its client before the process exits 0.
 """
 from __future__ import annotations
 
@@ -65,6 +92,8 @@ import traceback
 import warnings
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from .backend import Backend, backend_name, make_backend
 from .loop_ir import Contraction, LoopNest, TensorSpec
@@ -219,18 +248,23 @@ class _PendingRequest:
     """One admitted measure request waiting in (or dispatched from) the
     central queue.  Holds everything the dispatcher needs to answer on the
     originating connection — ``send_lock`` serializes dispatcher replies
-    against the connection thread's own ping/status/rejection replies."""
+    against the connection thread's own ping/status/rejection replies.
+    A ``ticket`` marks a pipelined ``submit``: the dispatcher parks its
+    result in the server's ticket table instead of replying."""
 
-    __slots__ = ("conn", "send_lock", "req_id", "client", "nests", "t_enq")
+    __slots__ = ("conn", "send_lock", "req_id", "client", "nests", "t_enq",
+                 "ticket")
 
     def __init__(self, conn: socket.socket, send_lock: threading.Lock,
-                 req_id: Any, client: str, nests: List[LoopNest]):
+                 req_id: Any, client: str, nests: List[LoopNest],
+                 ticket: Optional[str] = None):
         self.conn = conn
         self.send_lock = send_lock
         self.req_id = req_id
         self.client = client
         self.nests = nests
         self.t_enq = time.monotonic()
+        self.ticket = ticket
 
 
 class MeasureServer:
@@ -268,6 +302,9 @@ class MeasureServer:
         queue_limit: int = 32,
         coalesce_requests: int = 4,
         coalesce_nests: int = 64,
+        coalesce_window_s: float = 0.0,
+        drain_linger_s: float = 30.0,
+        ticket_ttl_s: float = 600.0,
     ):
         if queue_limit < 1:
             raise ValueError(f"queue_limit must be >= 1, got {queue_limit}")
@@ -279,6 +316,12 @@ class MeasureServer:
         self.queue_limit = int(queue_limit)
         self.coalesce_requests = int(coalesce_requests)
         self.coalesce_nests = int(coalesce_nests)
+        # batch-forming linger: with work queued but fewer than
+        # coalesce_requests clients represented, the dispatcher waits up to
+        # this long for stragglers before taking the batch — a pipelined
+        # fleet's round-synchronized submits then fold into one backend
+        # batch instead of serializing.  0 = dispatch eagerly.
+        self.coalesce_window_s = float(coalesce_window_s)
         self.requests = 0  # admitted measure requests
         self.errors = 0
         # fair-queue state + counters, all guarded by _cond's lock
@@ -294,6 +337,20 @@ class MeasureServer:
         self._deferred_ttl_s = 5.0
         self._draining = False
         self._drained = threading.Event()
+        self._drain_t0: Optional[float] = None
+        self.drain_linger_s = float(drain_linger_s)
+        self.ticket_ttl_s = float(ticket_ttl_s)
+        # pipelined submit/collect state: (client, ticket) -> lifecycle
+        # ("queued" | "inflight" | "done"), with finished results parked
+        # until the client collects + acks them (or the TTL expires)
+        self._tickets: Dict[Tuple[str, str], str] = {}
+        self._ticket_results: Dict[Tuple[str, str],
+                                   Tuple[float, Dict[str, Any]]] = {}
+        self.tickets_submitted = 0
+        self.tickets_deduped = 0
+        self.tickets_collected = 0
+        self.tickets_acked = 0
+        self.tickets_expired = 0
         self.served_requests = 0
         self.served_nests = 0
         self.rejected_overload = 0
@@ -347,6 +404,8 @@ class MeasureServer:
         with self._cond:
             first = not self._draining
             self._draining = True
+            if self._drain_t0 is None:
+                self._drain_t0 = time.monotonic()
             self._cond.notify_all()
         if first:
             self._shutdown_listener()
@@ -465,6 +524,21 @@ class MeasureServer:
                 if rejection is None:
                     return None  # admitted; the dispatcher replies
                 reply.update(rejection)
+            elif op == "submit":
+                nests = [nest_from_wire(w) for w in req["nests"]]
+                client = str(req.get("client") or self._conn_client(conn))
+                ticket = str(req.get("ticket"))
+                pending = _PendingRequest(conn, send_lock, req.get("id"),
+                                          client, nests, ticket=ticket)
+                rejection = self._admit(pending)
+                if rejection is None:
+                    # admitted: ack now, the dispatcher parks the result
+                    reply.update(ok=True, ticket=ticket, accepted=True)
+                else:
+                    reply.update(rejection)
+            elif op == "collect":
+                client = str(req.get("client") or self._conn_client(conn))
+                reply.update(self._collect(client, req))
             else:
                 reply.update(ok=False, error=f"unknown op {op!r}")
         except Exception:  # noqa: BLE001 — report, let the client decide
@@ -499,6 +573,16 @@ class MeasureServer:
         that gave up does not pin capacity."""
         trigger_drain = False
         with self._cond:
+            if p.ticket is not None:
+                # ticket idempotency before everything else (including the
+                # drain check — a resubmit of admitted work must re-ack, not
+                # get rejected): a known (client, ticket) is never measured
+                # twice, whatever state it is in
+                state = self._tickets.get((p.client, p.ticket))
+                if state is not None:
+                    self.tickets_deduped += 1
+                    return {"ok": True, "ticket": p.ticket,
+                            "duplicate": True, "state": state}
             if self._draining or self._closed.is_set():
                 self.rejected_shutdown += 1
                 return {"ok": False, "error_kind": "shutting_down",
@@ -530,6 +614,9 @@ class MeasureServer:
             self._queued_nests += len(p.nests)
             self.queue_depth_peak = max(self.queue_depth_peak, self._queued)
             self.requests += 1
+            if p.ticket is not None:
+                self._tickets[(p.client, p.ticket)] = "queued"
+                self.tickets_submitted += 1
             if (self.max_requests is not None
                     and self.requests >= self.max_requests):
                 trigger_drain = True
@@ -564,6 +651,15 @@ class MeasureServer:
             n_nests += len(p.nests)
         return batch
 
+    def _purge_tickets_locked(self, now: float) -> None:
+        """Expire parked results a client never came back for — the table
+        must not grow without bound on abandoned tickets."""
+        for key in [k for k, (t, _) in self._ticket_results.items()
+                    if now - t > self.ticket_ttl_s]:
+            del self._ticket_results[key]
+            self._tickets.pop(key, None)
+            self.tickets_expired += 1
+
     def _dispatch_loop(self) -> None:
         while True:
             with self._cond:
@@ -571,12 +667,42 @@ class MeasureServer:
                     if self._closed.is_set():
                         return
                     if self._draining:
-                        self._drained.set()
-                        return
+                        # queued + inflight ticketed work is already done
+                        # here; linger until parked results are collected
+                        # and acked so SIGTERM never strands a client's
+                        # tickets (bounded — a dead client can't wedge
+                        # shutdown past drain_linger_s)
+                        if (not self._ticket_results
+                                or (self._drain_t0 is not None
+                                    and time.monotonic() - self._drain_t0
+                                    >= self.drain_linger_s)):
+                            self._drained.set()
+                            return
+                    self._purge_tickets_locked(time.monotonic())
                     self._cond.wait(timeout=0.2)
                 if self._closed.is_set():
                     return
+                if self.coalesce_window_s > 0 and not self._draining:
+                    # batch-forming linger (see __init__): hold the batch
+                    # open briefly while it is still under-filled so
+                    # near-simultaneous submits from a pipelined fleet
+                    # coalesce instead of dispatching one by one
+                    deadline = time.monotonic() + self.coalesce_window_s
+                    while (self._queued < self.coalesce_requests
+                           and not self._draining
+                           and not self._closed.is_set()):
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            break
+                        self._cond.wait(timeout=remaining)
+                    if self._closed.is_set():
+                        return
+                    if not self._ready:
+                        continue
                 batch = self._take_batch_locked()
+                for p in batch:
+                    if p.ticket is not None:
+                        self._tickets[(p.client, p.ticket)] = "inflight"
                 self.inflight_requests = len(batch)
                 self.inflight_nests = sum(len(p.nests) for p in batch)
             try:
@@ -608,8 +734,8 @@ class MeasureServer:
                 for p in batch:
                     self._run_batch([p])
                 return
-            self._reply(batch[0],
-                        {"ok": False, "error": traceback.format_exc()})
+            self._finish(batch[0],
+                         {"ok": False, "error": traceback.format_exc()})
             return
         per_nest = (time.monotonic() - t0) / max(1, len(nests))
         with self._cond:
@@ -630,8 +756,58 @@ class MeasureServer:
                 self.served_nests += len(p.nests)
                 self.per_client_served[p.client] = (
                     self.per_client_served.get(p.client, 0) + 1)
-            self._reply(p, {"ok": True, "hardware": self.hardware,
-                            "measurements": [list(m.ship()) for m in part]})
+            self._finish(p, {"ok": True, "hardware": self.hardware,
+                             "measurements": [list(m.ship()) for m in part]})
+
+    def _finish(self, p: _PendingRequest, body: Dict[str, Any]) -> None:
+        """Deliver a finished request: blocking requests get their reply on
+        the originating connection; ticketed ones park the result for
+        :meth:`_collect` (keyed by client id, so it survives reconnects)."""
+        if p.ticket is None:
+            self._reply(p, body)
+            return
+        with self._cond:
+            key = (p.client, p.ticket)
+            # a ticket acked or expired while inflight just drops its result
+            if key in self._tickets:
+                self._tickets[key] = "done"
+                self._ticket_results[key] = (time.monotonic(), body)
+            self._cond.notify_all()
+
+    def _collect(self, client: str, req: Dict[str, Any]) -> Dict[str, Any]:
+        """The ``collect`` op body: ack-then-gather.  Runs on the
+        connection thread — blocking here (bounded by the capped
+        ``timeout_s``) is the long-poll that lets a client sleep until one
+        of its tickets finishes instead of spinning."""
+        tickets = [str(t) for t in (req.get("tickets") or [])]
+        acks = [str(t) for t in (req.get("ack") or [])]
+        timeout = min(max(0.0, float(req.get("timeout_s") or 0.0)), 30.0)
+        deadline = time.monotonic() + timeout
+        with self._cond:
+            for t in acks:
+                key = (client, t)
+                if self._ticket_results.pop(key, None) is not None:
+                    self.tickets_acked += 1
+                self._tickets.pop(key, None)
+            if acks:
+                self._cond.notify_all()  # the drain linger watches the table
+            while True:
+                done = {t: self._ticket_results[(client, t)][1]
+                        for t in tickets
+                        if (client, t) in self._ticket_results}
+                if done or self._closed.is_set():
+                    break
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cond.wait(timeout=min(remaining, 0.2))
+            self.tickets_collected += len(done)
+            pending = [t for t in tickets
+                       if t not in done and (client, t) in self._tickets]
+            unknown = [t for t in tickets
+                       if t not in done and t not in pending]
+        return {"ok": True, "done": done, "pending": pending,
+                "unknown": unknown}
 
     def _reply(self, p: _PendingRequest, body: Dict[str, Any]) -> None:
         reply: Dict[str, Any] = {"id": p.req_id, "proto": PROTO_VERSION}
@@ -664,6 +840,13 @@ class MeasureServer:
                 "deferred_clients": len(self._deferred),
                 "pool_batches": self.pool_batches,
                 "coalesced_batches": self.coalesced_batches,
+                "tickets_submitted": self.tickets_submitted,
+                "tickets_deduped": self.tickets_deduped,
+                "tickets_collected": self.tickets_collected,
+                "tickets_acked": self.tickets_acked,
+                "tickets_expired": self.tickets_expired,
+                "tickets_outstanding": len(self._tickets),
+                "tickets_parked": len(self._ticket_results),
                 "draining": self._draining,
                 "clients": dict(self.per_client_served),
                 "service_s_per_nest": (
@@ -675,6 +858,26 @@ class MeasureServer:
 # ---------------------------------------------------------------------------
 # Client backend
 # ---------------------------------------------------------------------------
+
+
+class FarmTicket:
+    """An in-flight async measurement: the opaque handle
+    :meth:`RemoteMeasuredBackend.submit_batch` returns and
+    :meth:`RemoteMeasuredBackend.wait` resolves.  ``tickets`` maps each
+    wire ticket to its slice of ``nests``; ``local`` holds the tail that
+    was measured synchronously on the fallback when the client degraded
+    mid-submit."""
+
+    __slots__ = ("nests", "tickets", "local", "local_at")
+
+    def __init__(self, nests: List[LoopNest]):
+        self.nests = nests
+        self.tickets: List[Tuple[str, int, int]] = []  # (ticket, lo, hi)
+        self.local: Optional[List[Measurement]] = None
+        self.local_at = 0
+
+    def __len__(self) -> int:
+        return len(self.nests)
 
 
 class RemoteMeasuredBackend(MeasuredBackend):
@@ -701,9 +904,26 @@ class RemoteMeasuredBackend(MeasuredBackend):
     batches or ``reprobe_after_s`` seconds and re-promotes itself to
     remote measurement on a successful handshake (``repromotions``
     counter).  Server-side evaluator errors re-raise.
+
+    **Pipelined path** (``can_measure_async``): :meth:`submit_batch`
+    ships nests as ticketed ``submit`` requests (chunked, at most
+    ``inflight_window`` tickets outstanding) and returns a
+    :class:`FarmTicket` immediately; :meth:`collect` drains finished
+    tickets opportunistically and :meth:`wait` blocks until a handle
+    fully resolves.  Tickets are idempotent on the farm, so an ack lost
+    to a dropped connection is recovered by resubmitting the same ticket
+    after reconnect (``tickets_resubmitted``) without double-measuring;
+    results park server-side keyed by ``client_id`` until acked, so they
+    too survive a reconnect.  A degradation mid-flight resolves every
+    unserved ticket on the local fallback — :meth:`wait` always
+    completes.  The overlap instrumentation (``overlap_ratio``:
+    wall-clock with >=1 ticket outstanding over total measure
+    wall-clock) quantifies how much tuner work actually hid behind
+    in-flight measurements.
     """
 
     name = "remote"
+    can_measure_async = True
 
     def __init__(
         self,
@@ -722,6 +942,8 @@ class RemoteMeasuredBackend(MeasuredBackend):
         reprobe_every_batches: int = 8,
         reprobe_after_s: float = 30.0,
         client_id: Optional[str] = None,
+        inflight_window: int = 4,
+        collect_poll_s: float = 5.0,
     ):
         super().__init__(policy=policy, repeats=repeats, measure="inproc")
         self.measure_mode = "remote"
@@ -772,6 +994,28 @@ class RemoteMeasuredBackend(MeasuredBackend):
         self.backpressure_wait_s = 0.0
         self.farm_rtt_s = 0.0
         self.last_rtt_s = 0.0
+        # pipelined submit/collect state: tickets outstanding on the farm,
+        # results collected but not yet consumed by wait(), failures to
+        # re-raise, and acks owed to the farm (piggybacked on the next
+        # collect so parked results are released)
+        self.inflight_window = max(1, int(inflight_window))
+        self.collect_poll_s = float(collect_poll_s)
+        self._ticket_seq = 0
+        self._outstanding: Dict[str, List[LoopNest]] = {}
+        self._ready: Dict[str, List[Measurement]] = {}
+        self._failed: Dict[str, str] = {}
+        self._ack_pending: List[str] = []
+        self._resubmits: Dict[str, int] = {}
+        self.n_tickets_submitted = 0
+        self.n_tickets_collected = 0
+        self.n_tickets_resubmitted = 0
+        self.inflight_peak = 0
+        # overlap instrumentation: wall-clock with >=1 ticket outstanding
+        # vs. total measure wall-clock (first measure op -> last)
+        self._overlap_s = 0.0
+        self._overlap_t0: Optional[float] = None
+        self._measure_t0: Optional[float] = None
+        self._measure_t1: Optional[float] = None
 
     # -- executor surface (never used: measurement happens remotely) ----------
 
@@ -945,6 +1189,223 @@ class RemoteMeasuredBackend(MeasuredBackend):
             self._local = make_backend(self.fallback_spec, **kw)
         return self._local
 
+    def _measure_locally(self,
+                         nests: Sequence[LoopNest]) -> List[Measurement]:
+        local = self._ensure_local()
+        if isinstance(local, MeasuredBackend):
+            return local.measure_batch(list(nests))
+        return [measure_local(local, n) for n in nests]
+
+    # -- overlap instrumentation --------------------------------------------------
+
+    def _mark_op(self) -> None:
+        now = time.monotonic()
+        if self._measure_t0 is None:
+            self._measure_t0 = now
+        self._measure_t1 = now
+
+    def _outstanding_changed(self) -> None:
+        now = time.monotonic()
+        if self._outstanding and self._overlap_t0 is None:
+            self._overlap_t0 = now
+        elif not self._outstanding and self._overlap_t0 is not None:
+            self._overlap_s += now - self._overlap_t0
+            self._overlap_t0 = None
+
+    def overlap_ratio(self) -> Optional[float]:
+        """Share of the measure wall-clock (first op to last) spent with
+        at least one ticket in flight — 0.0 for a purely blocking client,
+        near 1.0 when the farm was kept busy behind tuner work."""
+        if self._measure_t0 is None or self._measure_t1 is None:
+            return None
+        now = time.monotonic()
+        overlap = self._overlap_s
+        end = self._measure_t1
+        if self._overlap_t0 is not None:
+            overlap += now - self._overlap_t0
+            end = now
+        span = end - self._measure_t0
+        if span <= 0.0:
+            return None
+        return min(1.0, overlap / span)
+
+    # -- pipelined (ticketed) measurement -----------------------------------------
+
+    def async_capacity(self) -> int:
+        """Tickets that can be submitted right now without blocking on the
+        in-flight window — advisory, for measure-ahead callers that must
+        not stall."""
+        if self.degraded:
+            return 0
+        return max(0, self.inflight_window - len(self._outstanding))
+
+    def _submit_chunk(self, chunk: List[LoopNest]) -> str:
+        self._ticket_seq += 1
+        tid = f"{self.client_id}.{self._ticket_seq}"
+        retries0 = self.n_retries
+        self._request({"op": "submit", "ticket": tid,
+                       "nests": [nest_to_wire(n) for n in chunk]})
+        # every transport retry inside _request re-sent this ticket after a
+        # reconnect; the farm deduped it — that is the exactly-once resubmit
+        self.n_tickets_resubmitted += self.n_retries - retries0
+        self._outstanding[tid] = list(chunk)
+        self.n_tickets_submitted += 1
+        self.inflight_peak = max(self.inflight_peak, len(self._outstanding))
+        self._outstanding_changed()
+        return tid
+
+    def _collect_once(self, timeout_s: float) -> int:
+        """One ``collect`` round-trip: deliver owed acks, gather finished
+        tickets into ``_ready``/``_failed``, resubmit tickets the farm
+        lost.  Returns the number of tickets newly collected."""
+        if not self._outstanding:
+            return 0
+        payload: Dict[str, Any] = {
+            "op": "collect", "tickets": list(self._outstanding),
+            "timeout_s": round(max(0.0, float(timeout_s)), 3)}
+        if self._ack_pending:
+            payload["ack"] = list(self._ack_pending)
+        reply = self._request(payload)
+        self._ack_pending = []  # delivered (acks are idempotent on retry)
+        got = 0
+        for tid, body in (reply.get("done") or {}).items():
+            chunk = self._outstanding.pop(tid, None)
+            if chunk is None:
+                continue  # re-delivery of an already-consumed ticket
+            self._ack_pending.append(tid)
+            self.n_tickets_collected += 1
+            got += 1
+            if body.get("ok"):
+                shipped = body.get("measurements")
+                if (not isinstance(shipped, list)
+                        or len(shipped) != len(chunk)):
+                    raise ProtocolError(
+                        f"ticket {tid}: {len(chunk)} nests submitted, "
+                        f"{len(shipped) if isinstance(shipped, list) else '?'}"
+                        " measurements returned")
+                if body.get("hardware"):
+                    self.remote_hardware = body["hardware"]
+                self._ready[tid] = [Measurement.unship(s) for s in shipped]
+            else:
+                self._failed[tid] = str(body.get("error"))
+        for tid in reply.get("unknown") or []:
+            chunk = self._outstanding.get(tid)
+            if chunk is None:
+                continue
+            # the farm lost the ticket (restart / TTL): resubmit it — same
+            # id, so a racing duplicate still measures once
+            if self._resubmits.get(tid, 0) >= 2:
+                raise FarmUnavailableError(
+                    f"measurement farm at {self.host}:{self.port} lost "
+                    f"ticket {tid} repeatedly")
+            self._resubmits[tid] = self._resubmits.get(tid, 0) + 1
+            self.n_tickets_resubmitted += 1
+            self._request({"op": "submit", "ticket": tid,
+                           "nests": [nest_to_wire(n) for n in chunk]})
+        self._outstanding_changed()
+        self._mark_op()
+        return got
+
+    def submit_batch(self, nests: Sequence[LoopNest]) -> FarmTicket:
+        """Ship ``nests`` for measurement and return immediately with a
+        :class:`FarmTicket`; resolve it later with :meth:`wait` (or
+        :meth:`collect_batch` for the gflops array).  Blocks only when the
+        in-flight window is full.  While degraded the tail measures
+        synchronously on the fallback, so the handle always resolves."""
+        nests = list(nests)
+        handle = FarmTicket(nests)
+        if not nests:
+            return handle
+        self._mark_op()
+        if self.degraded:
+            self._maybe_reprobe()
+        i = 0
+        while i < len(nests) and not self.degraded:
+            chunk = nests[i:i + self.max_nests_per_request]
+            try:
+                while len(self._outstanding) >= self.inflight_window:
+                    self._collect_once(self.collect_poll_s)
+                tid = self._submit_chunk(chunk)
+            except (FarmUnavailableError, ProtocolError) as e:
+                self._degrade(str(e))
+                break
+            handle.tickets.append((tid, i, i + len(chunk)))
+            i += len(chunk)
+        if i < len(nests):
+            self.n_degraded_batches += 1
+            handle.local_at = i
+            handle.local = self._measure_locally(nests[i:])
+        self._mark_op()
+        return handle
+
+    def collect(self, timeout_s: float = 0.0) -> int:
+        """Opportunistically drain finished tickets (one round-trip,
+        blocking on the farm for at most ``timeout_s``).  Returns how many
+        tickets were newly collected; 0 while degraded."""
+        if not self._outstanding or self.degraded:
+            return 0
+        try:
+            return self._collect_once(timeout_s)
+        except (FarmUnavailableError, ProtocolError) as e:
+            self._degrade(str(e))
+            return 0
+
+    def wait(self, handle: FarmTicket) -> List[Measurement]:
+        """Block until every ticket of ``handle`` resolves and return its
+        measurements in nest order (recorded, like :meth:`measure_batch`).
+        Tickets the farm cannot serve (degradation mid-flight) measure on
+        the local fallback; a server-side evaluator error re-raises."""
+        out: List[Optional[Measurement]] = [None] * len(handle.nests)
+        if handle.local is not None:
+            for j, m in enumerate(handle.local):
+                out[handle.local_at + j] = m
+        own = {tid for tid, _, _ in handle.tickets}
+        while not self.degraded and any(t in self._outstanding for t in own):
+            try:
+                self._collect_once(self.collect_poll_s)
+            except (FarmUnavailableError, ProtocolError) as e:
+                self._degrade(str(e))
+        error: Optional[str] = None
+        for tid, lo, hi in handle.tickets:
+            ms = self._ready.pop(tid, None)
+            if ms is None:
+                err = self._failed.pop(tid, None)
+                if err is not None:
+                    error = error or f"ticket {tid}:\n{err}"
+                    continue
+                # unresolved (degraded with the ticket still in flight):
+                # the fallback serves it — the farm's eventual result is
+                # never collected, so nothing is recorded twice
+                self._outstanding.pop(tid, None)
+                self._outstanding_changed()
+                self.n_degraded_batches += 1
+                ms = self._measure_locally(handle.nests[lo:hi])
+            for j, m in enumerate(ms):
+                out[lo + j] = m
+        self._mark_op()
+        if error is not None:
+            raise RemoteMeasureError(
+                f"measurement farm at {self.host}:{self.port} failed "
+                f"{error}")
+        return [self._record(n, m) for n, m in zip(handle.nests, out)]
+
+    def collect_batch(self, handle: FarmTicket,
+                      timeout_s: Optional[float] = None) -> np.ndarray:
+        return np.asarray([m.gflops for m in self.wait(handle)],
+                          dtype=np.float64)
+
+    def flush_acks(self) -> None:
+        """Release parked results on the farm without collecting anything
+        — lets a draining farm finish shutdown promptly."""
+        if not self._ack_pending or self.degraded:
+            return
+        try:
+            self._request({"op": "collect", "tickets": [], "timeout_s": 0.0,
+                           "ack": list(self._ack_pending)})
+            self._ack_pending = []
+        except (FarmUnavailableError, ProtocolError, RemoteMeasureError):
+            pass  # best-effort: the farm's ticket TTL is the backstop
+
     # -- measurement -------------------------------------------------------------
 
     def measure(self, nest: LoopNest, worker: int = -1) -> Measurement:
@@ -954,8 +1415,14 @@ class RemoteMeasuredBackend(MeasuredBackend):
         if not nests:
             return []
         nests = list(nests)
+        if len(nests) > self.max_nests_per_request and not self.degraded:
+            # multi-chunk batches pipeline through the ticketed path: all
+            # chunks go in flight (window-bounded) instead of one blocking
+            # round-trip per chunk in series
+            return self.wait(self.submit_batch(nests))
         out: List[Measurement] = []
         idx = 0
+        self._mark_op()
         if self.degraded:
             self._maybe_reprobe()
         while idx < len(nests) and not self.degraded:
@@ -982,12 +1449,8 @@ class RemoteMeasuredBackend(MeasuredBackend):
             # whatever the farm did not serve measures locally, so the
             # batch always completes in full
             self.n_degraded_batches += 1
-            local = self._ensure_local()
-            rest = nests[idx:]
-            if isinstance(local, MeasuredBackend):
-                out.extend(local.measure_batch(rest))
-            else:
-                out.extend(measure_local(local, n) for n in rest)
+            out.extend(self._measure_locally(nests[idx:]))
+        self._mark_op()
         return [self._record(n, m) for n, m in zip(nests, out)]
 
     # -- Backend protocol ---------------------------------------------------------
@@ -1040,6 +1503,16 @@ class RemoteMeasuredBackend(MeasuredBackend):
             "backpressure_wait_s": round(self.backpressure_wait_s, 4),
             "farm_rtt_s": round(self.farm_rtt_s, 4),
             "last_rtt_s": round(self.last_rtt_s, 4),
+            "inflight_tickets": len(self._outstanding),
+            "inflight_tickets_peak": self.inflight_peak,
+            "inflight_window": self.inflight_window,
+            "tickets_submitted": self.n_tickets_submitted,
+            "tickets_collected": self.n_tickets_collected,
+            "tickets_resubmitted": self.n_tickets_resubmitted,
+            "overlap_s": round(self._overlap_s, 4),
+            "overlap_ratio": (round(r, 4)
+                              if (r := self.overlap_ratio()) is not None
+                              else None),
             "remote_hardware": self.remote_hardware,
             "remote_backend": self.remote_backend,
         }
@@ -1061,10 +1534,12 @@ class RemoteMeasuredBackend(MeasuredBackend):
             "max_nests_per_request": self.max_nests_per_request,
             "reprobe_every_batches": self.reprobe_every_batches,
             "reprobe_after_s": self.reprobe_after_s,
+            "inflight_window": self.inflight_window,
             "policy": self.policy.to_dict() if self.policy else None,
         }
 
     def close(self) -> None:
+        self.flush_acks()
         self._drop_conn()
         if self._local is not None:
             close = getattr(self._local, "close", None)

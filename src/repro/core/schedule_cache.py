@@ -129,13 +129,117 @@ class LRUCache:
 
 
 class ScheduleCache(LRUCache):
-    """LRU map from ``nest.structure_key()`` to evaluated GFLOPS."""
+    """LRU map from ``nest.structure_key()`` to evaluated GFLOPS.
+
+    Besides lookup-or-evaluate, the cache is the **measure-ahead** join
+    point for async backends (``can_measure_async``): :meth:`submit_eval`
+    puts cache-cold structures in flight on the backend and parks the
+    handle; any later :meth:`evaluate` / :meth:`evaluate_batch` that needs
+    an in-flight key collects its group first.  Keeping the in-flight
+    table *inside* the cache is what makes pipelining safe: a structure is
+    either cached, in flight, or cold — it can never be measured twice by
+    a speculative submit racing a blocking evaluation.
+    """
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+        super().__init__(capacity)
+        # structure_key -> shared group dict {"backend", "handle", "keys"};
+        # one submit_batch call resolves a whole group at once
+        self._inflight: Dict[Hashable, Dict[str, Any]] = {}
+        self.submitted_ahead = 0
+        self.collected_ahead = 0
+
+    # -- measure-ahead --------------------------------------------------------
+
+    def inflight_size(self) -> int:
+        return len(self._inflight)
+
+    def submit_eval(self, backend, nests: Sequence[LoopNest]) -> int:
+        """Measure-ahead hint: put cache-cold ``nests`` in flight on an
+        async backend, deduped against the cache, the in-flight table and
+        the batch itself.  Bounded by the backend's advisory
+        ``async_capacity`` so the hint never blocks the caller on a full
+        window.  Returns how many nests were submitted (0 for non-async
+        backends — always safe to call)."""
+        if not getattr(backend, "can_measure_async", False):
+            return 0
+        capacity = getattr(backend, "async_capacity", None)
+        room = capacity() if capacity is not None else None
+        if room == 0:
+            return 0
+        chunk = getattr(backend, "max_nests_per_request", None)
+        limit = room * chunk if (room is not None and chunk) else None
+        todo_keys: List[Hashable] = []
+        todo_nests: List[LoopNest] = []
+        for n in nests:
+            k = n.structure_key()
+            if k in self._data or k in self._inflight or k in todo_keys:
+                continue
+            todo_keys.append(k)
+            todo_nests.append(n)
+            if limit is not None and len(todo_nests) >= limit:
+                break
+        if not todo_nests:
+            return 0
+        group = {"backend": backend,
+                 "handle": backend.submit_batch(todo_nests),
+                 "keys": todo_keys}
+        for k in todo_keys:
+            self._inflight[k] = group
+        self.submitted_ahead += len(todo_nests)
+        return len(todo_nests)
+
+    def _collect_inflight(self, keys: Sequence[Hashable]) -> None:
+        """Resolve every in-flight group covering ``keys`` into the cache.
+        Each landed key counts as a **miss** — it cost a real backend
+        measurement, and budget accounting charges by the miss delta."""
+        groups: List[Dict[str, Any]] = []
+        seen = set()
+        for k in keys:
+            g = self._inflight.get(k)
+            if g is not None and id(g) not in seen:
+                seen.add(id(g))
+                groups.append(g)
+        for g in groups:
+            vals = np.asarray(g["backend"].collect_batch(g["handle"]),
+                              np.float64)
+            for k, v in zip(g["keys"], vals):
+                # a key invalidated (or re-submitted) while in flight must
+                # not resurrect its stale value
+                if self._inflight.get(k) is g:
+                    del self._inflight[k]
+                    self.put(k, float(v))
+                    self.misses += 1
+                    self.collected_ahead += 1
+
+    def drain_ahead(self) -> int:
+        """Collect every outstanding measure-ahead group (end-of-search
+        cleanup, so speculative farm work still lands in the cache)."""
+        n = len(self._inflight)
+        self._collect_inflight(list(self._inflight))
+        return n
+
+    def invalidate(self, key: Hashable) -> bool:
+        self._inflight.pop(key, None)
+        return super().invalidate(key)
+
+    def clear(self) -> None:
+        self._inflight.clear()
+        super().clear()
+
+    def stats(self) -> Dict[str, int]:
+        return {**super().stats(),
+                "inflight": len(self._inflight),
+                "submitted_ahead": self.submitted_ahead,
+                "collected_ahead": self.collected_ahead}
 
     # -- lookup-or-evaluate ---------------------------------------------------
 
     def evaluate(self, backend, nest: LoopNest) -> float:
         """Cached ``backend.evaluate(nest)`` keyed by structure."""
         key = nest.structure_key()
+        if key in self._inflight:
+            self._collect_inflight([key])
         hit = self.get(key)
         if hit is not None:
             self.hits += 1
@@ -147,8 +251,15 @@ class ScheduleCache(LRUCache):
 
     def evaluate_batch(self, backend, nests: Sequence[LoopNest]) -> np.ndarray:
         """Cached GFLOPS for each nest; misses are deduped by structure key
-        and evaluated in one ``backend.evaluate_batch`` call."""
+        and evaluated in one ``backend.evaluate_batch`` call.  Keys with a
+        measure-ahead submission in flight are collected first, so a
+        pipelined frontier never stalls on work it already started."""
         keys = [n.structure_key() for n in nests]
+        if self._inflight:
+            needed = [k for k in keys
+                      if k in self._inflight and k not in self._data]
+            if needed:
+                self._collect_inflight(needed)
         out = np.empty(len(nests), dtype=np.float64)
         miss_keys: List[Hashable] = []
         miss_nests: List[LoopNest] = []

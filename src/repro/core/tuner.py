@@ -263,6 +263,10 @@ class LoopTuner:
         else:  # default / untuned
             env.reset(0)
             best_g, actions, nest = env.current_gflops, [], env.nest.clone()
+        # bank speculative measure-ahead work: anything the searches put in
+        # flight on an async farm but never collected still lands in the
+        # shared cache (a later tune() call may hit it for free)
+        self.cache.drain_ahead()
         entry = self._record(kernel, bench, best_g, list(actions), nest, dtype)
         entry["tune_time_s"] = time.perf_counter() - t0
         entry["base_gflops"] = env.initial_gflops
@@ -332,6 +336,7 @@ class LoopTuner:
                                   peak=self.peak_override)
             best_g, names, nests = greedy_rollout_vec(
                 venv, self.act, benchmark_indices=list(range(len(chunk))))
+            self.cache.drain_ahead()
             per_bench_s = (time.perf_counter() - t0) / len(chunk)
             for i, bench in enumerate(chunk):
                 entry = self._record(kernel, bench, float(best_g[i]),

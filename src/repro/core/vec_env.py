@@ -159,6 +159,15 @@ class VecLoopTuneEnv:
         cold = [n for n in nests if n.structure_key() not in self.cache]
         return self.backend.prepare_batch(cold) if cold else 0
 
+    def submit_eval(self, nests: Sequence[LoopNest]) -> int:
+        """Measure-ahead hint (see ``LoopTuneEnv.submit_eval``): cache-cold
+        schedules go in flight on an async backend; the cache collects them
+        when their value is actually needed.  Advisory, returns 0 when the
+        backend has no async path."""
+        if not getattr(self.backend, "can_measure_async", False):
+            return 0
+        return self.cache.submit_eval(self.backend, nests)
+
     def _noisy_of(self, nest: LoopNest) -> bool:
         m = measurement_of(self.backend, nest)
         return bool(m is not None and m.noisy)
@@ -245,7 +254,10 @@ class VecLoopTuneEnv:
         self, action_indices: Sequence[int]
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, List[dict]]:
         """Apply one action per lane.  Only the structurally-changed lanes are
-        re-evaluated, through a single batched (cached) backend call.  Returns
+        re-evaluated, through a single batched (cached) backend call.  On an
+        async backend the changed lanes go in flight first and the whole
+        fleet's featurization runs while they measure — the actor-side work
+        hides behind the farm instead of stalling per step.  Returns
         ``(obs (N, D), rewards (N,), dones (N,), infos)``.  Lanes are NOT
         auto-reset on done — callers decide (see ``collect_vec_rollout``)."""
         assert all(n is not None for n in self.nests), "call reset() first"
@@ -261,7 +273,13 @@ class VecLoopTuneEnv:
         rewards = np.zeros(n, dtype=np.float64)
         noisy = [False] * n
         measurements: List[Optional[Measurement]] = [None] * n
+        obs = None
         if changed:
+            # measure-ahead: put the changed lanes in flight, featurize all
+            # lanes while the farm works, then collect (observations depend
+            # only on the nests, never on their measured GFLOPS)
+            if self.submit_eval([self.nests[i] for i in changed]):
+                obs = self.observe()
             # gflops_batch applies the reward-quality guardrail (noisy
             # measurements re-measured once, batched)
             new_g = self.gflops_batch([self.nests[i] for i in changed])
@@ -284,7 +302,9 @@ class VecLoopTuneEnv:
             if measurements[i] is not None:
                 info["measurement"] = measurements[i].to_info()
             infos.append(info)
-        return self.observe(), rewards, dones, infos
+        if obs is None:
+            obs = self.observe()
+        return obs, rewards, dones, infos
 
     # -- snapshots (per-lane, mirroring LoopTuneEnv) ---------------------------
 

@@ -26,6 +26,7 @@ import argparse
 import json
 import os
 import sys
+import threading
 import time
 import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -34,6 +35,7 @@ from repro.configs import ShapeCell, get_config, input_specs
 from repro.core.backend import make_backend
 from repro.core.loop_ir import matmul_benchmark
 from repro.core.registry import ScheduleRegistry
+from repro.core.rl_common import epsilon_ladder
 from repro.core.tuner import LoopTuner
 
 
@@ -81,6 +83,8 @@ class TuneJournal:
         parent = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(parent, exist_ok=True)
         line = json.dumps({"key": key, "entry": entry}, default=str)
+        # one write() call per line on a fresh O_APPEND handle, so fleet
+        # clients appending concurrently never interleave mid-line
         with open(self.path, "a") as f:
             f.write(line + "\n")
             f.flush()
@@ -213,6 +217,130 @@ def tune_records(
     return [e for e in entries if e is not None], len(kept) - len(todo)
 
 
+def tune_records_fleet(
+    kept: Sequence[Dict[str, Any]],
+    *,
+    n_clients: int,
+    farm: str,
+    backend: str = "tpu",
+    policy: str = "search",
+    checkpoint: Optional[str] = None,
+    registry_path: Optional[str] = None,
+    budget_s: float = 4.0,
+    eval_budget: Optional[int] = None,
+    journal: Optional[TuneJournal] = None,
+    resume: bool = False,
+    kernel_cache: Optional[str] = None,
+) -> Tuple[List[Dict[str, Any]], int, List[Dict[str, Any]]]:
+    """``--fleet N``: N concurrent tuner clients against one farm.
+
+    The Ape-X scale-out shape applied to tuning: just as Ape-X runs an
+    ε-ladder of actors against one learner, the fleet runs N tuner clients
+    (each its own :class:`LoopTuner` + pipelined farm connection, ranked on
+    the same ladder for identity/telemetry) against one measurement farm.
+    Contractions shard round-robin across clients, so every client keeps
+    its own pipeline full — frontier generation and surrogate ranking on
+    the client overlapping ticketed measurement on the farm — and the
+    farm's fair queue interleaves their batches.
+
+    Crash safety is the single-client story shared: all clients append to
+    one :class:`TuneJournal` (line-atomic, lock-serialized) and flush
+    per-client :class:`ScheduleRegistry` instances to the same path
+    (flock-merged), so a kill loses at most one contraction per client.
+    Budget semantics are unchanged — ``budget_s`` is the same *total* a
+    single client would spend, so the fleet finishes ~N× sooner rather
+    than spending N× more.
+
+    Returns ``(entries aligned with kept, n_skipped, per-client reports)``.
+    """
+    kept = list(kept)
+    keys = [TuneJournal.key_of(r["m"], r["k"], r["n"], r["dtype"])
+            for r in kept]
+    done: Dict[str, Dict[str, Any]] = {}
+    if journal is not None:
+        if resume:
+            done = journal.load()
+        else:
+            journal.reset()
+    todo = [i for i, k in enumerate(keys) if k not in done]
+    entries: List[Optional[Dict[str, Any]]] = [
+        None if k not in done else dict(done[k], resumed=True)
+        for k in keys]
+    if not todo:
+        return [e for e in entries if e is not None], len(kept), []
+
+    total_share = sum(r["flop_share"] for r in kept) or 1.0
+    shards = [todo[c::n_clients] for c in range(n_clients)]
+    shards = [s for s in shards if s]
+    eps = epsilon_ladder(max(len(shards), 1))
+    lock = threading.Lock()
+    client_reports: List[Optional[Dict[str, Any]]] = [None] * len(shards)
+    errors: List[BaseException] = []
+
+    def run_client(c: int, shard: List[int]) -> None:
+        t0 = time.perf_counter()
+        # per-client farm connection: its own fair-queue identity, its own
+        # pipelined submit/collect window, its own degradation state
+        be = make_backend("remote", addr=farm, fallback=backend,
+                          client_id=f"tune-{c}")
+        registry = ScheduleRegistry(registry_path)
+        if checkpoint is not None:
+            tuner = LoopTuner.from_checkpoint(checkpoint, backend=be,
+                                              registry=registry,
+                                              cache_dir=kernel_cache)
+        else:
+            tuner = LoopTuner(policy=policy, backend=be, registry=registry,
+                              cache_dir=kernel_cache)
+        shard_share = sum(kept[i]["flop_share"] for i in shard) or 1.0
+
+        def on_entry(j: int, entry: Dict[str, Any]) -> None:
+            i = shard[j]
+            with lock:
+                entries[i] = entry
+                if journal is not None:
+                    journal.append(keys[i], entry)
+            if registry_path:
+                registry.flush(registry_path)
+
+        try:
+            tuner.tune_many(
+                [matmul_benchmark(kept[i]["m"], kept[i]["k"], kept[i]["n"])
+                 for i in shard],
+                kernel="mm",
+                weights=[kept[i]["flop_share"] / shard_share for i in shard],
+                dtypes=[kept[i]["dtype"] for i in shard],
+                budget_s=budget_s * (shard_share / total_share),
+                eval_budget=(max(len(shard),
+                                 int(round(eval_budget * shard_share
+                                           / total_share)))
+                             if eval_budget is not None else None),
+                on_entry=on_entry)
+            client_reports[c] = {
+                "client": be.client_id,
+                "eps": round(float(eps[c]), 4),
+                "n_tuned": len(shard),
+                "wall_s": round(time.perf_counter() - t0, 3),
+                "farm": be.farm_stats(),
+            }
+        except BaseException as e:  # surfaced to the caller, not swallowed
+            with lock:
+                errors.append(e)
+        finally:
+            be.close()
+
+    threads = [threading.Thread(target=run_client, args=(c, shard),
+                                name=f"tune-fleet-{c}", daemon=True)
+               for c, shard in enumerate(shards)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+    return ([e for e in entries if e is not None], len(kept) - len(todo),
+            [r for r in client_reports if r is not None])
+
+
 def tune_model(
     cfg_or_arch,
     *,
@@ -232,6 +360,7 @@ def tune_model(
     kinds: Sequence[str] = ("decode", "prefill"),
     kernel_cache: Optional[str] = None,
     farm: Optional[str] = None,
+    fleet: int = 1,
     journal_path: Optional[str] = None,
     resume: bool = False,
 ) -> Dict[str, Any]:
@@ -249,9 +378,13 @@ def tune_model(
     cfg = get_config(cfg_or_arch) if isinstance(cfg_or_arch, str) else cfg_or_arch
     if smoke and not cfg.name.endswith("-smoke"):
         cfg = cfg.smoke()
+    if fleet > 1 and (farm is None or tuner is not None):
+        raise ValueError("--fleet N needs --farm (N clients share one "
+                         "measurement farm) and builds its own per-client "
+                         "tuners")
     if registry is None:
         registry = ScheduleRegistry(registry_path)
-    if tuner is None:
+    if tuner is None and fleet <= 1:
         # --farm: timings come from a remote measurement farm; ``backend``
         # becomes the local fallback the client degrades to if the farm is
         # unreachable (a tune is never failed by the farm)
@@ -271,16 +404,41 @@ def tune_model(
     share_kept = sum(r["flop_share"] for r in kept)
 
     journal = TuneJournal(journal_path) if journal_path else None
-    entries, n_skipped = tune_records(
-        kept, tuner=tuner, registry=registry, registry_path=registry_path,
-        budget_s=budget_s, eval_budget=eval_budget,
-        journal=journal, resume=resume)
+    fleet_report: Optional[Dict[str, Any]] = None
+    if fleet > 1:
+        entries, n_skipped, clients = tune_records_fleet(
+            kept, n_clients=fleet, farm=farm, backend=backend,
+            policy=policy, checkpoint=checkpoint,
+            registry_path=registry_path, budget_s=budget_s,
+            eval_budget=eval_budget, journal=journal, resume=resume,
+            kernel_cache=kernel_cache)
+        # fleet-mode flushes land per client; re-read so report counts and
+        # a final save reflect the merged table
+        if registry_path and os.path.exists(registry_path):
+            registry = ScheduleRegistry(registry_path)
+        fleet_report = {
+            "n_clients": fleet,
+            "clients": clients,
+            # farm totals across the fleet: the aggregate pipelining view
+            "tickets_submitted": sum(
+                c["farm"].get("tickets_submitted", 0) for c in clients),
+            "tickets_collected": sum(
+                c["farm"].get("tickets_collected", 0) for c in clients),
+            "tickets_resubmitted": sum(
+                c["farm"].get("tickets_resubmitted", 0) for c in clients),
+        }
+    else:
+        entries, n_skipped = tune_records(
+            kept, tuner=tuner, registry=registry, registry_path=registry_path,
+            budget_s=budget_s, eval_budget=eval_budget,
+            journal=journal, resume=resume)
 
     path = registry_path or registry.path
     if path:
         registry.flush(path)
-    compile_stats = getattr(tuner.backend, "compile_stats", None)
-    farm_stats = getattr(tuner.backend, "farm_stats", None)
+    tb = tuner.backend if tuner is not None else None
+    compile_stats = getattr(tb, "compile_stats", None)
+    farm_stats = getattr(tb, "farm_stats", None)
     return {
         "arch": cfg.name,
         "kinds": list(kinds),
@@ -297,6 +455,7 @@ def tune_model(
         "kernel_cache": kernel_cache,
         "compile": compile_stats() if compile_stats is not None else None,
         "farm": farm_stats() if farm_stats is not None else None,
+        "fleet": fleet_report,
         "tune_time_s": round(time.perf_counter() - t0, 2),
         "contractions": [
             {"m": r["m"], "k": r["k"], "n": r["n"], "dtype": r["dtype"],
@@ -332,6 +491,11 @@ def main(argv=None) -> int:
                     help="measure on a remote farm (repro.launch."
                          "measure_farm); --backend becomes the local "
                          "fallback if the farm is unreachable")
+    ap.add_argument("--fleet", type=int, default=1, metavar="N",
+                    help="run N concurrent tuner clients against the one "
+                         "--farm (contractions shard round-robin; each "
+                         "client pipelines ticketed measurements on its "
+                         "own connection; requires --farm)")
     ap.add_argument("--journal", default=None,
                     help="per-contraction JSONL progress ledger (default: "
                          "<registry>.journal.jsonl; 'off' disables)")
@@ -366,7 +530,7 @@ def main(argv=None) -> int:
         eval_budget=args.eval_budget, max_contractions=args.max_contractions,
         smoke=not args.full, batch=args.batch, prompt_len=args.prompt_len,
         max_len=args.max_len, kernel_cache=kernel_cache, farm=args.farm,
-        journal_path=journal_path, resume=args.resume)
+        fleet=args.fleet, journal_path=journal_path, resume=args.resume)
     print("[tune]", json.dumps(report, indent=1), flush=True)
     return 0
 

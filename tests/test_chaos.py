@@ -642,3 +642,123 @@ def test_farm_sigkill_then_restart_repromotes_client():
                 if p.poll() is None:
                     p.kill()
                 p.wait(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# Pipelined tickets under chaos
+# ---------------------------------------------------------------------------
+
+
+class _CountingBackend(TPUAnalyticalBackend):
+    """Analytical backend that records every evaluate call, so a test can
+    prove a nest was measured exactly once."""
+
+    def __init__(self):
+        super().__init__()
+        self.calls: list = []
+
+    def evaluate(self, nest):
+        self.calls.append(nest.structure_key())
+        return super().evaluate(nest)
+
+
+def _hello_frame_size(addr: str, client: str) -> int:
+    """Byte size of the farm's handshake reply, measured with a raw probe.
+    The mid-flight fault plan needs to cut the connection *after* the
+    hello frame, so the handshake succeeds and the submit ack is what
+    dies on the wire."""
+    host, port = addr.rsplit(":", 1)
+    with socket.create_connection((host, int(port)), timeout=5.0) as sock:
+        send_frame(sock, {"op": "ping", "client": client})
+        hdr = b""
+        while len(hdr) < 4:
+            chunk = sock.recv(4 - len(hdr))
+            assert chunk, "farm closed during probe handshake"
+            hdr += chunk
+        return 4 + int.from_bytes(hdr, "big")
+
+
+def test_midflight_kill_resubmits_ticket_exactly_once():
+    """Connection killed between submit and its ack: the client cannot
+    know whether the farm took the ticket, so it resubmits the same id on
+    reconnect; the farm dedups, and each nest is measured exactly once —
+    no double spend of farm compute, no torn records."""
+    nests = _schedules(3, seed=7)
+    local = make_backend("tpu")
+    cb = _CountingBackend()
+    with MeasureServer(backend=cb).start() as srv:
+        h = _hello_frame_size(srv.addr, "probe")
+        with FaultProxy(srv.addr,
+                        plan=[{"kind": "drop", "after_bytes": h + 1,
+                               "dir": "u2c"}]) as proxy:
+            rb = make_backend("remote", addr=proxy.addr, fallback="tpu",
+                              max_retries=3, backoff_base_s=0.01)
+            # conn 1: hello passes, the submit ack dies one byte in
+            handle = rb.submit_batch(nests)
+            ms = rb.wait(handle)
+            assert [m.gflops for m in ms] == [local.evaluate(n)
+                                              for n in nests]
+            stats = rb.farm_stats()
+            assert stats["tickets_resubmitted"] == 1
+            assert stats["reconnects"] >= 1
+            assert not rb.degraded
+            sstats = srv.stats()
+            assert sstats["tickets_deduped"] == 1
+            assert sstats["tickets_submitted"] == 1
+            # the hard guarantee: despite the submit retry, every nest hit
+            # the measurement backend exactly once
+            assert sorted(cb.calls) == sorted(n.structure_key()
+                                              for n in nests)
+            for n in nests:
+                assert rb.measurement_for(n).gflops == local.evaluate(n)
+            assert proxy.n_faults == 1
+            rb.close()
+
+
+def test_drain_with_outstanding_tickets_completes_them():
+    """SIGTERM semantics in-process: drain() with tickets in flight must
+    finish the work, park the results, linger until the client collects
+    and acks them, and only then report drained."""
+    nests = _schedules(3, seed=9)
+    local = make_backend("tpu")
+    srv = MeasureServer(backend=_PacedBackend(0.1)).start()
+    rb = make_backend("remote", addr=srv.addr, fallback="tpu")
+    try:
+        handle = rb.submit_batch(nests)
+        srv.drain()
+        # results are parked but unacked — the drain linger must hold
+        assert not srv.drain(wait=True, timeout=0.05)
+        ms = rb.wait(handle)
+        assert [m.gflops for m in ms] == [local.evaluate(n) for n in nests]
+        rb.flush_acks()  # releases the parked results
+        assert srv.drain(wait=True, timeout=10.0)
+    finally:
+        rb.close()
+        srv.close()
+
+
+@pytest.mark.slow
+def test_farm_sigterm_with_tickets_outstanding_drains_clean():
+    """SIGTERM lands while tickets are in flight: the farm finishes them,
+    the client collects every result with parity, and the process exits 0
+    once the acks release the drain linger."""
+    nests = _schedules(3, seed=11)
+    local = make_backend("tpu")
+    proc, addr = _spawn_farm()
+    rb = make_backend("remote", addr=addr, fallback="tpu")
+    try:
+        handle = rb.submit_batch(nests)
+        proc.send_signal(signal.SIGTERM)
+        ms = rb.wait(handle)
+        assert [m.gflops for m in ms] == [local.evaluate(n) for n in nests]
+        assert not rb.degraded
+        rb.close()  # flush_acks releases the drain linger
+        assert proc.wait(timeout=30) == 0
+        out = proc.stdout.read()
+        assert "SIGTERM: draining" in out
+        assert "[farm] stopped" in out
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        proc.wait(timeout=10)
+        rb.close()

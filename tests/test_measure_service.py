@@ -448,3 +448,353 @@ def test_farm_max_requests_exits_clean():
     assert proc.wait(timeout=15) == 0
     rest = proc.stdout.read()
     assert "[farm] stopped" in rest
+
+
+# ---------------------------------------------------------------------------
+# Pipelined (ticketed) measurement: submit/collect
+# ---------------------------------------------------------------------------
+
+
+def test_submit_wait_matches_blocking_measure_exactly():
+    nests = _schedules(6)
+    local = make_backend("tpu")
+    with MeasureServer(backend="tpu").start() as srv:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu",
+                          max_nests_per_request=2, inflight_window=4)
+        handle = rb.submit_batch(nests)
+        assert len(handle) == 6 and len(handle.tickets) == 3
+        gs = rb.collect_batch(handle)
+        assert np.array_equal(gs, local.evaluate_batch(nests))
+        stats = rb.farm_stats()
+        assert stats["tickets_submitted"] == 3
+        assert stats["tickets_collected"] == 3
+        assert stats["tickets_resubmitted"] == 0
+        assert stats["inflight_tickets"] == 0
+        assert stats["inflight_tickets_peak"] == 3
+        # measurements were recorded exactly as the blocking path records
+        for n in nests:
+            m = rb.measurement_for(n)
+            assert m is not None and m.gflops == local.evaluate(n)
+        rb.close()
+    st = srv.stats()
+    assert st["tickets_submitted"] == 3 and st["tickets_collected"] == 3
+
+
+def test_oversize_batch_pipelines_through_tickets():
+    """measure_batch larger than one request chunks through submit/collect
+    (all chunks in flight at once) with values identical to blocking."""
+    nests = _schedules(8)
+    local = make_backend("tpu")
+    with MeasureServer(backend="tpu").start() as srv:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu",
+                          max_nests_per_request=3, inflight_window=4)
+        assert np.array_equal(rb.evaluate_batch(nests),
+                              local.evaluate_batch(nests))
+        stats = rb.farm_stats()
+        assert stats["tickets_submitted"] == 3  # ceil(8/3)
+        assert stats["tickets_collected"] == 3
+        assert stats["overlap_ratio"] is not None
+        rb.close()
+
+
+def test_inflight_window_bounds_outstanding_tickets():
+    nests = _schedules(8)
+    with MeasureServer(backend=_SleepyBackend(0.02)).start() as srv:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu",
+                          max_nests_per_request=1, inflight_window=2,
+                          deadline_s=30.0)
+        handle = rb.submit_batch(nests)
+        # the window forced collects during submit: never more than 2 out
+        assert rb.farm_stats()["inflight_tickets_peak"] <= 2
+        rb.wait(handle)
+        assert rb.farm_stats()["inflight_tickets"] == 0
+        rb.close()
+
+
+def test_server_dedups_resubmitted_ticket():
+    """The same (client, ticket) submitted twice measures once: the second
+    submit is acked as a duplicate, not re-enqueued."""
+    nests = _schedules(2)
+    with MeasureServer(backend="tpu").start() as srv:
+        sock = socket.create_connection((srv.host, srv.port), timeout=5)
+        wire = [nest_to_wire(n) for n in nests]
+        send_frame(sock, {"op": "submit", "id": 1, "client": "dup-c",
+                          "ticket": "dup-c.1", "nests": wire})
+        r1 = recv_frame(sock)
+        assert r1["ok"] and r1["accepted"] and not r1.get("duplicate")
+        send_frame(sock, {"op": "submit", "id": 2, "client": "dup-c",
+                          "ticket": "dup-c.1", "nests": wire})
+        r2 = recv_frame(sock)
+        assert r2["ok"] and r2.get("duplicate")
+        send_frame(sock, {"op": "collect", "id": 3, "client": "dup-c",
+                          "tickets": ["dup-c.1"], "timeout_s": 10.0})
+        r3 = recv_frame(sock)
+        assert set(r3["done"]) == {"dup-c.1"}
+        assert len(r3["done"]["dup-c.1"]["measurements"]) == 2
+        st = srv.stats()
+        assert st["tickets_submitted"] == 1  # admitted once
+        assert st["tickets_deduped"] == 1
+        # un-acked results stay parked for a reconnecting client
+        assert st["tickets_parked"] == 1
+        # the ack releases them
+        send_frame(sock, {"op": "collect", "id": 4, "client": "dup-c",
+                          "tickets": [], "timeout_s": 0.0,
+                          "ack": ["dup-c.1"]})
+        assert recv_frame(sock)["ok"]
+        assert srv.stats()["tickets_parked"] == 0
+        sock.close()
+
+
+def test_parked_results_survive_reconnect():
+    """Results are keyed by client id, not connection: a client that
+    reconnects after submitting still collects its tickets."""
+    nests = _schedules(3)
+    local = make_backend("tpu")
+    with MeasureServer(backend="tpu").start() as srv:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu")
+        handle = rb.submit_batch(nests)
+        rb._drop_conn()  # the transport dies; the tickets do not
+        gs = rb.collect_batch(handle)
+        assert np.array_equal(gs, local.evaluate_batch(nests))
+        assert rb.farm_stats()["reconnects"] == 1
+        assert not rb.degraded
+        rb.close()
+
+
+def test_collect_unknown_ticket_resubmits_bounded():
+    """A farm that lost a ticket (restart) reports it unknown; the client
+    resubmits the same id.  A farm that keeps losing it is a fault."""
+    nests = _schedules(1)
+    with MeasureServer(backend="tpu").start() as srv:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu")
+        handle = rb.submit_batch(nests)
+        # simulate a farm restart that forgot the ticket mid-flight: wait
+        # until the result is actually parked (popping while the batch is
+        # still queued would race the dispatcher, which re-creates the
+        # ticket entry when it picks the batch up) before erasing it
+        tid = handle.tickets[0][0]
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            with srv._cond:
+                if (rb.client_id, tid) in srv._ticket_results:
+                    srv._tickets.pop((rb.client_id, tid), None)
+                    srv._ticket_results.pop((rb.client_id, tid), None)
+                    break
+            time.sleep(0.01)
+        else:
+            pytest.fail("ticket result never parked")
+        ms = rb.wait(handle)
+        assert ms[0].gflops == make_backend("tpu").evaluate(nests[0])
+        assert rb.farm_stats()["tickets_resubmitted"] == 1
+        assert not rb.degraded
+        rb.close()
+
+
+def test_degraded_mid_flight_resolves_locally_without_duplicates():
+    """Farm dies with tickets outstanding: wait() serves them from the
+    fallback, and nothing is recorded twice."""
+    nests = _schedules(3)
+    local = make_backend("tpu")
+    srv = MeasureServer(backend=_SleepyBackend(0.2)).start()
+    rb = make_backend("remote", addr=srv.addr, fallback="tpu",
+                      max_retries=0, connect_timeout_s=0.3,
+                      backoff_base_s=0.01, collect_poll_s=0.2)
+    handle = rb.submit_batch(nests)
+    srv.close()
+    with pytest.warns(UserWarning, match="falling back"):
+        ms = rb.wait(handle)
+    assert [m.gflops for m in ms] == [local.evaluate(n) for n in nests]
+    assert rb.degraded
+    # exactly one record per nest, from the fallback measurement
+    for n in nests:
+        assert rb.measurement_for(n).gflops == local.evaluate(n)
+    rb.close()
+
+
+def test_submit_while_degraded_resolves_on_fallback():
+    nests = _schedules(2)
+    local = make_backend("tpu")
+    rb = make_backend("remote", addr=f"127.0.0.1:{_free_port()}",
+                      fallback="tpu", max_retries=0, connect_timeout_s=0.2,
+                      backoff_base_s=0.01)
+    with pytest.warns(UserWarning, match="falling back"):
+        handle = rb.submit_batch(nests)
+    assert rb.async_capacity() == 0  # degraded clients advertise no room
+    gs = rb.collect_batch(handle)
+    assert np.array_equal(gs, local.evaluate_batch(nests))
+    rb.close()
+
+
+def test_backend_default_async_shape_is_synchronous_equivalent():
+    be = make_backend("tpu")
+    assert be.can_measure_async is False
+    nests = _schedules(3)
+    handle = be.submit_batch(nests)
+    assert np.array_equal(be.collect_batch(handle), be.evaluate_batch(nests))
+
+
+def test_remote_spec_sugar_builds_farm_client():
+    be = make_backend("remote:farm.example:7461", fallback="tpu")
+    assert isinstance(be, RemoteMeasuredBackend)
+    assert (be.host, be.port) == ("farm.example", 7461)
+    assert be.can_measure_async
+    be.close()
+
+
+def test_schedule_cache_measure_ahead_never_measures_twice():
+    from repro.core.schedule_cache import ScheduleCache
+
+    class _CountingBackend(TPUAnalyticalBackend):
+        can_measure_async = True
+        max_nests_per_request = 64
+
+        def __init__(self):
+            super().__init__()
+            self.evals = 0
+
+        def async_capacity(self):
+            return 4
+
+        def evaluate(self, nest):
+            self.evals += 1
+            return super().evaluate(nest)
+
+    nests = _schedules(5)
+    be = _CountingBackend()
+    cache = ScheduleCache()
+    assert cache.submit_eval(be, nests) == 5
+    assert cache.submit_eval(be, nests) == 0  # already in flight
+    assert cache.inflight_size() == 5
+    # a blocking evaluation of an in-flight key collects, never re-measures
+    gs = cache.evaluate_batch(be, nests)
+    assert np.array_equal(gs, make_backend("tpu").evaluate_batch(nests))
+    assert be.evals == 5  # exactly once per unique structure
+    assert cache.inflight_size() == 0
+    assert cache.stats()["submitted_ahead"] == 5
+    assert cache.stats()["collected_ahead"] == 5
+    # measure-ahead keys are charged as misses (budget honesty)
+    assert cache.stats()["misses"] == 5
+
+
+def test_schedule_cache_invalidate_drops_inflight_entry():
+    from repro.core.schedule_cache import ScheduleCache
+
+    class _AsyncTPU(TPUAnalyticalBackend):
+        can_measure_async = True
+
+    nests = _schedules(2)
+    be = _AsyncTPU()
+    cache = ScheduleCache()
+    cache.submit_eval(be, nests)
+    key = nests[0].structure_key()
+    cache.invalidate(key)
+    assert cache.inflight_size() == 1
+    # the invalidated key re-measures; the stale in-flight value must not
+    # resurrect into the cache
+    g = cache.evaluate(be, nests[0])
+    assert g == make_backend("tpu").evaluate(nests[0])
+    cache.drain_ahead()
+    assert cache.peek(key) == g
+
+
+def test_search_measure_ahead_parity_on_farm():
+    """The searches' measure-ahead path (submit_eval during frontier
+    scoring) produces bit-identical tuned gflops to the blocking path."""
+    from repro.core.env import LoopTuneEnv
+    from repro.core.search import beam_search
+
+    bench = matmul_benchmark(96, 96, 96)
+    res_local = beam_search(LoopTuneEnv([bench], "tpu"), 0, width=4,
+                            order="dfs", budget_s=60.0, max_evals=40)
+    with MeasureServer(backend="tpu").start() as srv:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu")
+        env = LoopTuneEnv([bench], rb)
+        res_farm = beam_search(env, 0, width=4, order="dfs",
+                               budget_s=60.0, max_evals=40)
+        assert res_farm.best_gflops == res_local.best_gflops
+        assert res_farm.actions == res_local.actions
+        rb.close()
+
+
+def test_coalesce_window_folds_concurrent_submits_into_one_batch():
+    """The batch-forming linger: near-simultaneous submits from two
+    clients fold into one backend batch instead of dispatching one by
+    one — the farm-side half of fleet pipelining."""
+    nests = _schedules(2)
+    local = make_backend("tpu")
+    with MeasureServer(backend="tpu", coalesce_requests=2,
+                       coalesce_window_s=2.0).start() as srv:
+        clients = [make_backend("remote", addr=srv.addr, fallback="tpu",
+                                client_id=f"cw-{i}") for i in range(2)]
+        out: dict = {}
+
+        def go(i: int) -> None:
+            out[i] = clients[i].wait(clients[i].submit_batch(nests))
+
+        threads = [threading.Thread(target=go, args=(i,)) for i in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for i in range(2):
+            assert [m.gflops for m in out[i]] == [local.evaluate(n)
+                                                  for n in nests]
+        # one pool batch served both clients: the linger held the batch
+        # open until the second submit arrived
+        assert srv.pool_batches == 1
+        assert srv.coalesced_batches == 1
+        for c in clients:
+            c.close()
+
+
+def test_coalesce_window_lone_request_still_dispatches():
+    """A lone request pays at most the window, never wedges: the linger
+    deadline expires and the batch dispatches solo."""
+    nests = _schedules(1)
+    local = make_backend("tpu")
+    with MeasureServer(backend="tpu", coalesce_requests=4,
+                       coalesce_window_s=0.05).start() as srv:
+        rb = make_backend("remote", addr=srv.addr, fallback="tpu")
+        t0 = time.monotonic()
+        ms = rb.measure_batch(nests)
+        assert time.monotonic() - t0 < 5.0
+        assert ms[0].gflops == local.evaluate(nests[0])
+        assert srv.pool_batches == 1
+        rb.close()
+
+
+@pytest.mark.slow
+def test_subprocess_farm_two_pipelined_clients_parity():
+    """A real farm process serving 2 clients over the ticketed path: both
+    pipelines run concurrently, both land at exact parity with the local
+    backend, every ticket is collected."""
+    nests = _schedules(4)
+    local = make_backend("tpu")
+    want = [local.evaluate(n) for n in nests]
+    proc, addr = _spawn_farm("--coalesce-window-s", "0.01")
+    try:
+        results: dict = {}
+        stats: dict = {}
+
+        def client(i: int) -> None:
+            rb = make_backend("remote", addr=addr, fallback="tpu",
+                              client_id=f"pipe-{i}")
+            handles = [rb.submit_batch(nests) for _ in range(2)]
+            results[i] = [[m.gflops for m in rb.wait(h)] for h in handles]
+            stats[i] = rb.farm_stats()
+            rb.close()
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for i in range(2):
+            assert results[i] == [want, want]
+            assert stats[i]["tickets_submitted"] == 2
+            assert stats[i]["tickets_collected"] == 2
+            assert stats[i]["degraded"] == 0
+    finally:
+        proc.kill()
+        proc.wait(timeout=10)
